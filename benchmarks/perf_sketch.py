@@ -1,0 +1,59 @@
+"""Throughput benchmarks for the sketching hot paths (host + device/interp).
+
+Production framing: dataset-search ingests a lake by sketching every column
+(sketch/s matters) and serves queries by estimating against the whole corpus
+(pair/s matters).  Device-path numbers on this CPU container exercise the
+Pallas interpreter and the jit pipeline, not TPU silicon -- they validate
+scaling shape, not absolute speed (the roofline analysis covers TPU).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make, stack_wmh
+from repro.data.synthetic import sparse_pair
+from repro.kernels import ops
+from repro.kernels.icws_sketch import icws_sketch_pallas
+
+from .common import emit, timed
+
+
+def run(fast: bool = False):
+    rng = np.random.default_rng(23)
+    pairs = [sparse_pair(rng, overlap=0.1) for _ in range(2 if fast else 4)]
+    vecs = [v for p in pairs for v in p]
+
+    # host sketch throughput per method
+    for method in ("wmh", "mh", "kmv", "jl", "cs", "icws"):
+        sk = make(method, 400, seed=0)
+        _, us = timed(lambda: [sk.sketch(v) for v in vecs])
+        emit(f"perf/sketch/{method}", us / len(vecs),
+             f"nnz={vecs[0].nnz} storage=400")
+
+    # batched estimation throughput (the corpus-query hot loop)
+    sk = make("wmh", 400, seed=0)
+    sketches = [sk.sketch(v) for v in vecs]
+    A = stack_wmh(sketches * 50)
+    B = stack_wmh(sketches[::-1] * 50)
+    _, us = timed(sk.estimate_batch, A, B, repeat=3)
+    emit("perf/estimate_batch/wmh", us / A.norm.shape[0], f"pairs={A.norm.shape[0]}")
+
+    # device (Pallas interpret) sketch + fused estimate
+    B_, N, m = 4, 512, 256
+    w = jnp.asarray(rng.random((B_, N)), jnp.float32)
+    w = w / w.sum(axis=1, keepdims=True)
+    keys = jnp.asarray(rng.integers(0, 2**31 - 1, (B_, N)), jnp.int32)
+    vals = jnp.sqrt(w)
+    out = icws_sketch_pallas(w, keys, vals, m=m, seed=0, interpret=True)
+    _, us = timed(lambda: icws_sketch_pallas(w, keys, vals, m=m, seed=0,
+                                             interpret=True)[0].block_until_ready())
+    emit("perf/kernel/icws_sketch", us / B_, f"B={B_} N={N} m={m} interpret=True")
+
+    fp, val, _ = out
+    na = jnp.ones((B_,), jnp.float32)
+    _, us = timed(lambda: ops.icws_estimate(fp, val, na, fp, val, na)
+                  .block_until_ready())
+    emit("perf/kernel/estimate", us / B_, f"pairs={B_} m={m} interpret=True")

@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure + theory + perf.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
+``--fast`` shrinks trial counts for CI; the default sizes reproduce the
+paper's qualitative results.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig4,fig5,fig6,table7,theory,perf")
+    args = ap.parse_args()
+
+    from . import (fig4_synthetic, fig5_worldbank, fig6_newsgroups,
+                   perf_sketch, table7_overlap, theory_check)
+    suites = {
+        "fig4": fig4_synthetic.run,
+        "fig5": fig5_worldbank.run,
+        "fig6": fig6_newsgroups.run,
+        "table7": table7_overlap.run,
+        "theory": theory_check.run,
+        "perf": perf_sketch.run,
+    }
+    only = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in only:
+        t = time.time()
+        suites[name](fast=args.fast)
+        print(f"# {name} done in {time.time()-t:.1f}s", flush=True)
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

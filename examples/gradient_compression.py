@@ -1,0 +1,107 @@
+"""Sketch-compressed data-parallel training (the paper's linear sketches as a
+distributed-optimization feature) + WMH gradient telemetry.
+
+Four simulated DP replicas train an embedding-style model (each batch touches
+a few rows of a big table => sparse, low-overlap gradients -- the paper's
+favorable regime, and what vocab/expert-row gradients look like).  The
+gradient exchange runs in CountSketch space (tables + identified heavy-
+hitter values on the wire) with error feedback.  The claim demonstrated is
+the EF guarantee: **compressed training tracks uncompressed training**, at a
+fraction of the exchanged bytes.
+
+The same shard_map also computes the WMH-sketch pairwise gradient-agreement
+matrix -- the divergence detector that repro.ft consumes.
+
+Run:  PYTHONPATH=src python examples/gradient_compression.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.compression import (CompressionConfig, compressed_update,
+                                     compression_ratio)
+from repro.train.telemetry import TelemetryConfig, gradient_agreement
+
+
+def main():
+    n, replicas, steps, lr = 2048, 4, 200, 8.0
+    ccfg = CompressionConfig(width=256, reps=5, seed=11)
+    tcfg = TelemetryConfig(m=256, seed=3)
+    mesh = jax.make_mesh((replicas,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=n).astype(np.float32)
+    rows = rng.integers(0, n, size=(replicas, 128, 8))         # batch lookups
+    X = np.zeros((replicas, 128, n), np.float32)
+    for r in range(replicas):
+        for b in range(128):
+            X[r, b, rows[r, b]] = rng.normal(size=8)
+    y = np.einsum("rbn,n->rb", X, w_true).astype(np.float32)
+    covered = np.zeros(n, bool)
+    covered[rows.reshape(-1)] = True                           # learnable rows
+
+    def local_grad(w, Xr, yr):
+        return Xr.T @ (Xr @ w - yr) / Xr.shape[0]
+
+    def worker(w, r, Xr, yr):
+        g = local_grad(w[0], Xr[0], yr[0])
+        delta, new_r = compressed_update(g, r[0], "data", ccfg, lr=lr)
+        return (w[0] - delta)[None], new_r[None]
+
+    step = jax.jit(jax.shard_map(
+        worker, mesh=mesh,
+        in_specs=(P("data", None), P("data", None), P("data", None, None),
+                  P("data", None)),
+        out_specs=(P("data", None), P("data", None)), check_vma=False))
+
+    def err_of(w):
+        w = np.asarray(w)
+        return float(np.linalg.norm(w[covered] - w_true[covered])
+                     / np.linalg.norm(w_true[covered]))
+
+    # uncompressed DP baseline (full gradients on the wire)
+    Xa, ya = X.reshape(-1, n), y.reshape(-1)
+    w_base = np.zeros(n, np.float32)
+    base_curve = []
+    for i in range(steps):
+        g = Xa.T @ (Xa @ w_base - ya) / X.shape[1] / replicas
+        w_base -= lr * g
+        base_curve.append(err_of(w_base))
+
+    # compressed DP
+    w = jnp.zeros((replicas, n), jnp.float32)
+    res = jnp.zeros((replicas, n), jnp.float32)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    print(f"{'step':>5} {'uncompressed':>14} {'compressed':>12}")
+    for i in range(steps):
+        w, res = step(w, res, Xj, yj)
+        if i % 40 == 0 or i == steps - 1:
+            print(f"{i:>5} {base_curve[i]:>14.4f} {err_of(w[0]):>12.4f}")
+
+    wire = ccfg.width * ccfg.reps
+    print(f"\ncompressed tracks uncompressed with ~{compression_ratio(n, ccfg):.1f}x "
+          f"fewer bytes on the wire\n({wire} sketch floats + heavy-hitter values "
+          f"vs {n} gradient floats per replica per step)")
+
+    # telemetry at step 0 (informative gradients): estimated pairwise cosines
+    def telem(Xr, yr):
+        g = local_grad(jnp.zeros(n), Xr[0], yr[0])
+        return gradient_agreement(g, "data", tcfg)[None]
+
+    sim = jax.shard_map(telem, mesh=mesh,
+                        in_specs=(P("data", None, None), P("data", None)),
+                        out_specs=P("data", None, None),
+                        check_vma=False)(Xj, yj)
+    print("\nsketch-estimated gradient agreement at step 0 (m=256 floats per "
+          "replica on the wire,\n instead of full gradients; diagonal = self = 1):")
+    print(np.array_str(np.asarray(sim)[0], precision=2, suppress_small=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Atomic, async, mesh-elastic sharded checkpointing."""
+from .store import (AsyncCheckpointer, all_steps, latest_step, restore, save)
+
+__all__ = ["AsyncCheckpointer", "all_steps", "latest_step", "restore", "save"]

@@ -1,0 +1,31 @@
+"""Core inner-product sketching library (the paper's contribution).
+
+Paper-faithful path: :class:`WeightedMinHash` (Algorithms 3-5) with exact
+extended-domain semantics via progression minima.  Baselines: :class:`MinHash`
+(Algorithms 1-2), :class:`KMV`, :class:`JL`, :class:`CountSketch`.  TPU fast
+path: :class:`ICWS` (+ Pallas kernel in :mod:`repro.kernels`).
+"""
+from .types import (SparseVec, fact1_bound, inner, inner_fast,
+                    intersection_norms, theorem2_bound)
+from .hashing import MERSENNE_P, AffineHashFamily, PairHashFamily
+from .rounding import round_counts, round_unit, rounded_values
+from .progmin import progression_min, progression_min_bruteforce
+from .wmh import (DEFAULT_L, WeightedMinHash, WMHSketch, sketch_bruteforce,
+                  stack_wmh)
+from .minhash import MinHash, MHSketch, stack_mh
+from .kmv import KMV, KMVSketch
+from .linear import CountSketch, CSSketch, JL, JLSketch
+from .icws import ICWS, ICWSSketch, stack_icws
+from .registry import FACTORIES, PAPER_METHODS, make
+
+__all__ = [
+    "SparseVec", "inner", "inner_fast", "intersection_norms",
+    "theorem2_bound", "fact1_bound",
+    "MERSENNE_P", "AffineHashFamily", "PairHashFamily",
+    "round_counts", "round_unit", "rounded_values",
+    "progression_min", "progression_min_bruteforce",
+    "DEFAULT_L", "WeightedMinHash", "WMHSketch", "sketch_bruteforce",
+    "stack_wmh", "MinHash", "MHSketch", "stack_mh", "KMV", "KMVSketch",
+    "CountSketch", "CSSketch", "JL", "JLSketch", "ICWS", "ICWSSketch",
+    "stack_icws", "FACTORIES", "PAPER_METHODS", "make",
+]

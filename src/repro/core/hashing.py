@@ -1,0 +1,140 @@
+"""2-universal hash families over Z_p (p = 2^31 - 1), numpy host path.
+
+The paper (Section 5, "Choice of Hash Function") uses a standard 2-wise
+independent affine hash ``h(x) = (c1 x + c2) mod p`` for a 31-bit prime ``p``,
+storing ``h(x)/p in [0, 1)`` as the hash value in 32 bits.
+
+For the Weighted MinHash *extended domain* of conceptual size ``n * L`` (which
+can exceed ``p``), we hash the (block, slot) **pair** with the multilinear
+2-universal family ``h(i, j) = (c1 * i + c2 * j + c3) mod p``.  Within a block
+``i`` this is an arithmetic progression in ``j`` with step ``c2`` -- the
+structure exploited by :mod:`repro.core.progmin` to take block minima in
+O(log p) instead of O(L).  (Hashing the flat index ``i*L + j mod p`` would
+alias indices that differ by ``p``; the pair hash avoids that entirely.)
+
+All arithmetic is int64; products stay below 2^62 because operands are < p.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Mersenne prime 2^31 - 1: hash values fit in 32-bit ints as the paper stores them.
+MERSENNE_P = np.int64((1 << 31) - 1)
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([0x5EED, int(seed)]))
+
+
+def mix64(x: np.ndarray) -> np.ndarray:
+    """Splitmix64 finalizer: a fixed bijection of the key space.
+
+    Applied to *keys* before 2-universal hashing.  Relabeling the domain with
+    a bijection leaves every distributional guarantee intact, but destroys
+    adversarial key structure (e.g. consecutive integers, for which a bare
+    affine hash is min-wise-biased).  Standard strengthening practice.
+    """
+    z = np.asarray(x).astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    return z
+
+
+def _mix_to_zp(x: np.ndarray) -> np.ndarray:
+    """mix64 then reduce into [0, p) as int64."""
+    return (mix64(x) % np.uint64(MERSENNE_P)).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineHashFamily:
+    """m independent hashes h_t(x) = (c1[t]*x + c2[t]) mod p, x in [0, p)."""
+
+    c1: np.ndarray  # int64 [m], in [1, p)
+    c2: np.ndarray  # int64 [m], in [0, p)
+
+    @staticmethod
+    def create(m: int, seed: int) -> "AffineHashFamily":
+        g = _rng(seed)
+        c1 = g.integers(1, MERSENNE_P, size=m, dtype=np.int64)
+        c2 = g.integers(0, MERSENNE_P, size=m, dtype=np.int64)
+        return AffineHashFamily(c1=c1, c2=c2)
+
+    @property
+    def m(self) -> int:
+        return int(self.c1.shape[0])
+
+    def hash_ints(self, x: np.ndarray) -> np.ndarray:
+        """Hash int64 inputs x[...] -> int64 [m, ...] in [0, p)."""
+        x = _mix_to_zp(x)
+        shape = (self.m,) + (1,) * x.ndim
+        c1 = self.c1.reshape(shape)
+        c2 = self.c2.reshape(shape)
+        return (c1 * x + c2) % MERSENNE_P
+
+    def hash_unit(self, x: np.ndarray) -> np.ndarray:
+        """Hash to floats in [0, 1) as the paper's algorithms are written."""
+        return self.hash_ints(x).astype(np.float64) / float(MERSENNE_P)
+
+
+@dataclasses.dataclass(frozen=True)
+class PairHashFamily:
+    """m independent multilinear hashes h_t(i, j) = (a[t]*i + b[t]*j + c[t]) mod p.
+
+    2-universal over pairs (i, j) with 0 <= i, j < p.  For fixed i the map
+    j -> h(i, j) is the progression  start_t(i) + j * b[t]  (mod p).
+    """
+
+    a: np.ndarray  # int64 [m], in [1, p)
+    b: np.ndarray  # int64 [m], in [1, p)  (step must be non-zero for progmin)
+    c: np.ndarray  # int64 [m], in [0, p)
+
+    @staticmethod
+    def create(m: int, seed: int) -> "PairHashFamily":
+        g = _rng(seed ^ 0x9E3779B9)
+        a = g.integers(1, MERSENNE_P, size=m, dtype=np.int64)
+        b = g.integers(1, MERSENNE_P, size=m, dtype=np.int64)
+        c = g.integers(0, MERSENNE_P, size=m, dtype=np.int64)
+        return PairHashFamily(a=a, b=b, c=c)
+
+    @property
+    def m(self) -> int:
+        return int(self.a.shape[0])
+
+    def block_starts(self, blocks: np.ndarray) -> np.ndarray:
+        """h_t(i, 0) for each block i: int64 [m, nnz] in [0, p).
+
+        The block index is mix64-relabeled (bijection) before hashing; the
+        slot index j is NOT -- the progression structure in j is what
+        :mod:`repro.core.progmin` exploits.
+        """
+        blocks = _mix_to_zp(np.asarray(blocks, dtype=np.int64))
+        return (self.a[:, None] * blocks[None, :] + self.c[:, None]) % MERSENNE_P
+
+    def hash_pairs_bruteforce(self, i: int, js: np.ndarray) -> np.ndarray:
+        """Oracle: hash (i, j) for each j.  int64 [m, len(js)].  Test-only."""
+        js = np.asarray(js, dtype=np.int64) % MERSENNE_P
+        i = np.int64(_mix_to_zp(np.array([int(i)]))[0])
+        return (self.a[:, None] * i + self.b[:, None] * js[None, :]
+                + self.c[:, None]) % MERSENNE_P
+
+
+def uniforms_from_key(seed: int, stream: int, keys: np.ndarray, m: int) -> np.ndarray:
+    """Derive pseudo-uniform (0,1) floats keyed by (key, t) for t in [0, m).
+
+    Used by the ICWS host reference to generate the per-(index, sample) Gamma /
+    uniform variates.  Each ``stream`` gives an independent family.  Values are
+    strictly inside (0, 1) so logs are safe.
+    """
+    fam = AffineHashFamily.create(m, seed ^ (0xA5A5A5 + 7919 * stream))
+    h = fam.hash_ints(keys)  # [m, nnz], in [0, p)
+    # Mix once more (single affine hash is too structured for variate generation:
+    # consecutive keys give arithmetic progressions).  Splitmix-style finalizer.
+    z = h.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    u = (z >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+    return np.clip(u, 1e-12, 1.0 - 1e-12)

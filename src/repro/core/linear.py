@@ -1,0 +1,121 @@
+"""Linear sketches: JL/AMS projection and CountSketch (median-of-5).
+
+These are the paper's linear baselines (Fact 1).  Both are *linear* maps
+S(a) = Pi a, hence mergeable under addition -- the property
+:mod:`repro.optim.compression` exploits to all-reduce gradients in sketch
+space.  Signs/buckets come from 4-wise independent polynomial hashes so the
+classic AMS/CountSketch variance analysis applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .hashing import MERSENNE_P, _mix_to_zp, _rng
+from .types import SparseVec
+
+
+def _poly_hash(coeffs: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """4-wise independent polynomial hash over Z_p. coeffs [k, deg], x [nnz]."""
+    x = _mix_to_zp(np.asarray(x, dtype=np.int64))
+    acc = np.zeros((coeffs.shape[0], x.shape[0]), dtype=np.int64)
+    for d in range(coeffs.shape[1]):  # Horner, mod p every step: products < 2^62
+        acc = (acc * x[None, :] + coeffs[:, d][:, None]) % MERSENNE_P
+    return acc
+
+
+def _make_coeffs(k: int, deg: int, seed: int) -> np.ndarray:
+    g = _rng(seed)
+    return g.integers(0, MERSENNE_P, size=(k, deg), dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# JL / AMS sketch
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class JLSketch:
+    proj: np.ndarray  # float64 [m]
+
+    def storage_doubles(self) -> float:
+        return float(self.proj.shape[0])
+
+
+class JL:
+    """S(a)[t] = (1/sqrt(m)) * sum_i sigma_t(i) a_i, sigma 4-wise +-1."""
+
+    name = "jl"
+
+    def __init__(self, m: int, seed: int = 0):
+        self.m = int(m)
+        self.seed = int(seed)
+        self._coeffs = _make_coeffs(self.m, 4, seed ^ 0x11)
+
+    def sketch(self, v: SparseVec) -> JLSketch:
+        if v.nnz == 0:
+            return JLSketch(proj=np.zeros(self.m))
+        h = _poly_hash(self._coeffs, v.indices)          # [m, nnz]
+        signs = 1.0 - 2.0 * (h & 1).astype(np.float64)
+        return JLSketch(proj=(signs @ v.values) / np.sqrt(self.m))
+
+    def sketch_dense(self, a: np.ndarray) -> JLSketch:
+        return self.sketch(SparseVec.from_dense(a))
+
+    def estimate(self, sa: JLSketch, sb: JLSketch) -> float:
+        return float(np.dot(sa.proj, sb.proj))
+
+    def merge(self, sa: JLSketch, sb: JLSketch) -> JLSketch:
+        """Linearity: S(a + b) = S(a) + S(b)."""
+        return JLSketch(proj=sa.proj + sb.proj)
+
+
+# ---------------------------------------------------------------------------
+# CountSketch, median of 5 repetitions [Charikar et al.; Larsen et al. 2021]
+# ---------------------------------------------------------------------------
+REPS = 5
+
+
+@dataclasses.dataclass
+class CSSketch:
+    table: np.ndarray  # float64 [REPS, width]
+
+    def storage_doubles(self) -> float:
+        return float(self.table.size)
+
+
+class CountSketch:
+    name = "cs"
+
+    def __init__(self, width: int, seed: int = 0, reps: int = REPS):
+        self.width = int(width)
+        self.reps = int(reps)
+        self.seed = int(seed)
+        self._bucket_coeffs = _make_coeffs(self.reps, 4, seed ^ 0x22)
+        self._sign_coeffs = _make_coeffs(self.reps, 4, seed ^ 0x33)
+
+    def sketch(self, v: SparseVec) -> CSSketch:
+        table = np.zeros((self.reps, self.width), dtype=np.float64)
+        if v.nnz == 0:
+            return CSSketch(table=table)
+        buckets = _poly_hash(self._bucket_coeffs, v.indices) % self.width
+        signs = 1.0 - 2.0 * (_poly_hash(self._sign_coeffs, v.indices) & 1)
+        for r in range(self.reps):
+            np.add.at(table[r], buckets[r], signs[r] * v.values)
+        return CSSketch(table=table)
+
+    def sketch_dense(self, a: np.ndarray) -> CSSketch:
+        return self.sketch(SparseVec.from_dense(a))
+
+    def estimate(self, sa: CSSketch, sb: CSSketch) -> float:
+        per_rep = np.sum(sa.table * sb.table, axis=1)
+        return float(np.median(per_rep))
+
+    def merge(self, sa: CSSketch, sb: CSSketch) -> CSSketch:
+        return CSSketch(table=sa.table + sb.table)
+
+    # decompress: unbiased point query (used by gradient compression)
+    def decode(self, s: CSSketch, indices: np.ndarray) -> np.ndarray:
+        buckets = _poly_hash(self._bucket_coeffs, indices) % self.width
+        signs = 1.0 - 2.0 * (_poly_hash(self._sign_coeffs, indices) & 1)
+        est = np.stack([s.table[r, buckets[r]] * signs[r] for r in range(self.reps)])
+        return np.median(est, axis=0)

@@ -1,0 +1,123 @@
+"""Exact minimum of an arithmetic progression mod p in O(log p) — vectorized.
+
+Why this exists
+---------------
+Algorithm 3 of the paper conceptually hashes every one of the ``k_i`` active
+slots of block ``i`` of the extended vector (``k_i`` up to ``L = 10^7``) and
+keeps the minimum.  The paper's fast path (the "active index" trick of
+Gollapudi & Panigrahy) skips ahead with geometric jumps -- an inherently
+*sequential, data-dependent* loop that does not map to TPU vector units.
+
+Our TPU-native replacement exploits the hash structure instead: with the
+multilinear pair hash ``h(i, j) = (a*i + b*j + c) mod p``, the slot hashes of
+block ``i`` form the arithmetic progression ``start_i + j*b (mod p)``,
+``j = 0..k_i-1``.  The minimum of such a progression is computable *exactly*
+in O(log p) by a Euclidean descent (each step at least halves the modulus), as
+a fixed-trip-count, branch-free loop over the whole ``(m, nnz)`` grid -- the
+same answer as hashing all ``k_i`` slots, bit for bit.
+
+Recurrence (all quantities integers):
+
+``f(a, b, m, n) = min_{i=0..n-1} (a*i + b) mod m``,  with ``0 <= a, b < m``.
+
+* ``a == 0`` or ``n == 1``          ->  ``b``.
+* ``a <= m/2`` (increasing steps): segment minima are the start ``b`` and the
+  post-wrap values ``v_t = (b - t*m) mod a`` for ``t = 1..T``,
+  ``T = (a*(n-1) + b) // m``.  If ``T == 0`` the answer is ``b``; otherwise
+  ``min(b, f((-m) mod a, (b - m) mod a, a, T))``  (modulus drops to ``a``).
+* ``a >  m/2`` (decreasing by ``d = m - a``): if the sequence never wraps
+  (``d*(n-1) <= b``) the answer is ``b - d*(n-1)``.  Otherwise the candidates
+  are the pre-wrap values ``(b + k*m) mod d`` of the ``K`` completed segments,
+  ``K = (d*n - 1 - b) // m + 1``, plus the final value
+  ``(b - d*(n-1)) mod m``; so ``min(v_last, f(m mod d, b mod d, d, K))``
+  (modulus drops to ``d < m/2``).
+
+Both branches at least halve the modulus, so 40 iterations cover any
+``m < 2^31``.  int64 products stay below ~2^56 for ``n <= 2^24``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_MAX_ITERS = 48  # modulus halves each iteration; 2^31 modulus needs <= 32.
+
+
+def progression_min(a, b, m, n) -> np.ndarray:
+    """Elementwise min_{i=0..n-1} (a*i + b) mod m over int64 arrays.
+
+    Arguments broadcast against each other.  Requires 0 <= a < m, 0 <= b < m,
+    n >= 1 elementwise (validated cheaply).  Returns int64 array.
+    """
+    a, b, m, n = np.broadcast_arrays(
+        np.asarray(a, dtype=np.int64), np.asarray(b, dtype=np.int64),
+        np.asarray(m, dtype=np.int64), np.asarray(n, dtype=np.int64))
+    a, b, m, n = (np.ascontiguousarray(x).copy() for x in (a, b, m, n))
+    if a.size == 0:
+        return np.zeros_like(a)
+    if np.any(n < 1) or np.any(a < 0) or np.any(b < 0) or np.any(a >= m) or np.any(b >= m):
+        raise ValueError("progression_min requires 0<=a<m, 0<=b<m, n>=1")
+
+    best = m - 1  # values are < m, so m-1 is a safe "infinity" within range
+    best = best.copy()
+    active = np.ones(a.shape, dtype=bool)
+
+    for _ in range(_MAX_ITERS):
+        if not active.any():
+            break
+        # --- terminal cases -------------------------------------------------
+        term = active & ((a == 0) | (n == 1))
+        best[term] = np.minimum(best[term], b[term])
+        active &= ~term
+
+        half = m >> 1
+        inc = active & (a <= half)
+        dec = active & (a > half)
+
+        # --- increasing branch ----------------------------------------------
+        if inc.any():
+            ai, bi, mi, ni = a[inc], b[inc], m[inc], n[inc]
+            T = (ai * (ni - 1) + bi) // mi
+            best[inc] = np.minimum(best[inc], bi)  # b is always a candidate
+            done = T == 0
+            # recursion: modulus -> a
+            na = (-mi) % ai
+            nb = (bi - mi) % ai
+            sub = np.zeros(a.shape, dtype=bool)
+            sub[inc] = ~done
+            fin = np.zeros(a.shape, dtype=bool)
+            fin[inc] = done
+            active &= ~fin
+            a[sub], b[sub], mval, nval = na[~done], nb[~done], ai[~done], T[~done]
+            m[sub], n[sub] = mval, nval
+
+        # --- decreasing branch ----------------------------------------------
+        if dec.any():
+            ad, bd, md, nd = a[dec], b[dec], m[dec], n[dec]
+            d = md - ad
+            nowrap = d * (nd - 1) <= bd
+            # no-wrap: min is the final value b - d*(n-1)
+            vals_nowrap = bd - d * (nd - 1)
+            # wrap: candidates = completed-segment pre-wrap mins + final value
+            v_last = (bd - d * (nd - 1)) % md
+            K = np.where(nowrap, 1, (d * nd - 1 - bd) // md + 1)
+            upd = np.where(nowrap, vals_nowrap, v_last)
+            best[dec] = np.minimum(best[dec], upd)
+            fin = np.zeros(a.shape, dtype=bool)
+            fin[dec] = nowrap
+            active &= ~fin
+            sub = np.zeros(a.shape, dtype=bool)
+            sub[dec] = ~nowrap
+            a[sub] = (md % d)[~nowrap]
+            b[sub] = (bd % d)[~nowrap]
+            m[sub] = d[~nowrap]
+            n[sub] = K[~nowrap]
+
+    if active.any():  # pragma: no cover - mathematically unreachable
+        raise RuntimeError("progression_min failed to converge")
+    return best
+
+
+def progression_min_bruteforce(a: int, b: int, m: int, n: int) -> int:
+    """O(n) oracle used by tests.  Keep n small."""
+    i = np.arange(int(n), dtype=np.int64)
+    return int(np.min((np.int64(a) * i + np.int64(b)) % np.int64(m)))

@@ -1,0 +1,63 @@
+"""Uniform sketcher registry with the paper's storage accounting.
+
+Every method exposes: ``make(storage_doubles, seed) -> sketcher`` whose
+``sketch`` / ``estimate`` follow that method's class, sized so that the
+*total* storage (in 64-bit-double equivalents, the paper's x-axis) matches
+``storage_doubles``:
+
+  jl    : m rows of doubles                      -> m = storage
+  cs    : 5 reps x width doubles                 -> width = storage / 5
+  mh    : 1.5 per sample (32b hash + 64b value)  -> m = storage / 1.5
+  kmv   : 1.5 per sample                         -> k = storage / 1.5
+  wmh   : 1.5 per sample + 1 (norm)              -> m = (storage - 1) / 1.5
+  icws  : 1.5 per sample + 1 (norm)              -> m = (storage - 1) / 1.5
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .icws import ICWS
+from .kmv import KMV
+from .linear import REPS, CountSketch, JL
+from .minhash import MinHash
+from .wmh import DEFAULT_L, WeightedMinHash
+
+
+def make_jl(storage: float, seed: int = 0):
+    return JL(m=max(1, int(storage)), seed=seed)
+
+
+def make_cs(storage: float, seed: int = 0):
+    return CountSketch(width=max(1, int(storage // REPS)), seed=seed)
+
+
+def make_mh(storage: float, seed: int = 0):
+    return MinHash(m=max(1, int(storage / 1.5)), seed=seed)
+
+
+def make_kmv(storage: float, seed: int = 0):
+    return KMV(k=max(1, int(storage / 1.5)), seed=seed)
+
+
+def make_wmh(storage: float, seed: int = 0, L: int = DEFAULT_L):
+    return WeightedMinHash(m=max(1, int((storage - 1) / 1.5)), seed=seed, L=L)
+
+
+def make_icws(storage: float, seed: int = 0):
+    return ICWS(m=max(1, int((storage - 1) / 1.5)), seed=seed)
+
+
+FACTORIES: Dict[str, Callable] = {
+    "jl": make_jl,
+    "cs": make_cs,
+    "mh": make_mh,
+    "kmv": make_kmv,
+    "wmh": make_wmh,
+    "icws": make_icws,
+}
+
+PAPER_METHODS = ("jl", "cs", "mh", "kmv", "wmh")  # the five in the paper's plots
+
+
+def make(method: str, storage: float, seed: int = 0):
+    return FACTORIES[method](storage, seed=seed)

@@ -1,0 +1,52 @@
+"""Algorithm 4: vector rounding for Weighted MinHash.
+
+Given a unit vector ``z``, produce ``z~`` with every squared entry an *exact*
+integer multiple of ``1/L``, still exactly unit norm: round every squared
+entry down, then add the (non-negative) deficit to the largest-magnitude
+entry.  The paper's footnote 3 explains why this round-down/round-up-max
+scheme yields *relative* error instead of additive 1/L error.
+
+We work in exact integer arithmetic on the repetition counts
+``k_i = floor(z_i^2 * L)`` -- the counts are what Algorithm 3 actually uses
+(block ``i`` of the extended vector has ``k_i`` active slots), and integer
+bookkeeping guarantees ``sum(k) == L`` exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def round_counts(z: np.ndarray, L: int) -> np.ndarray:
+    """Repetition counts k[i] = L * z~[i]^2 of Algorithm 4, as exact int64.
+
+    ``z`` must be (numerically) unit norm.  Guarantees sum(k) == L and
+    k[i] >= 0, with the deficit added at argmax |z| (line 2-3 of Algorithm 4).
+    """
+    z = np.asarray(z, dtype=np.float64)
+    L = int(L)
+    sq = z * z
+    k = np.floor(sq * L).astype(np.int64)
+    deficit = L - int(k.sum())
+    if deficit < 0:
+        # Only possible via float round-off in the unit normalization; shave
+        # the excess off the largest count (keeps every k_i >= 0).
+        i = int(np.argmax(k))
+        k[i] += deficit
+        if k[i] < 0:  # pragma: no cover - requires pathological inputs
+            raise ValueError("rounding deficit exceeded the largest count")
+        return k
+    i_star = int(np.argmax(np.abs(z)))
+    k[i_star] += deficit
+    return k
+
+
+def rounded_values(z: np.ndarray, k: np.ndarray, L: int) -> np.ndarray:
+    """z~[i] = sign(z[i]) * sqrt(k[i] / L): the exactly-unit rounded vector."""
+    z = np.asarray(z, dtype=np.float64)
+    return np.sign(z) * np.sqrt(k.astype(np.float64) / float(L))
+
+
+def round_unit(z: np.ndarray, L: int) -> np.ndarray:
+    """Full Algorithm 4: unit vector in, rounded unit vector out."""
+    k = round_counts(z, L)
+    return rounded_values(z, k, L)

@@ -1,0 +1,10 @@
+"""Data substrate: synthetic generators (paper protocols), sharded pipeline,
+and the dataset-search sketch index (the paper's §1.3 application)."""
+from .dataset_search import DatasetSearchIndex, SearchResult, TableSketch
+from .pipeline import TokenPipeline
+from .synthetic import (kurtosis, sparse_pair, tfidf_corpus, token_stream,
+                        worldbank_like_pair)
+
+__all__ = ["DatasetSearchIndex", "SearchResult", "TableSketch",
+           "TokenPipeline", "sparse_pair", "worldbank_like_pair", "kurtosis",
+           "tfidf_corpus", "token_stream"]

@@ -1,0 +1,151 @@
+"""Dataset-search service: the paper's motivating application (Section 1.3).
+
+Tables are (key column, value column) pairs.  Per table we pre-compute WMH
+sketches of the four vector representations from Figure 3:
+
+    x^{1[K]}   binary key-indicator        -> join sizes (inner products)
+    x^{V}      values placed at key index  -> post-join SUM / MEAN / corr
+    x^{V^2}    squared values              -> post-join variance
+
+A query table is sketched once and compared against the whole corpus with
+the *batched* estimator (the Pallas estimate kernel on device); every §1.3
+statistic falls out of inner-product estimates:
+
+    |K_A join K_B|      = <1[K_A], 1[K_B]>
+    SUM(V_A after join) = <x^{V_A}, 1[K_B]>
+    MEAN(V_A)           = SUM / join_size
+    corr(V_A, V_B)      via the five inner products (Santos et al. 2021).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import KMV, SparseVec, WeightedMinHash, stack_wmh
+from repro.core.kmv import KMVSketch
+from repro.core.wmh import StackedWMH, WMHSketch
+
+
+@dataclasses.dataclass
+class TableSketch:
+    name: str
+    key_indicator: WMHSketch     # x^{1[K]}
+    values: WMHSketch            # x^{V}
+    values_sq: WMHSketch         # x^{V^2}
+    sample: KMVSketch            # KMV keyed sample of (key -> value): the
+                                 # correlation sketch of Santos et al. 2021
+    n_rows: int
+
+
+@dataclasses.dataclass
+class SearchResult:
+    name: str
+    join_size: float
+    joinability: float           # join size / query rows
+    sum_b: float
+    mean_b: float
+    corr: float
+
+
+class DatasetSearchIndex:
+    """Sketch once, query many times -- the data-lake discovery pattern."""
+
+    def __init__(self, m: int = 256, seed: int = 0, key_space: int = 2 ** 31):
+        self.m = m
+        self.seed = seed
+        self.key_space = key_space
+        self.sketcher = WeightedMinHash(m=m, seed=seed)
+        self.kmv = KMV(k=m, seed=seed)
+        self.tables: List[TableSketch] = []
+
+    # -- ingestion ----------------------------------------------------------
+    def vectorize(self, keys: np.ndarray, values: np.ndarray
+                  ) -> Tuple[SparseVec, SparseVec, SparseVec]:
+        keys = np.asarray(keys, dtype=np.int64)
+        values = np.asarray(values, dtype=np.float64)
+        ind = SparseVec.from_pairs(keys, np.ones_like(values), self.key_space)
+        # zero values would vanish from the sparse vector; nudge them so the
+        # key stays represented (the paper's vectors assume non-zero values)
+        safe = np.where(values == 0.0, 1e-9, values)
+        val = SparseVec.from_pairs(keys, safe, self.key_space)
+        sq = SparseVec.from_pairs(keys, safe ** 2, self.key_space)
+        return ind, val, sq
+
+    def add_table(self, name: str, keys: np.ndarray, values: np.ndarray):
+        ind, val, sq = self.vectorize(keys, values)
+        self.tables.append(TableSketch(
+            name=name,
+            key_indicator=self.sketcher.sketch(ind),
+            values=self.sketcher.sketch(val),
+            values_sq=self.sketcher.sketch(sq),
+            sample=self.kmv.sketch(val),
+            n_rows=len(keys)))
+
+    # -- queries ------------------------------------------------------------
+    def _stack(self, field: str) -> StackedWMH:
+        return stack_wmh([getattr(t, field) for t in self.tables])
+
+    def query(self, keys: np.ndarray, values: np.ndarray,
+              top_k: int = 10, min_join: float = 1.0) -> List[SearchResult]:
+        """Rank corpus tables by |corr| among sufficiently-joinable tables."""
+        if not self.tables:
+            return []
+        ind, val, sq = self.vectorize(keys, values)
+        q_ind = self.sketcher.sketch(ind)
+        q_val = self.sketcher.sketch(val)
+        q_sq = self.sketcher.sketch(sq)
+        q_sample = self.kmv.sketch(val)
+        P = len(self.tables)
+
+        def est(q: WMHSketch, field: str) -> np.ndarray:
+            A = stack_wmh([q] * P)
+            return self.sketcher.estimate_batch(A, self._stack(field))
+
+        join = est(q_ind, "key_indicator")                  # <1A, 1B>
+        sum_b = est(q_ind, "values")                        # <1A, VB>
+        # (q_val x values => <VA,VB>; q_sq / values_sq => post-join variances;
+        # exposed for downstream statistics, not needed for ranking)
+
+        results = []
+        for i, t in enumerate(self.tables):
+            js = max(join[i], 0.0)
+            if js < min_join:
+                continue
+            mean_b = sum_b[i] / js if js > 0 else 0.0
+            corr = self._sample_corr(q_sample, t.sample)
+            results.append(SearchResult(
+                name=t.name, join_size=float(js),
+                joinability=float(js / max(len(keys), 1)),
+                sum_b=float(sum_b[i]), mean_b=float(mean_b), corr=corr))
+        results.sort(key=lambda r: abs(r.corr), reverse=True)
+        return results[:top_k]
+
+    def _sample_corr(self, sa: KMVSketch, sb: KMVSketch,
+                     min_pairs: int = 8) -> float:
+        """Sample Pearson correlation over the join, from matched KMV samples
+        (Santos et al. 2021 correlation sketches).
+
+        Matched hashes within the k smallest of the union form a uniform
+        sample of joined rows; the *sample* correlation sidesteps the
+        catastrophic moment cancellation that estimated E[x^2]-E[x]^2
+        suffers under sketch noise.
+        """
+        if sa.hashes.size == 0 or sb.hashes.size == 0:
+            return 0.0
+        union_h = np.union1d(sa.hashes, sb.hashes)
+        kk = min(self.kmv.k, union_h.size)
+        tau = union_h[kk - 1]
+        common, ia, ib = np.intersect1d(sa.hashes, sb.hashes,
+                                        return_indices=True)
+        keep = common <= tau
+        va, vb = sa.values[ia[keep]], sb.values[ib[keep]]
+        if va.size < min_pairs or va.std() == 0 or vb.std() == 0:
+            return 0.0
+        return float(np.clip(np.corrcoef(va, vb)[0, 1], -1.0, 1.0))
+
+    def storage_doubles(self) -> float:
+        return sum(t.key_indicator.storage_doubles()
+                   + t.values.storage_doubles()
+                   + t.values_sq.storage_doubles() for t in self.tables)

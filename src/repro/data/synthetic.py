@@ -1,0 +1,136 @@
+"""Synthetic data generators matching the paper's experimental protocols.
+
+* :func:`sparse_pair` -- Section 5.1: length-n vectors, fixed nnz, controlled
+  overlap ratio, U(-1,1) values with 10% outliers in U(20,30).
+* :func:`worldbank_like_pair` -- Section 5.2 proxy: heavy-tailed numeric
+  "columns" with controllable overlap and kurtosis (log-normal body + Pareto
+  outliers), normalized to unit norm as the paper does.
+* :func:`tfidf_corpus` -- Section 5.2 (20 Newsgroups) proxy: Zipf-distributed
+  term draws with TF-IDF weighting over a large vocabulary (uni+bigram-sized).
+* :func:`token_stream` -- LM training tokens (Zipf unigrams), deterministic
+  per (seed, step) for resumable input pipelines.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import SparseVec
+
+
+def sparse_pair(rng: np.random.Generator, n: int = 10000, nnz: int = 2000,
+                overlap: float = 0.1, outlier_frac: float = 0.1
+                ) -> Tuple[SparseVec, SparseVec]:
+    """The paper's Fig. 4 protocol."""
+    n_ov = int(round(overlap * nnz))
+    idx = rng.choice(n, size=2 * nnz - n_ov, replace=False)
+    ia = idx[:nnz]
+    ib = np.concatenate([idx[:n_ov], idx[nnz:]])
+
+    def values(k):
+        v = rng.uniform(-1.0, 1.0, size=k)
+        out = rng.random(k) < outlier_frac
+        v[out] = rng.uniform(20.0, 30.0, size=int(out.sum()))
+        return v
+
+    a = np.zeros(n)
+    b = np.zeros(n)
+    a[ia] = values(nnz)
+    b[ib] = values(len(ib))
+    return SparseVec.from_dense(a), SparseVec.from_dense(b)
+
+
+def worldbank_like_pair(rng: np.random.Generator, n: int = 20000,
+                        nnz: int = 1500, overlap: float = 0.2,
+                        outlier_rate: float = 0.02, outlier_scale: float = 50.0
+                        ) -> Tuple[SparseVec, SparseVec]:
+    """Heavy-tailed column pairs with controllable overlap/kurtosis.
+
+    Outlier magnitudes are *correlated across the two columns on shared
+    keys*: a scale-dominating row (a country total, a capital city) is large
+    in BOTH tables.  This is the regime of the paper's real-data study --
+    the joined inner product concentrates on a few co-located heavy rows,
+    which unweighted MinHash samples uniformly (and so usually misses)
+    while WMH samples them proportionally to magnitude.
+    """
+    n_ov = int(round(overlap * nnz))
+    idx = rng.choice(n, size=2 * nnz - n_ov, replace=False)
+    shared = idx[:n_ov]
+    ia, ib = idx[:nnz], np.concatenate([shared, idx[nnz:]])
+
+    def body(k):
+        return rng.lognormal(mean=0.0, sigma=1.0, size=k) * rng.choice([-1, 1], k)
+
+    a = np.zeros(n)
+    b = np.zeros(n)
+    a[ia] = body(nnz)
+    b[ib] = body(len(ib))
+    # independent per-column outliers (non-shared keys)
+    for vec, own in ((a, ia), (b, ib)):
+        out = own[rng.random(len(own)) < outlier_rate]
+        vec[out] *= outlier_scale * (1 + rng.pareto(2.0, size=len(out)))
+    # co-located outliers on shared keys (same "row scale" in both tables)
+    if n_ov:
+        hot = shared[rng.random(n_ov) < outlier_rate]
+        scale = outlier_scale * (1 + rng.pareto(2.0, size=len(hot)))
+        a[hot] *= scale
+        b[hot] *= scale
+    a /= max(np.linalg.norm(a), 1e-12)   # paper normalizes columns to norm 1
+    b /= max(np.linalg.norm(b), 1e-12)
+    return SparseVec.from_dense(a), SparseVec.from_dense(b)
+
+
+def kurtosis(v: SparseVec) -> float:
+    x = v.values
+    if x.size < 4:
+        return 0.0
+    mu, sd = x.mean(), x.std()
+    if sd == 0:
+        return 0.0
+    return float(np.mean(((x - mu) / sd) ** 4) - 3.0)
+
+
+def tfidf_corpus(rng: np.random.Generator, n_docs: int = 200,
+                 vocab: int = 2 ** 18, doc_len_range=(50, 2000),
+                 zipf_a: float = 1.3, topic_frac: float = 0.5) -> List[SparseVec]:
+    """Zipf term draws -> TF-IDF sparse vectors (Fig. 6 proxy).
+
+    A ``topic_frac`` fraction of each document's tokens comes from a
+    document-specific vocabulary block -- the stand-in for the paper's
+    bigram features, which are mostly unique per document and make the
+    vectors sparse with *low overlap* (the regime where Fig. 6 shows WMH
+    winning).  The rest is shared Zipf-distributed vocabulary.
+    """
+    lengths = rng.integers(doc_len_range[0], doc_len_range[1], size=n_docs)
+    term_lists = []
+    df = {}
+    block = vocab // (2 * max(n_docs, 1))
+    stopwords = 20          # standard preprocessing drops the Zipf head
+    for d, L in enumerate(lengths):
+        L = int(L)
+        n_topic = int(L * topic_frac)
+        shared = stopwords + ((rng.zipf(zipf_a, size=L - n_topic) - 1)
+                              % (vocab // 2 - stopwords))
+        topic_lo = vocab // 2 + d * block
+        topic = topic_lo + ((rng.zipf(zipf_a, size=n_topic) - 1) % block)
+        terms = np.concatenate([shared, topic])
+        uniq, counts = np.unique(terms, return_counts=True)
+        term_lists.append((uniq, counts, int(L)))
+        for t in uniq:
+            df[int(t)] = df.get(int(t), 0) + 1
+    docs = []
+    for uniq, counts, L in term_lists:
+        idf = np.array([np.log(n_docs / (1 + df[int(t)])) + 1.0 for t in uniq])
+        tf = 1.0 + np.log(counts)    # sublinear tf, sklearn-style
+        docs.append(SparseVec.from_pairs(uniq.astype(np.int64), tf * idf, vocab))
+    return docs
+
+
+def token_stream(seed: int, step: int, batch: int, seq: int,
+                 vocab: int) -> np.ndarray:
+    """Deterministic (seed, step) -> tokens [batch, seq].  Resumable by design:
+    restarting at step k regenerates exactly the same batch."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    z = rng.zipf(1.3, size=(batch, seq + 1))
+    return (z - 1) % vocab

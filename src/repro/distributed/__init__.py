@@ -1,0 +1,6 @@
+"""Distributed runtime: logical-axis sharding + mesh helpers."""
+from .sharding import (DEFAULT_RULES, ShardingCtx, constrain, make_rules,
+                       rules_for_cell, sharding_for, spec_for, tree_shardings)
+
+__all__ = ["DEFAULT_RULES", "ShardingCtx", "constrain", "make_rules",
+           "rules_for_cell", "sharding_for", "spec_for", "tree_shardings"]

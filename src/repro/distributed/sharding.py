@@ -1,0 +1,147 @@
+"""Logical-axis sharding: the single place where parallelism layout lives.
+
+Every parameter / activation / cache leaf in the model stack is annotated
+with a tuple of *logical* axis names ("embed", "heads", "vocab", ...).  A
+rule table maps logical names to mesh axes; :func:`spec_for` resolves a
+leaf's logical axes against a concrete mesh, **dropping any mapping whose
+dimension is not divisible by the mesh-axis size** (e.g. 8 KV heads cannot
+shard over a 16-way model axis => replicate).  This mirrors the MaxText
+mechanism: re-sharding experiments are pure rule edits, which is exactly the
+knob the §Perf hillclimb turns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default production rules for the (pod, data, model) mesh.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),     # data parallel over pod x data
+    "seq": None,                  # sequence replicated (overridden for long ctx)
+    "embed": None,
+    "fsdp": ("pod", "data"),      # parameter dim sharded FSDP-style
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",               # FFN hidden dim tensor-parallel
+    "experts": "model",           # expert parallel
+    "expert_mlp": "model",        # TP fallback: when E < model size the expert
+                                  # dim drops and the per-expert FFN dim takes
+                                  # the model axis instead (Mixtral: 8e < 16)
+    "tokens": ("pod", "data"),    # flattened token dim in MoE dispatch
+    "capacity": ("pod", "data"),  # expert capacity dim (token-derived)
+    "layers": None,
+    "groups": None,
+    "cache_seq": None,            # KV-cache sequence dim (decode override)
+    "ssm_inner": "model",         # mamba d_inner / rwkv heads
+    "ssm_state": None,
+    "conv": None,
+    "dt_rank": None,
+    "capacity": None,
+    "stats": None,
+}
+
+
+def axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             rules: Dict[str, MeshAxes], mesh: Mesh) -> P:
+    """Resolve logical axes -> PartitionSpec with divisibility fallback."""
+    assert len(shape) == len(logical), (shape, logical)
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        mapped = rules.get(name) if name else None
+        if mapped is None:
+            parts.append(None)
+            continue
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        # drop axes missing from this mesh (e.g. "pod" on the single-pod mesh)
+        # or already used by an earlier dim, then check divisibility
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes or dim % axis_size(mesh, axes) != 0:
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes[0] if len(axes) == 1 else axes)
+    return P(*parts)
+
+
+def sharding_for(shape, logical, rules, mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, rules, mesh))
+
+
+def tree_shardings(tree_shapes, tree_logical, rules, mesh):
+    """Map (shapes pytree, logical-axes pytree) -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s, l: sharding_for(s.shape, l, rules, mesh),
+        tree_shapes, tree_logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x, logical, rules, mesh):
+    """with_sharding_constraint by logical axes (no-op outside a mesh ctx)."""
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(x.shape, logical, rules, mesh))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Threaded through model code so every constraint is rule-driven."""
+    mesh: Mesh
+    rules: Dict[str, MeshAxes]
+
+    def c(self, x, logical):
+        return constrain(x, logical, self.rules, self.mesh)
+
+    def spec(self, shape, logical) -> P:
+        return spec_for(shape, logical, self.rules, self.mesh)
+
+    def sharding(self, shape, logical) -> NamedSharding:
+        return sharding_for(shape, logical, self.rules, self.mesh)
+
+
+def make_rules(**overrides) -> Dict[str, MeshAxes]:
+    rules = dict(DEFAULT_RULES)
+    rules.update(overrides)
+    return rules
+
+
+def rules_for_cell(cfg, shape_cfg, mesh, base: Optional[Dict[str, MeshAxes]] = None
+                   ) -> Dict[str, MeshAxes]:
+    """Per-(arch x shape) rule adaptation.
+
+    * decode with KV heads not divisible by the model axis: shard the cache
+      over its sequence dim instead (keeps 32k/500k caches inside HBM).
+    * batch smaller than pod*data (e.g. long_500k batch=1): spec_for's
+      divisibility fallback already replicates; shard seq over data instead
+      so prefill/long-context work still spreads.
+    """
+    rules = dict(base or DEFAULT_RULES)
+    model_size = mesh.shape.get("model", 1)
+    if shape_cfg.kind == "decode":
+        if cfg.num_kv_heads % model_size != 0:
+            rules["cache_seq"] = "model"
+    if shape_cfg.kind in ("prefill", "decode"):
+        dp = axis_size(mesh, rules.get("batch"))
+        if shape_cfg.global_batch % max(dp, 1) != 0 or shape_cfg.global_batch < dp:
+            rules["seq"] = "data"
+            rules["cache_seq"] = ("data", "model") if cfg.num_kv_heads % model_size else "data"
+    return rules

@@ -1,0 +1,6 @@
+"""Fault tolerance: heartbeats, stragglers, preemption, elastic recovery."""
+from .monitor import (HeartbeatRegistry, PreemptionHandler, RecoveryAction,
+                      StragglerDetector, elastic_plan, plan_recovery)
+
+__all__ = ["HeartbeatRegistry", "PreemptionHandler", "RecoveryAction",
+           "StragglerDetector", "elastic_plan", "plan_recovery"]

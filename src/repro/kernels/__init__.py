@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the sketching hot-spots + pure-jnp oracles.
+
+Kernels (each = pallas_call + explicit BlockSpec VMEM tiling):
+  * icws_sketch  -- batched weighted-MinHash (ICWS) sketching
+  * countsketch  -- MXU-formulated CountSketch (gradient compression)
+  * estimate     -- fused Algorithm-5 estimator partials
+
+``ops`` holds the jit'd wrappers; ``ref`` the oracles used for validation.
+"""
+from . import ops, ref
+from .countsketch import countsketch_pallas
+from .estimate import estimate_partials_pallas
+from .icws_sketch import icws_sketch_pallas
+
+__all__ = ["ops", "ref", "icws_sketch_pallas", "countsketch_pallas",
+           "estimate_partials_pallas"]

@@ -1,0 +1,51 @@
+"""Shared in-kernel utilities: 32-bit mixing RNG and uniform generation.
+
+TPU vector units have native uint32 arithmetic (full-width low product), so
+all in-kernel pseudo-randomness is built from murmur3-style finalizers over
+``uint32`` lanes -- no 64-bit emulation, no host round-trips.  These run both
+inside Pallas kernel bodies and in plain jnp (the ref oracles use the same
+functions so kernel-vs-ref comparisons are bit-exact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_GOLDEN = 0x9E3779B9
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 fmix32: high-quality 32-bit mixer (bijective)."""
+    z = x.astype(jnp.uint32)
+    z = z ^ (z >> jnp.uint32(16))
+    z = z * jnp.uint32(_M1)
+    z = z ^ (z >> jnp.uint32(13))
+    z = z * jnp.uint32(_M2)
+    z = z ^ (z >> jnp.uint32(16))
+    return z
+
+
+def hash_u32(key: jnp.ndarray, salt: jnp.ndarray) -> jnp.ndarray:
+    """Mix key with a salt (two rounds; inputs broadcast)."""
+    k = key.astype(jnp.uint32)
+    s = jnp.asarray(salt).astype(jnp.uint32)
+    return mix32(mix32(k + s * jnp.uint32(_GOLDEN))
+                 ^ (s * jnp.uint32(_M2) + jnp.uint32(0x27D4EB2F)))
+
+
+def uniform01(key: jnp.ndarray, salt) -> jnp.ndarray:
+    """Strictly-interior uniform (0,1) f32 from a 32-bit hash.
+
+    Uses the top 24 bits => values in [2^-25, 1 - 2^-25]; logs are safe.
+    """
+    bits = hash_u32(key, salt) >> jnp.uint32(8)          # 24 random bits
+    return bits.astype(jnp.float32) * jnp.float32(2 ** -24) + jnp.float32(2 ** -25)
+
+
+def salt_for(seed: int, stream: int, t: jnp.ndarray) -> jnp.ndarray:
+    """Combine (seed, stream, sample-index t) into a salt array."""
+    base = jnp.uint32(seed & 0xFFFFFFFF) * jnp.uint32(0x9E3779B1) \
+        + jnp.uint32(stream) * jnp.uint32(0x517CC1B7)
+    return base + t.astype(jnp.uint32) * jnp.uint32(0x2545F491)

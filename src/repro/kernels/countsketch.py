@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: CountSketch of a dense vector (gradient compression).
+
+Formulated MXU-style: instead of a scatter (which TPUs hate), each
+``(rep, t_tile, w_tile)`` grid step builds the one-hot bucket-membership tile
+``eq [BT, BW]`` with an iota compare and contracts it against the signed
+values with a ``[1, BT] @ [BT, BW]`` matmul -- turning the scatter into dense
+MXU work.  The table accumulates across the (sequential, innermost) t
+dimension.
+
+VMEM per step: ``BT`` values + ``BT x BW`` one-hot (f32) ~= 0.5 MiB at
+BT=1024, BW=128.  BW=128 matches the lane width; BT=1024 keeps the matmul
+MXU-shaped (the contraction dim is the 1024-long t axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import hash_u32, salt_for
+
+
+def _cs_kernel(x_ref, out_ref, *, width: int, seed: int, bt: int, bw: int,
+               offset: int):
+    r_idx = pl.program_id(0)
+    w_idx = pl.program_id(1)
+    t_idx = pl.program_id(2)
+
+    x = x_ref[:]                                              # [BT]
+    idx = (jnp.uint32(offset) + (t_idx * bt + jax.lax.iota(jnp.int32, bt))
+           .astype(jnp.uint32))
+    r = r_idx * jnp.ones((), jnp.int32)
+    hb = hash_u32(idx, salt_for(seed, 21, r))
+    bucket = (hb % jnp.uint32(width)).astype(jnp.int32)       # [BT]
+    hs = hash_u32(idx, salt_for(seed, 22, r))
+    sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0).astype(jnp.float32)
+
+    w0 = w_idx * bw
+    lanes = w0 + jax.lax.iota(jnp.int32, bw)                  # [BW]
+    eq = (bucket[:, None] == lanes[None, :]).astype(jnp.float32)  # [BT, BW]
+    contrib = (sign * x.astype(jnp.float32))[None, :]         # [1, BT]
+    tile = jnp.dot(contrib, eq, preferred_element_type=jnp.float32)[0]  # [BW]
+
+    @pl.when(t_idx == 0)
+    def _init():
+        out_ref[0, :] = tile
+
+    @pl.when(t_idx != 0)
+    def _acc():
+        out_ref[0, :] = out_ref[0, :] + tile
+
+
+@functools.partial(jax.jit, static_argnames=("width", "reps", "seed", "offset",
+                                             "bt", "bw", "interpret"))
+def countsketch_pallas(x, *, width: int, reps: int = 5, seed: int = 0,
+                       offset: int = 0, bt: int = 1024, bw: int = 128,
+                       interpret: bool = True):
+    """CountSketch table [reps, width] of dense x [T].  Matches
+    :func:`repro.kernels.ref.countsketch_ref`."""
+    (T,) = x.shape
+    t_pad = (-T) % bt
+    if t_pad:
+        x = jnp.pad(x, (0, t_pad))        # padded values are 0 => no contribution
+    w_padded = width + ((-width) % bw)
+    grid = (reps, w_padded // bw, (T + t_pad) // bt)
+    kernel = functools.partial(_cs_kernel, width=width, seed=seed,
+                               bt=bt, bw=bw, offset=offset)
+    table = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt,), lambda r, wi, ti: (ti,))],
+        out_specs=pl.BlockSpec((1, bw), lambda r, wi, ti: (r, wi)),
+        out_shape=jax.ShapeDtypeStruct((reps, w_padded), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return table[:, :width]

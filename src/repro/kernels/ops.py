@@ -1,0 +1,58 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled kernels run natively; on CPU
+(this container) they run under ``interpret=True`` -- same kernel body,
+executed by the Pallas interpreter -- and every op is validated against the
+pure-jnp oracles in :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .countsketch import countsketch_pallas
+from .estimate import estimate_partials_pallas
+from .icws_sketch import icws_sketch_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def icws_sketch(w, keys, vals, *, m: int, seed: int = 0):
+    """Device ICWS sketch of padded sparse batch.  [B,N] -> (fp, val, amin) [B,m]."""
+    return icws_sketch_pallas(w, keys, vals, m=m, seed=seed,
+                              interpret=_interpret())
+
+
+def countsketch(x, *, width: int, reps: int = 5, seed: int = 0, offset: int = 0):
+    """CountSketch table [reps, width] of a dense vector."""
+    return countsketch_pallas(x, width=width, reps=reps, seed=seed,
+                              offset=offset, interpret=_interpret())
+
+
+def countsketch_decode(table, indices, *, seed: int = 0):
+    """Unbiased median-of-reps point query (pure jnp: gather-bound, no kernel)."""
+    return ref.countsketch_decode_ref(table, indices, seed)
+
+
+def estimate_partials(fpa, va, fpb, vb):
+    """Fused Algorithm-5 partial sums for P sketch pairs."""
+    return estimate_partials_pallas(fpa, va, fpb, vb, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=())
+def icws_estimate(fpa, va, na, fpb, vb, nb):
+    """Full ICWS inner-product estimate for P pairs (epilogue in jnp).
+
+    Args: fp [P, m] int32, v [P, m] f32, norms [P] f32.
+    """
+    m = fpa.shape[1]
+    cnt, sw = estimate_partials(fpa, va, fpb, vb)
+    j_hat = cnt / m
+    m_tilde = 2.0 / (1.0 + j_hat)
+    est = na * nb * (m_tilde / m) * sw
+    return jnp.where((na == 0) | (nb == 0), 0.0, est)

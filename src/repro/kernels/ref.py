@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes exactly what the corresponding kernel computes
+(same RNG from :mod:`repro.kernels.common`, same masking, same reduction
+order semantics where it matters), with no tiling.  Tests assert
+``allclose(kernel(interpret=True), ref)`` across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import hash_u32, salt_for, uniform01
+
+BIG = 3.0e38  # python float: safe to close over in kernel bodies
+
+
+# ---------------------------------------------------------------------------
+# ICWS sketch  (Ioffe Consistent Weighted Sampling; see repro.core.icws)
+# ---------------------------------------------------------------------------
+def icws_sketch_ref(w, keys, vals, m: int, seed: int):
+    """Reference ICWS sketch of a batch of padded sparse vectors.
+
+    Args:
+      w:    [B, N] f32 weights (normalized squared values); 0 => padding.
+      keys: [B, N] int32 original vector indices (ignored where w == 0).
+      vals: [B, N] f32 signed normalized values.
+      m:    number of samples.
+      seed: RNG seed.
+    Returns:
+      fp   [B, m] int32 fingerprints of (key, level, t); -1 for empty inputs,
+      val  [B, m] f32 sampled signed values,
+      amin [B, m] f32 the minimizing ICWS hash values.
+    """
+    B, N = w.shape
+    t = jnp.arange(m, dtype=jnp.int32)                       # [m]
+    kk = keys.astype(jnp.uint32)[:, None, :]                 # [B, 1, N]
+
+    def u(stream):
+        salt = salt_for(seed, stream, t)[None, :, None]      # [1, m, 1]
+        return uniform01(kk, salt)                           # [B, m, N]
+
+    r = -jnp.log(u(1) * u(2))
+    c = -jnp.log(u(3) * u(4))
+    beta = u(5)
+    logw = jnp.log(jnp.maximum(w, 1e-37))[:, None, :]        # [B, 1, N]
+    lvl = jnp.floor(logw / r + beta)
+    y = jnp.exp(r * (lvl - beta))
+    a = c / (y * jnp.exp(r))
+    mask = (w > 0)[:, None, :]
+    a = jnp.where(mask, a, BIG)
+
+    arg = jnp.argmin(a, axis=2)                              # [B, m]
+    amin = jnp.take_along_axis(a, arg[:, :, None], axis=2)[:, :, 0]
+    key_sel = jnp.take_along_axis(keys, arg.astype(jnp.int32), axis=1)  # [B, m]
+    lvl_sel = jnp.take_along_axis(lvl, arg[:, :, None], axis=2)[:, :, 0]
+    val_sel = jnp.take_along_axis(vals, arg.astype(jnp.int32), axis=1)
+
+    fpbits = hash_u32(
+        key_sel.astype(jnp.uint32)
+        ^ (lvl_sel.astype(jnp.int32).astype(jnp.uint32) * jnp.uint32(0x9E3779B9)),
+        salt_for(seed, 9, t)[None, :])
+    # 31-bit fingerprint: keeps int32 values non-negative so the estimator's
+    # `fp >= 0` empty-sentinel guard never discards real collisions
+    fp = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+    nonempty = jnp.any(w > 0, axis=1)[:, None]
+    fp = jnp.where(nonempty, fp, -1)
+    val_sel = jnp.where(nonempty, val_sel, 0.0)
+    return fp, val_sel, jnp.where(nonempty, amin, BIG)
+
+
+# ---------------------------------------------------------------------------
+# CountSketch  (linear sketch used for gradient compression)
+# ---------------------------------------------------------------------------
+def countsketch_ref(x, width: int, reps: int, seed: int, offset: int = 0):
+    """Reference CountSketch of a dense f32 vector.
+
+    Args:
+      x:      [T] f32 values; element i has global index offset + i.
+      width:  table width W.
+      reps:   number of independent repetitions R.
+      seed:   RNG seed.
+    Returns: [R, W] f32 table.
+    """
+    (T,) = x.shape
+    idx = (jnp.arange(T, dtype=jnp.uint32) + jnp.uint32(offset))
+    r = jnp.arange(reps, dtype=jnp.int32)
+    hb = hash_u32(idx[None, :], salt_for(seed, 21, r)[:, None])      # [R, T]
+    bucket = (hb % jnp.uint32(width)).astype(jnp.int32)
+    hs = hash_u32(idx[None, :], salt_for(seed, 22, r)[:, None])
+    sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0).astype(x.dtype)
+    contrib = sign * x[None, :]                                      # [R, T]
+    onehot = jax.nn.one_hot(bucket, width, dtype=x.dtype)            # [R, T, W]
+    return jnp.einsum("rt,rtw->rw", contrib, onehot).astype(jnp.float32)
+
+
+def countsketch_decode_ref(table, indices, seed: int):
+    """Median-of-reps unbiased point query (decompression)."""
+    reps, width = table.shape
+    r = jnp.arange(reps, dtype=jnp.int32)
+    idx = indices.astype(jnp.uint32)
+    hb = hash_u32(idx[None, :], salt_for(seed, 21, r)[:, None])
+    bucket = (hb % jnp.uint32(width)).astype(jnp.int32)
+    hs = hash_u32(idx[None, :], salt_for(seed, 22, r)[:, None])
+    sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0)
+    est = jnp.take_along_axis(table, bucket, axis=1) * sign          # [R, n]
+    return jnp.median(est, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Fused sketch-pair estimator (Algorithm 5 inner loop over m samples)
+# ---------------------------------------------------------------------------
+def estimate_partials_ref(fpa, va, fpb, vb):
+    """Per-pair partial sums for the WMH/ICWS estimator.
+
+    Args:  fpa/fpb [P, m] int32 fingerprints; va/vb [P, m] f32 values.
+    Returns:
+      n_collide [P] f32   -- number of colliding samples,
+      s_weight  [P] f32   -- sum of va*vb / min(va^2, vb^2) over collisions.
+    """
+    collide = (fpa == fpb) & (fpa >= 0)
+    q = jnp.minimum(va * va, vb * vb)
+    safe_q = jnp.where(collide & (q > 0), q, 1.0)
+    term = jnp.where(collide, va * vb / safe_q, 0.0)
+    return collide.astype(jnp.float32).sum(axis=1), term.sum(axis=1)

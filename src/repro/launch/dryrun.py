@@ -1,0 +1,228 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE proof that the distribution config is coherent without real hardware:
+``jax.jit(step, in_shardings, out_shardings).lower(**structs).compile()``
+must succeed on the 16x16 single-pod mesh AND the 2x16x16 two-pod mesh for
+every applicable cell, and the compiled artifact yields memory_analysis()
+(fits HBM?) + cost_analysis() + parsed collective schedule for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+Results are cached as JSON per cell so the sweep is resumable.
+"""
+# The VERY FIRST lines, before ANY other import: jax locks the device count
+# on first init, and the production meshes need 512 placeholder devices.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import cell_applicable
+from repro.distributed.sharding import ShardingCtx, make_rules, rules_for_cell
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.optim import adamw
+from repro.roofline import Roofline, analyze_hlo, model_flops_for
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               rule_overrides=None, q_chunk: int = 1024, k_chunk: int = 1024,
+               microbatches: int = 0, extra_tag: str = "",
+               grad_constraint: bool = True, accum_dtype: str = "float32"):
+    """Lower + compile one cell; returns the result record (dict)."""
+    cfg = configs.get(arch)
+    shape_cfg = configs.SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape_cfg)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_cell(cfg, shape_cfg, mesh)
+    if rule_overrides:
+        rules.update(rule_overrides)
+    ctx = ShardingCtx(mesh=mesh, rules=rules)
+    model = Model(cfg)
+
+    t0 = time.time()
+    params_shape, param_specs = S.model_shapes_and_specs(model)
+    params_sh = S.tree_shardings_of(params_shape, param_specs, rules, mesh)
+
+    if shape_cfg.kind == "train":
+        M = microbatches or S.train_microbatches(shape_cfg, mesh)
+        batch_struct, batch_sh = S.batch_shardings(cfg, shape_cfg, mesh, rules, M)
+        opt_cfg = adamw.AdamWConfig()
+        opt_shape, opt_specs = S.opt_shapes_and_specs(params_shape, param_specs,
+                                                      opt_cfg)
+        opt_sh = S.tree_shardings_of(opt_shape, opt_specs, rules, mesh)
+        opt_sh["step"] = S.scalar_sharding(mesh)
+        step = make_train_step(model, opt_cfg, ctx,
+                               q_chunk=q_chunk, k_chunk=k_chunk,
+                               param_logical=param_specs if grad_constraint else None,
+                               accum_dtype=jnp.dtype(accum_dtype))
+        metrics_sh = {k: S.scalar_sharding(mesh)
+                      for k in ("loss", "grad_norm", "lr", "step")}
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                out_shardings=(params_sh, opt_sh, metrics_sh),
+                donate_argnums=(0, 1),
+            ).lower(params_shape, opt_shape, batch_struct)
+            compiled = lowered.compile()
+    elif shape_cfg.kind == "prefill":
+        batch_struct, batch_sh = S.batch_shardings(cfg, shape_cfg, mesh, rules, 0)
+        step = make_prefill_step(model, ctx, q_chunk=q_chunk, k_chunk=k_chunk)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(params_sh, batch_sh)
+                              ).lower(params_shape, batch_struct)
+            compiled = lowered.compile()
+    else:  # decode
+        B, T = shape_cfg.global_batch, shape_cfg.seq_len
+        state_shape, state_specs = S.decode_state_shapes(model, B, T)
+        state_sh = S.tree_shardings_of(state_shape, state_specs, rules, mesh)
+        tok_struct = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_sh = S.sharding_from_rules((B, 1), ("batch", None), rules, mesh)
+        step = make_decode_step(model, ctx)
+        with mesh:
+            lowered = jax.jit(step,
+                              in_shardings=(params_sh, tok_sh, state_sh),
+                              out_shardings=None,
+                              donate_argnums=(2,),
+                              ).lower(params_shape, tok_struct, state_shape)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    rc = analyze_hlo(hlo)
+    chips = _chips(mesh)
+    rl = Roofline(chips=chips,
+                  flops=rc.flops * chips,
+                  hbm_bytes=rc.hbm_bytes * chips,
+                  collective_bytes=rc.collective_bytes * chips,
+                  model_flops=model_flops_for(cfg, shape_cfg))
+
+    record = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "tag": extra_tag, "status": "ok",
+        "kind": shape_cfg.kind,
+        "chips": chips,
+        "compile_seconds": compile_s,
+        "microbatches": microbatches or (
+            S.train_microbatches(shape_cfg, mesh) if shape_cfg.kind == "train" else 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+            "hbm_per_device": 16 * 1024 ** 3,
+        },
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if k in ("flops", "bytes accessed")},
+        "hlo_counts": {
+            "flops_per_device": rc.flops,
+            "hbm_bytes_per_device": rc.hbm_bytes,
+            "collective_bytes_per_device": rc.collective_bytes,
+            "collectives_by_kind": rc.collectives,
+            "while_trip_counts": rc.while_trip_counts[:32],
+        },
+        "roofline": rl.as_dict(),
+        "rules": {k: (list(v) if isinstance(v, tuple) else v)
+                  for k, v in rules.items()},
+    }
+    return record
+
+
+def run_cell(arch, shape_name, multi_pod, outdir: Path, force=False, **kw):
+    tag = kw.get("extra_tag", "")
+    name = f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}"
+    if tag:
+        name += f"_{tag}"
+    path = outdir / f"{name}.json"
+    if path.exists() and not force:
+        rec = json.loads(path.read_text())
+        print(f"[cached] {name}: {rec['status']}")
+        return rec
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod, **kw)
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "tag": tag, "status": "error", "error": str(e)[-2000:],
+               "traceback": traceback.format_exc()[-4000:]}
+    outdir.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=2, default=float))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        extra = (f" compile={rec['compile_seconds']:.0f}s"
+                 f" dominant={rec['roofline']['dominant']}"
+                 f" peakGB={rec['memory']['peak_bytes_per_device']/2**30:.1f}")
+    print(f"[{status}] {name}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+    outdir = Path(args.out)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = [(a, s) for a in configs.ARCHS for s in configs.SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_err = 0
+    for mp in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, mp, outdir, force=args.force)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skipped"
+            n_err += rec["status"] == "error"
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

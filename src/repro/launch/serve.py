@@ -1,0 +1,61 @@
+"""Serving launcher: batched decode on the reduced config (host mesh) or
+full-size decode-cell lowering on the production mesh (--dry-run).
+
+Usage:
+  python -m repro.launch.serve --arch tinyllama-1.1b --requests 6
+  python -m repro.launch.serve --arch mixtral-8x22b --dry-run --shape decode_32k
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd, env=os.environ))
+
+    import time
+
+    import jax
+
+    from repro import configs
+    from repro.models import Model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = configs.reduced(args.arch)
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_slots=args.slots, max_seq=128)
+    reqs = [Request(rid=i, prompt=[1 + i, 2 + i], max_new_tokens=args.max_new_tokens)
+            for i in range(args.requests)]
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.time()
+    ticks = 0
+    while any(not r.done for r in reqs) and ticks < 10_000:
+        engine.tick()
+        ticks += 1
+    toks = sum(len(r.output) for r in reqs)
+    print(f"{args.arch}: served {len(reqs)} requests / {toks} tokens "
+          f"in {time.time()-t0:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape) cell.
+
+Nothing here allocates device memory: parameters/optimizer/cache shapes come
+from ``jax.eval_shape`` over the real init functions, inputs are synthesized
+structs, and shardings resolve through the logical-rule table.  This is the
+shared machinery of the dry-run, the roofline pass, and the perf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingCtx, sharding_for, spec_for
+from repro.models import Model
+from repro.optim import adamw
+
+
+def train_microbatches(shape_cfg: ShapeConfig, mesh) -> int:
+    """Microbatch count: per-replica microbatch of 1 sequence at 4k train."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    per_replica = max(shape_cfg.global_batch // dp, 1)
+    return min(per_replica, 8)
+
+
+def batch_structs(cfg: ModelConfig, shape_cfg: ShapeConfig,
+                  microbatches: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training batch structs: always [M, B/M, ...] (M=1 included);
+    prefill (microbatches=0) gets flat [B, ...]."""
+    B, T = shape_cfg.global_batch, shape_cfg.seq_len
+    M = microbatches
+    lead = (M, B // M) if M >= 1 else (B,)
+
+    def s(shape, dtype):
+        return jax.ShapeDtypeStruct(lead + shape, dtype)
+
+    batch = {}
+    t_text = T - cfg.num_patches if cfg.family == "vlm" else T
+    batch["tokens"] = s((t_text,), jnp.int32)
+    batch["labels"] = s((t_text,), jnp.int32)
+    if cfg.family == "vlm":
+        batch["patches"] = s((cfg.num_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = s((cfg.encoder_seq, cfg.encoder_d_model), jnp.float32)
+    return batch
+
+
+def batch_logical(cfg: ModelConfig, microbatches: int = 1) -> Dict[str, tuple]:
+    lead = (None, "batch") if microbatches >= 1 else ("batch",)
+    logical = {"tokens": lead + ("seq",), "labels": lead + ("seq",)}
+    if cfg.family == "vlm":
+        logical["patches"] = lead + ("seq", "embed")
+    if cfg.family == "encdec":
+        logical["frames"] = lead + ("seq", None)
+    return logical
+
+
+def batch_shardings(cfg, shape_cfg, mesh, rules, microbatches=1):
+    structs = batch_structs(cfg, shape_cfg, microbatches)
+    logical = batch_logical(cfg, microbatches)
+    return structs, {k: sharding_for(structs[k].shape, logical[k], rules, mesh)
+                     for k in structs}
+
+
+def model_shapes_and_specs(model: Model):
+    """(param structs, logical specs).  Specs are static python data, so we
+    get them from a real (tiny-key) trace of init via eval_shape on params
+    only."""
+    def init_params_only(key):
+        p, _ = model.init(key)
+        return p
+    params_shape = jax.eval_shape(init_params_only, jax.random.PRNGKey(0))
+    # Specs are deterministic static structures: build them cheaply by calling
+    # init under eval_shape and capturing the second output via closure.
+    captured = {}
+    def init_capture(key):
+        p, s = model.init(key)
+        captured["specs"] = s
+        return p
+    jax.eval_shape(init_capture, jax.random.PRNGKey(0))
+    return params_shape, captured["specs"]
+
+
+def opt_shapes_and_specs(params_shape, param_specs, opt_cfg):
+    opt_shape = jax.eval_shape(lambda: adamw.init_opt_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_shape),
+        opt_cfg))
+    opt_specs = adamw.opt_state_specs(param_specs)
+    return opt_shape, opt_specs
+
+
+def decode_state_shapes(model: Model, batch: int, max_seq: int):
+    captured = {}
+    def init_capture():
+        st, sp = model.init_decode_state(batch, max_seq)
+        captured["specs"] = sp
+        return st
+    state_shape = jax.eval_shape(init_capture)
+    return state_shape, captured["specs"]
+
+
+def _is_logical_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def tree_shardings_of(shapes, logical, rules, mesh):
+    return jax.tree.map(
+        lambda s, l: sharding_for(s.shape, l, rules, mesh),
+        shapes, logical, is_leaf=lambda x: _is_logical_leaf(x))
+
+
+def scalar_sharding(mesh):
+    return NamedSharding(mesh, P())
+
+
+def sharding_from_rules(shape, logical, rules, mesh):
+    return sharding_for(shape, logical, rules, mesh)

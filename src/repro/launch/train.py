@@ -1,0 +1,61 @@
+"""Production training launcher.
+
+On a real multi-host TPU deployment each host runs this same binary with
+cluster-provided JAX distributed env; on this container it runs the reduced
+config on the host mesh.  ``--dry-run`` lowers the full-size model for the
+production mesh instead (see repro.launch.dryrun for the sweep driver).
+
+Usage:
+  python -m repro.launch.train --arch tinyllama-1.1b --steps 50
+  python -m repro.launch.train --arch mixtral-8x22b --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the FULL config on the production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # Re-exec through the dryrun entrypoint so XLA_FLAGS is set first.
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", "train_4k"]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd, env=os.environ))
+
+    from repro import configs
+    from repro.optim import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = configs.reduced(args.arch)
+    if cfg.family in ("encdec", "vlm"):
+        raise SystemExit(f"{args.arch}: the token-stream trainer drives LM "
+                         "families; use examples/ for multimodal stubs")
+    tcfg = TrainerConfig(
+        steps=args.steps, global_batch=args.global_batch, seq=args.seq,
+        microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+        opt=AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps))
+    trainer = Trainer(cfg, tcfg)
+    trainer.preemption.install()
+    hist = trainer.run()
+    print(f"final loss {hist['loss'][-1]:.4f} "
+          f"(start {hist['loss'][0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model substrate: every assigned architecture family in pure JAX."""
+from .transformer import Model
+from .counting import count_active_params, count_params
+
+__all__ = ["Model", "count_params", "count_active_params"]

@@ -1,0 +1,239 @@
+"""Attention: GQA projections, chunked (flash-style) training/prefill path,
+and single-token decode with full or circular (sliding-window) KV caches.
+
+The chunked path never materializes the [T, S] score matrix: an online
+softmax accumulates over key chunks inside a scan over query chunks, exactly
+the FlashAttention recurrence, in pure JAX (compiles to bounded-memory while
+loops; a natural Pallas port if attention ever dominates the roofline --
+here the paper's contribution is sketching, so we keep attention XLA-native).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import COMPUTE_DTYPE, _init_normal, apply_rope
+
+NEG = -1e30
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (falls back to n)."""
+    if n <= target:
+        return n
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def init_attention(key, cfg):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    params = {
+        "wq": _init_normal(k1, (d, H, hd), s),
+        "wk": _init_normal(k2, (d, K, hd), s),
+        "wv": _init_normal(k3, (d, K, hd), s),
+        "wo": _init_normal(k4, (H, hd, d), 1.0 / np.sqrt(H * hd)),
+    }
+    specs = {
+        "wq": ("fsdp", "heads", "head_dim"),
+        "wk": ("fsdp", "kv_heads", "head_dim"),
+        "wv": ("fsdp", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "fsdp"),
+    }
+    return params, specs
+
+
+def _project_qkv(params, x, cfg, positions, rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _merge_heads(params, o, dt):
+    return jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_offset: int = 0, k_offset: int = 0,
+                      q_chunk: int = 1024, k_chunk: int = 1024):
+    """q [B,Tq,H,D], k/v [B,S,K,D] (GQA: H = K*G).  Returns [B,Tq,H,D].
+
+    Online-softmax over key chunks inside a scan over query chunks; scores
+    accumulate in f32.  ``window > 0`` masks keys older than ``window``.
+    """
+    B, Tq, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qc = _pick_chunk(Tq, q_chunk)
+    kc = _pick_chunk(S, k_chunk)
+    nq, nk = Tq // qc, S // kc
+
+    scale = 1.0 / np.sqrt(D)
+    q_r = q.reshape(B, nq, qc, K, G, D).transpose(1, 0, 3, 4, 2, 5)  # [nq,B,K,G,qc,D]
+    k_r = k.reshape(B, nk, kc, K, D).transpose(1, 0, 3, 2, 4)        # [nk,B,K,kc,D]
+    v_r = v.reshape(B, nk, kc, K, D).transpose(1, 0, 3, 2, 4)
+
+    def q_body(_, qi_and_chunk):
+        qi, q_blk = qi_and_chunk                                      # [B,K,G,qc,D]
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        # Rematerialize per-chunk probabilities in the backward pass instead
+        # of letting the scan stack [*, qc, kc] score matrices as residuals
+        # (which would defeat flash attention's O(T) memory in training).
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def k_body(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, k_blk, v_blk = ki_and_kv
+            k_pos = k_offset + ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bkcd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_body, (m0, l0, a0), (jnp.arange(nk), k_r, v_r))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]                  # [B,K,G,qc,D]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), q_r))       # [nq,B,K,G,qc,D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Tq, H, D)
+    return out
+
+
+def attention_block(params, x, cfg, ctx=None, *, positions=None,
+                    q_chunk: int = 1024, k_chunk: int = 1024):
+    """Full training/prefill self-attention sublayer (pre-norm done by caller)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if ctx is not None:
+        q = ctx.c(q, ("batch", "seq", "heads", "head_dim"))
+        k = ctx.c(k, ("batch", "seq", "kv_heads", "head_dim"))
+        v = ctx.c(v, ("batch", "seq", "kv_heads", "head_dim"))
+    o = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                          q_chunk=q_chunk, k_chunk=k_chunk)
+    if ctx is not None:
+        o = ctx.c(o, ("batch", "seq", "heads", "head_dim"))
+    return _merge_heads(params, o, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token) with full or circular KV cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    size: int          # slots (max_seq for full, window for SWA)
+    windowed: bool
+
+
+def cache_layout(cfg, max_seq: int) -> CacheLayout:
+    if cfg.sliding_window and cfg.sliding_window < max_seq:
+        return CacheLayout(size=cfg.sliding_window, windowed=True)
+    return CacheLayout(size=max_seq, windowed=False)
+
+
+def init_kv_cache(cfg, layers: int, batch: int, layout: CacheLayout):
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        "k": jnp.zeros((layers, batch, layout.size, K, hd), COMPUTE_DTYPE),
+        "v": jnp.zeros((layers, batch, layout.size, K, hd), COMPUTE_DTYPE),
+    }
+    specs = {
+        "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    }
+    return cache, specs
+
+
+def decode_attention(params, x, cfg, layer_k, layer_v, slot_pos, pos,
+                     layout: CacheLayout, ctx=None):
+    """One-token attention.  x [B,1,d]; layer_k/v [B,S,K,hd]; pos scalar.
+
+    Returns (out [B,1,d], new_k, new_v).  ``slot_pos [S]`` holds the global
+    position stored in each slot (-1 = empty) and is maintained by the caller
+    (shared across layers).
+    """
+    B = x.shape[0]
+    dt = x.dtype
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+
+    slot = pos % layout.size if layout.windowed else pos
+    layer_k = jax.lax.dynamic_update_slice(layer_k, k_new, (0, slot, 0, 0))
+    layer_v = jax.lax.dynamic_update_slice(layer_v, v_new, (0, slot, 0, 0))
+    if ctx is not None:
+        layer_k = ctx.c(layer_k, ("batch", "cache_seq", "kv_heads", "head_dim"))
+        layer_v = ctx.c(layer_v, ("batch", "cache_seq", "kv_heads", "head_dim"))
+
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    G = cfg.num_heads // K
+    qr = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, layer_k,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if layout.windowed:
+        valid &= slot_pos > pos - layout.size
+    s = jnp.where(valid[None, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(dt), layer_v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, K * G, hd)
+    out = _merge_heads(params, o.astype(dt), dt)
+    return out, layer_k, layer_v
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def init_cross_attention(key, cfg):
+    return init_attention(key, cfg)
+
+
+def cross_attention(params, x, enc_k, enc_v, cfg, ctx=None):
+    """x [B,T,d] attends over precomputed encoder K/V [B,S,K,hd] (no mask)."""
+    dt = x.dtype
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    o = chunked_attention(q, enc_k, enc_v, causal=False,
+                          q_chunk=min(1024, T), k_chunk=min(1024, enc_k.shape[1]))
+    return _merge_heads(params, o, dt)
+
+
+def encode_kv(params, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dt))
+    return k, v

@@ -1,0 +1,156 @@
+"""Shared model building blocks (pure JAX, explicit param pytrees).
+
+Convention: every ``init_*`` returns ``(params, specs)`` where ``specs``
+mirrors ``params`` with tuples of logical axis names per array dimension.
+The distributed layer (:mod:`repro.distributed.sharding`) resolves those
+against a mesh.  Compute dtype is bf16; params are stored f32 (single master
+copy) and cast at use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def _init_normal(key, shape, scale):
+    return (jax.random.normal(key, shape, PARAM_DTYPE) * scale).astype(PARAM_DTYPE)
+
+
+def dense_init(key, d_in: int, d_out: int, axes: Tuple[str, ...],
+               scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return _init_normal(key, (d_in, d_out), scale), axes
+
+
+def rms_norm(x, gamma, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., T, H, D]; positions [..., T] int32 (broadcastable)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                    # [half]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., :, None, :]                    # [..., T, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, variant: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if variant in ("swiglu", "geglu"):
+        params = {
+            "w_gate": _init_normal(k1, (d_model, d_ff), 1.0 / np.sqrt(d_model)),
+            "w_up": _init_normal(k2, (d_model, d_ff), 1.0 / np.sqrt(d_model)),
+            "w_down": _init_normal(k3, (d_ff, d_model), 1.0 / np.sqrt(d_ff)),
+        }
+        specs = {
+            "w_gate": ("fsdp", "mlp"),
+            "w_up": ("fsdp", "mlp"),
+            "w_down": ("mlp", "fsdp"),
+        }
+    else:  # plain gelu
+        params = {
+            "w_up": _init_normal(k1, (d_model, d_ff), 1.0 / np.sqrt(d_model)),
+            "w_down": _init_normal(k2, (d_ff, d_model), 1.0 / np.sqrt(d_ff)),
+        }
+        specs = {"w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp")}
+    return params, specs
+
+
+def apply_mlp(params, x, variant: str, ctx=None):
+    dt = x.dtype
+    if variant in ("swiglu", "geglu"):
+        g = x @ params["w_gate"].astype(dt)
+        u = x @ params["w_up"].astype(dt)
+        if ctx is not None:
+            g = ctx.c(g, ("batch", "seq", "mlp"))
+            u = ctx.c(u, ("batch", "seq", "mlp"))
+        act = jax.nn.silu(g) if variant == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+        out = h @ params["w_down"].astype(dt)
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(dt))
+        if ctx is not None:
+            h = ctx.c(h, ("batch", "seq", "mlp"))
+        out = h @ params["w_down"].astype(dt)
+    if ctx is not None:
+        out = ctx.c(out, ("batch", "seq", "embed"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head + loss
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int):
+    return _init_normal(key, (vocab, d_model), 1.0), ("vocab", "embed")
+
+
+def embed(table, tokens, ctx=None):
+    out = jnp.take(table.astype(COMPUTE_DTYPE), tokens, axis=0)
+    if ctx is not None:
+        out = ctx.c(out, ("batch", "seq", "embed"))
+    return out
+
+
+def lm_logits(x, table_or_head, ctx=None):
+    """x [B,T,d] @ head [d,V] (or embedding.T when tied)."""
+    w = table_or_head.astype(x.dtype)
+    if w.shape[0] != x.shape[-1]:       # tied embedding [V, d] -> transpose
+        w = w.T
+    out = x @ w
+    if ctx is not None:
+        out = ctx.c(out, ("batch", "seq", "vocab"))
+    return out
+
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 1e-4):
+    """Vocab-sharding-friendly CE: no one-hot materialization.
+
+    logits [B,T,V] (any float dtype), labels [B,T] int32, mask [B,T] or None.
+    The correct-class logit is extracted with an iota-compare-select-reduce,
+    which XLA fuses into the logsumexp traversal (works with V sharded).
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)                       # [B,T]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, len(lg.shape) - 1)
+    correct = jnp.sum(jnp.where(vocab_iota == labels[..., None], lg, 0.0), axis=-1)
+    nll = lse - correct
+    if z_loss:
+        nll = nll + z_loss * lse ** 2                          # stabilizer
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN: top-k router + sort-based capacity dispatch.
+
+Dispatch is O(T*k*d) gather/scatter (argsort + rank-in-group), NOT the
+O(T^2) GShard one-hot einsum: tokens are ranked within their expert by a
+sorted segment-offset computation and scattered into a [E, capacity, d]
+buffer (capacity overflow drops, GShard-style position priority).  Expert
+weights are annotated ("experts", ...) so the expert dim shards over the
+model axis (EP) when divisible, with the per-expert FFN dim available as a
+TP fallback ("expert_mlp") for small expert counts (e.g. Mixtral's 8 < 16).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _init_normal
+
+
+def init_moe(key, cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    params = {
+        "w_router": _init_normal(k0, (d, E), s),
+        "w_gate": _init_normal(k1, (E, d, f), s),
+        "w_up": _init_normal(k2, (E, d, f), s),
+        "w_down": _init_normal(k3, (E, f, d), 1.0 / np.sqrt(f)),
+    }
+    specs = {
+        "w_router": ("embed", None),
+        "w_gate": ("experts", "fsdp", "expert_mlp"),
+        "w_up": ("experts", "fsdp", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "fsdp"),
+    }
+    return params, specs
+
+
+def _positions_in_expert(slot_expert: jnp.ndarray, num_experts: int):
+    """Rank of each slot within its expert group (sort-based, O(N log N))."""
+    n = slot_expert.shape[0]
+    order = jnp.argsort(slot_expert)                    # stable in jax
+    sorted_e = slot_expert[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(num_experts))   # [E]
+    ranks_sorted = jnp.arange(n) - starts[sorted_e]
+    pos = jnp.zeros(n, jnp.int32).at[order].set(ranks_sorted.astype(jnp.int32))
+    return pos
+
+
+def _dispatch_block(x, top_p, top_e, E: int, k: int, capacity: int):
+    """Shard-local dispatch for ONE token block: returns (buf, gather plan)."""
+    N, d = x.shape
+    dt = x.dtype
+    slot_expert = top_e.reshape(N * k)
+    slot_weight = top_p.reshape(N * k).astype(dt)
+    slot_token = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+    pos = _positions_in_expert(slot_expert, E)
+    keep = pos < capacity
+    pos_c = jnp.minimum(pos, capacity - 1)
+    payload = jnp.where(keep[:, None], x[slot_token], 0).astype(dt)
+    buf = jnp.zeros((E, capacity, d), dt).at[slot_expert, pos_c].add(
+        payload, mode="drop")
+    return buf, (slot_expert, slot_weight, slot_token, keep, pos_c)
+
+
+def _combine_block(out_buf, plan, N: int, d: int):
+    slot_expert, slot_weight, slot_token, keep, pos_c = plan
+    slot_out = out_buf[slot_expert, pos_c] * slot_weight[:, None]
+    slot_out = jnp.where(keep[:, None], slot_out, 0)
+    return jnp.zeros((N, d), out_buf.dtype).at[slot_token].add(slot_out)
+
+
+def moe_ffn(params, x, cfg, ctx=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [N, d] flat tokens -> (y [N, d], aux load-balance loss scalar).
+
+    Dispatch is **block-local**: tokens are viewed as [G, N/G] blocks with G
+    = the data-parallel shard count, and ranking/scatter/gather are vmapped
+    over blocks.  Every dispatch op then carries the sharded block dim, so
+    GSPMD keeps the whole dispatch data-parallel -- the naive *global* sort
+    based dispatch forces XLA to materialize and all-reduce the full
+    [E, C, d] buffer on every shard (measured 18 TB/device/step on Mixtral
+    train_4k; see EXPERIMENTS.md §Perf iteration 1).  Capacity is per-block
+    (the GShard/MaxText per-group semantic).
+    """
+    N, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    dt = x.dtype
+    if ctx is not None:
+        x = ctx.c(x, ("tokens", "embed"))
+
+    logits = (x @ params["w_router"].astype(dt)).astype(jnp.float32)   # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                             # [N, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-transformer load-balance auxiliary loss.
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+
+    G = _dispatch_groups(N, ctx)
+    Nl = N // G
+    capacity = max(int(np.ceil(Nl * k / E * cfg.capacity_factor)), 4)
+
+    xb = x.reshape(G, Nl, d)
+    pb = top_p.reshape(G, Nl, k)
+    eb = top_e.reshape(G, Nl, k)
+    if ctx is not None:
+        xb = ctx.c(xb, ("tokens", None, "embed"))
+
+    buf, plan = jax.vmap(
+        lambda xg, pg, eg: _dispatch_block(xg, pg, eg, E, k, capacity)
+    )(xb, pb, eb)                                           # buf [G, E, C, d]
+    if ctx is not None:
+        buf = ctx.c(buf, ("tokens", "experts", "capacity", "embed"))
+
+    # expert FFN (swiglu), batched over blocks
+    g = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(dt))
+    if ctx is not None:
+        g = ctx.c(g, ("tokens", "experts", "capacity", "expert_mlp"))
+        u = ctx.c(u, ("tokens", "experts", "capacity", "expert_mlp"))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(dt))
+    if ctx is not None:
+        out_buf = ctx.c(out_buf, ("tokens", "experts", "capacity", "embed"))
+
+    y = jax.vmap(lambda ob, pl: _combine_block(ob, pl, Nl, d))(out_buf, plan)
+    y = y.reshape(N, d)
+    if ctx is not None:
+        y = ctx.c(y, ("tokens", "embed"))
+    return y, aux
+
+
+def _dispatch_groups(N: int, ctx) -> int:
+    """Token blocks = data-parallel shard count (1 without a mesh)."""
+    if ctx is None:
+        return 1
+    g = 1
+    for a in ("pod", "data"):
+        g *= ctx.mesh.shape.get(a, 1)
+    while g > 1 and N % g != 0:
+        g //= 2
+    return max(g, 1)

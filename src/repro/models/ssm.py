@@ -1,0 +1,235 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and Mamba (for Jamba).
+
+Both are implemented with an O(1)-state recurrence:
+  * training/prefill: ``lax.scan`` over time (single-trace compile; the
+    roofline module multiplies body costs by the trip count),
+  * decode: a single-step update -- which is what makes the ``long_500k``
+    cell feasible for these families.
+
+RWKV6 per head h with state S [hd, hd]:
+    out_t = r_t . (S + u (x) (k_t v_t^T))      (read with bonus u)
+    S    <- diag(w_t) S + k_t (x) v_t          (data-dependent decay w_t)
+with w_t = exp(-exp(w0 + lora(x_t))) in (0, 1) per channel -- the "Finch"
+data-dependent decay.
+
+Mamba: in_proj -> (x, z); causal conv; dt = softplus(lora(x));
+    h <- exp(dt*A) h + (dt*x) (x) B_t ;  y = h . C_t + D*x ;  out(silu(z)*y).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _init_normal
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+def init_rwkv_time_mix(key, cfg):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    lora = 64
+    ks = jax.random.split(key, 10)
+    s = 1.0 / np.sqrt(d)
+    params = {
+        "mu": _init_normal(ks[0], (5, d), 0.02),            # shift mixes r,k,v,g,w
+        "wr": _init_normal(ks[1], (d, H, hd), s),
+        "wk": _init_normal(ks[2], (d, H, hd), s),
+        "wv": _init_normal(ks[3], (d, H, hd), s),
+        "wg": _init_normal(ks[4], (d, H, hd), s),
+        "w0": _init_normal(ks[5], (H, hd), 0.5),
+        "w_lora_a": _init_normal(ks[6], (d, lora), s),
+        "w_lora_b": _init_normal(ks[7], (lora, H, hd), 1.0 / np.sqrt(lora)),
+        "u": _init_normal(ks[8], (H, hd), 0.5),
+        "wo": _init_normal(ks[9], (H, hd, d), 1.0 / np.sqrt(H * hd)),
+        "ln_g": jnp.zeros((H, hd), jnp.float32),
+    }
+    specs = {
+        "mu": (None, "embed"),
+        "wr": ("fsdp", "heads", "head_dim"),
+        "wk": ("fsdp", "heads", "head_dim"),
+        "wv": ("fsdp", "heads", "head_dim"),
+        "wg": ("fsdp", "heads", "head_dim"),
+        "w0": ("heads", "head_dim"),
+        "w_lora_a": ("fsdp", None),
+        "w_lora_b": (None, "heads", "head_dim"),
+        "u": ("heads", "head_dim"),
+        "wo": ("heads", "head_dim", "fsdp"),
+        "ln_g": ("heads", "head_dim"),
+    }
+    return params, specs
+
+
+def _rwkv_inputs(params, x, x_prev):
+    """Token-shift mixing; x [B,T,d]; x_prev [B,1,d] (last token of prev chunk)."""
+    dt = x.dtype
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = params["mu"].astype(dt)                            # [5, d]
+    mix = x[:, :, None, :] + mu[None, None] * (shifted - x)[:, :, None, :]
+    xr, xk, xv, xg, xw = [mix[:, :, i] for i in range(5)]
+    r = jnp.einsum("btd,dhk->bthk", xr, params["wr"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", xk, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", xv, params["wv"].astype(dt))
+    g = jnp.einsum("btd,dhk->bthk", xg, params["wg"].astype(dt))
+    wlog = params["w0"].astype(jnp.float32)[None, None] + jnp.einsum(
+        "btd,dl,lhk->bthk", xw.astype(jnp.float32),
+        params["w_lora_a"].astype(jnp.float32),
+        params["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog))                              # decay in (0,1) f32
+    return r, k, v, g, w
+
+
+def _rwkv_read(params, r, kk, vv, g, state, u):
+    """out_t given state (pre-update).  r/k/v/g [B,H,hd] f32."""
+    rd = r
+    bonus = u[None] * kk                                     # [B,H,hd]
+    out = jnp.einsum("bhi,bhij->bhj", rd, state) \
+        + jnp.einsum("bhi,bhi,bhj->bhj", rd, bonus, vv)
+    # group norm over head dim
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5) * (1.0 + params["ln_g"][None])
+    return out * jax.nn.silu(g)
+
+
+def rwkv_time_mix(params, x, x_prev, state):
+    """x [B,T,d]; state [B,H,hd,hd] f32.  Returns (out [B,T,d], x_last, state)."""
+    B, T, d = x.shape
+    H, hd = params["u"].shape
+    dt = x.dtype
+    r, k, v, g, w = _rwkv_inputs(params, x, x_prev)
+    u = params["u"].astype(jnp.float32)
+
+    def step(S, inputs):
+        rt, kt, vt, gt, wt = inputs                          # [B,H,hd] each
+        out = _rwkv_read(params, rt, kt, vt, gt, S, u)
+        S = wt[..., None] * S + jnp.einsum("bhi,bhj->bhij", kt, vt)
+        return S, out
+
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          g.transpose(1, 0, 2, 3).astype(jnp.float32),
+          w.transpose(1, 0, 2, 3))
+    state, outs = jax.lax.scan(step, state, xs)              # outs [T,B,H,hd]
+    out = outs.transpose(1, 0, 2, 3).astype(dt)
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(dt))
+    return out, x[:, -1:], state
+
+
+def init_rwkv_channel_mix(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    params = {
+        "mu": _init_normal(ks[0], (2, d), 0.02),
+        "wk": _init_normal(ks[1], (d, f), 1.0 / np.sqrt(d)),
+        "wv": _init_normal(ks[2], (f, d), 1.0 / np.sqrt(f)),
+        "wr": _init_normal(ks[3], (d, d), 1.0 / np.sqrt(d)),
+    }
+    specs = {"mu": (None, "embed"), "wk": ("fsdp", "mlp"),
+             "wv": ("mlp", "fsdp"), "wr": ("fsdp", "embed")}
+    return params, specs
+
+
+def rwkv_channel_mix(params, x, x_prev):
+    dt = x.dtype
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = params["mu"].astype(dt)
+    xk = x + mu[0][None, None] * (shifted - x)
+    xr = x + mu[1][None, None] * (shifted - x)
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ params["wr"].astype(dt)) * (kk @ params["wv"].astype(dt))
+    return out, x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds, dtr, cw = cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    params = {
+        "in_proj": _init_normal(ks[0], (d, 2 * di), s),
+        "conv_w": _init_normal(ks[1], (cw, di), 0.5),
+        "x_dt_a": _init_normal(ks[2], (di, dtr), 1.0 / np.sqrt(di)),
+        "x_dt_b": _init_normal(ks[3], (dtr, di), 1.0 / np.sqrt(dtr)),
+        "x_bc": _init_normal(ks[4], (di, 2 * ds), 1.0 / np.sqrt(di)),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None],
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _init_normal(ks[5], (di, d), 1.0 / np.sqrt(di)),
+    }
+    specs = {
+        "in_proj": ("fsdp", "ssm_inner"),
+        "conv_w": ("conv", "ssm_inner"),
+        "x_dt_a": ("ssm_inner", "dt_rank"),
+        "x_dt_b": ("dt_rank", "ssm_inner"),
+        "x_bc": ("ssm_inner", None),
+        "a_log": ("ssm_inner", "ssm_state"),
+        "d_skip": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "fsdp"),
+    }
+    return params, specs
+
+
+def _mamba_core(params, xz, conv_tail):
+    """Shared projections; xz [B,T,2di]; conv_tail [B, cw-1, di]."""
+    dt_ = xz.dtype
+    di = params["out_proj"].shape[0]
+    x, z = xz[..., :di], xz[..., di:]
+    # causal conv over time with carried tail
+    xin = jnp.concatenate([conv_tail.astype(dt_), x], axis=1)   # [B, T+cw-1, di]
+    cw = params["conv_w"].shape[0]
+    conv = sum(xin[:, i:i + x.shape[1]] * params["conv_w"][i].astype(dt_)
+               for i in range(cw))
+    xc = jax.nn.silu(conv)
+    dt_lora = (xc @ params["x_dt_a"].astype(dt_)) @ params["x_dt_b"].astype(dt_)
+    dt_v = jax.nn.softplus(dt_lora.astype(jnp.float32) - 4.0)      # [B,T,di]
+    bc = xc @ params["x_bc"].astype(dt_)
+    ds = params["a_log"].shape[1]
+    B_t, C_t = bc[..., :ds].astype(jnp.float32), bc[..., ds:].astype(jnp.float32)
+    new_tail = xin[:, -(cw - 1):] if cw > 1 else xin[:, :0]
+    return x, z, xc, dt_v, B_t, C_t, new_tail
+
+
+def mamba_block(params, x_seq, conv_tail, state):
+    """x_seq [B,T,d]; conv_tail [B,cw-1,di]; state [B,di,ds] f32."""
+    dt_ = x_seq.dtype
+    xz = x_seq @ params["in_proj"].astype(dt_)
+    x, z, xc, dt_v, B_t, C_t, new_tail = _mamba_core(params, xz, conv_tail)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))              # [di, ds]
+
+    def step(h, inputs):
+        xt, dtt, Bt, Ct = inputs                                   # [B,di],[B,di],[B,ds],[B,ds]
+        decay = jnp.exp(dtt[..., None] * A[None])                  # [B,di,ds]
+        h = decay * h + (dtt * xt)[..., None] * Bt[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, Ct)
+        return h, y
+
+    xs = (xc.transpose(1, 0, 2).astype(jnp.float32),
+          dt_v.transpose(1, 0, 2), B_t.transpose(1, 0, 2), C_t.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)                      # ys [T,B,di]
+    y = ys.transpose(1, 0, 2).astype(dt_) + params["d_skip"].astype(dt_) * xc
+    out = (jax.nn.silu(z) * y) @ params["out_proj"].astype(dt_)
+    return out, new_tail, state
+
+
+def init_mamba_state(cfg, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    state = jnp.zeros((batch, di, cfg.ssm_state), jnp.float32)
+    tail = jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32)
+    return state, tail
+
+
+def init_rwkv_state(cfg, batch: int):
+    H, hd = cfg.num_heads, cfg.head_dim
+    wkv = jnp.zeros((batch, H, hd, hd), jnp.float32)
+    x_tm = jnp.zeros((batch, 1, cfg.d_model), jnp.float32)
+    x_cm = jnp.zeros((batch, 1, cfg.d_model), jnp.float32)
+    return wkv, x_tm, x_cm

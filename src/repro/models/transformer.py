@@ -1,0 +1,484 @@
+"""Unified model: one class covering all 10 assigned architecture families.
+
+API (everything returns/consumes explicit pytrees; no framework magic):
+  * ``init(rng) -> (params, specs)``           specs = logical-axes pytrees
+  * ``forward(params, batch, ctx) -> logits``  training / prefill pass
+  * ``loss(params, batch, ctx) -> (scalar, aux)``
+  * ``init_decode_state(batch, max_seq) -> (state, specs)``
+  * ``decode_step(params, tokens, state, ctx) -> (logits, state)``
+
+Layer stacks are homogeneous ``lax.scan``s over stacked parameters (single
+layer trace => 398B Jamba lowers/compiles on 512 devices in minutes, not
+hours) with full-block ``jax.checkpoint`` remat.  The hybrid (Jamba) stack
+scans over 8-layer *groups* (7 mamba + 1 attention, MoE every other FFN);
+encoder-decoder runs two stacks; VLM prepends stub patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .layers import (COMPUTE_DTYPE, _init_normal, apply_mlp, cross_entropy,
+                     embed, init_embedding, init_mlp, lm_logits, rms_norm)
+
+
+def _stacked_init(init_fn, key, n: int):
+    """vmap an init over n layer seeds -> stacked params + (shared) specs."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, specs = init_fn(key)
+    specs = jax.tree.map(lambda ax: ("layers",) + tuple(ax), specs,
+                         is_leaf=lambda x: isinstance(x, tuple) and all(
+                             isinstance(e, (str, type(None))) for e in x))
+    return params, specs
+
+
+def _norm_init():
+    return None  # placeholder; norms are created inline
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        keys = jax.random.split(rng, 8)
+        params: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+
+        params["embed"], specs["embed"] = init_embedding(
+            keys[0], cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _init_normal(
+                keys[1], (cfg.d_model, cfg.vocab_size), 1.0 / np.sqrt(cfg.d_model))
+            specs["lm_head"] = ("embed", "vocab")
+        params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        specs["final_norm"] = ("embed",)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            params["layers"], specs["layers"] = _stacked_init(
+                lambda k: self._init_block(k), keys[2], cfg.num_layers)
+            if cfg.family == "vlm":
+                params["patch_proj"] = _init_normal(
+                    keys[3], (cfg.d_model, cfg.d_model), 1.0 / np.sqrt(cfg.d_model))
+                specs["patch_proj"] = ("embed", "embed")
+        elif cfg.family == "ssm":
+            params["layers"], specs["layers"] = _stacked_init(
+                lambda k: self._init_rwkv_block(k), keys[2], cfg.num_layers)
+        elif cfg.family == "hybrid":
+            n_groups = cfg.num_layers // cfg.hybrid_group
+            params["groups"], specs["groups"] = _stacked_init(
+                lambda k: self._init_hybrid_group(k), keys[2], n_groups)
+        elif cfg.family == "encdec":
+            params["frame_proj"] = _init_normal(
+                keys[3], (cfg.encoder_d_model, cfg.d_model),
+                1.0 / np.sqrt(cfg.encoder_d_model))
+            specs["frame_proj"] = (None, "embed")
+            params["enc_layers"], specs["enc_layers"] = _stacked_init(
+                lambda k: self._init_enc_block(k), keys[4], cfg.encoder_layers)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            specs["enc_norm"] = ("embed",)
+            params["layers"], specs["layers"] = _stacked_init(
+                lambda k: self._init_dec_block(k), keys[5], cfg.num_layers)
+        else:
+            raise ValueError(cfg.family)
+        return params, specs
+
+    # block initializers ------------------------------------------------
+    def _init_block(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        a_params, a_specs = attn.init_attention(k1, cfg)
+        p = {"attn": a_params,
+             "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+             "norm2": jnp.zeros((cfg.d_model,), jnp.float32)}
+        s = {"attn": a_specs, "norm1": ("embed",), "norm2": ("embed",)}
+        # Homogeneous scan stacks => MoE-every-layer for the moe family
+        # (interleaved MoE lives in the hybrid group path).
+        if cfg.num_experts and cfg.moe_every == 1:
+            p["moe"], s["moe"] = moe_mod.init_moe(k2, cfg)
+        else:
+            p["mlp"], s["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_variant)
+        return p, s
+
+    def _init_rwkv_block(self, key):
+        k1, k2 = jax.random.split(key)
+        tm, tm_s = ssm.init_rwkv_time_mix(k1, self.cfg)
+        cm, cm_s = ssm.init_rwkv_channel_mix(k2, self.cfg)
+        d = self.cfg.d_model
+        p = {"tm": tm, "cm": cm,
+             "norm1": jnp.zeros((d,), jnp.float32),
+             "norm2": jnp.zeros((d,), jnp.float32)}
+        s = {"tm": tm_s, "cm": cm_s, "norm1": ("embed",), "norm2": ("embed",)}
+        return p, s
+
+    def _init_hybrid_group(self, key):
+        cfg = self.cfg
+        p, s = {}, {}
+        keys = jax.random.split(key, 2 * cfg.hybrid_group)
+        for i in range(cfg.hybrid_group):
+            if i == cfg.hybrid_attn_index:
+                p[f"mixer_{i}"], s[f"mixer_{i}"] = attn.init_attention(keys[2 * i], cfg)
+            else:
+                p[f"mixer_{i}"], s[f"mixer_{i}"] = ssm.init_mamba(keys[2 * i], cfg)
+            if cfg.num_experts and i % cfg.moe_every == cfg.moe_offset:
+                p[f"ffn_{i}"], s[f"ffn_{i}"] = moe_mod.init_moe(keys[2 * i + 1], cfg)
+            else:
+                p[f"ffn_{i}"], s[f"ffn_{i}"] = init_mlp(
+                    keys[2 * i + 1], cfg.d_model, cfg.d_ff, cfg.mlp_variant)
+            p[f"norm_a_{i}"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            p[f"norm_b_{i}"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            s[f"norm_a_{i}"] = ("embed",)
+            s[f"norm_b_{i}"] = ("embed",)
+        return p, s
+
+    def _init_enc_block(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        a, a_s = attn.init_attention(k1, cfg)
+        m, m_s = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_variant)
+        p = {"attn": a, "mlp": m,
+             "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+             "norm2": jnp.zeros((cfg.d_model,), jnp.float32)}
+        s = {"attn": a_s, "mlp": m_s, "norm1": ("embed",), "norm2": ("embed",)}
+        return p, s
+
+    def _init_dec_block(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        a, a_s = attn.init_attention(k1, cfg)
+        x, x_s = attn.init_cross_attention(k2, cfg)
+        m, m_s = init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_variant)
+        p = {"attn": a, "cross": x, "mlp": m,
+             "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+             "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+             "norm3": jnp.zeros((cfg.d_model,), jnp.float32)}
+        s = {"attn": a_s, "cross": x_s, "mlp": m_s,
+             "norm1": ("embed",), "norm2": ("embed",), "norm3": ("embed",)}
+        return p, s
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch, ctx=None, q_chunk=1024, k_chunk=1024):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, ctx)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(x.dtype) @ \
+                params["patch_proj"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            if ctx is not None:
+                x = ctx.c(x, ("batch", "seq", "embed"))
+
+        aux_total = jnp.zeros((), jnp.float32)
+        if cfg.family in ("dense", "moe", "vlm"):
+            x, aux_total = self._stack_forward(params["layers"], x, ctx,
+                                               q_chunk, k_chunk)
+        elif cfg.family == "ssm":
+            x = self._rwkv_forward(params["layers"], x, ctx)
+        elif cfg.family == "hybrid":
+            x, aux_total = self._hybrid_forward(params["groups"], x, ctx,
+                                                q_chunk, k_chunk)
+        elif cfg.family == "encdec":
+            enc = self._encode(params, batch["frames"], ctx)
+            x = self._decode_stack(params["layers"], x, enc, ctx, q_chunk, k_chunk)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = lm_logits(x, head, ctx)
+        return logits, aux_total
+
+    def _stack_forward(self, layers, x, ctx, q_chunk, k_chunk):
+        cfg = self.cfg
+
+        def block(x, layer):
+            h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+            x = x + attn.attention_block(layer["attn"], h, cfg, ctx,
+                                         q_chunk=q_chunk, k_chunk=k_chunk)
+            h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+            if "moe" in layer:
+                B, T, d = h.shape
+                y, aux = moe_mod.moe_ffn(layer["moe"], h.reshape(B * T, d), cfg, ctx)
+                y = y.reshape(B, T, d)
+            else:
+                y, aux = apply_mlp(layer["mlp"], h, cfg.mlp_variant, ctx), 0.0
+            return x + y, jnp.asarray(aux, jnp.float32)
+
+        block = jax.checkpoint(block, prevent_cse=False)
+
+        def scan_body(x, layer):
+            return block(x, layer)
+
+        x, auxs = jax.lax.scan(scan_body, x, layers)
+        return x, jnp.sum(auxs)
+
+    def _rwkv_forward(self, layers, x, ctx):
+        cfg = self.cfg
+        B = x.shape[0]
+
+        def block(x, layer):
+            wkv0, xtm0, xcm0 = ssm.init_rwkv_state(cfg, B)
+            h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+            o, _, _ = ssm.rwkv_time_mix(layer["tm"], h, xtm0.astype(h.dtype), wkv0)
+            x = x + o
+            h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+            o, _ = ssm.rwkv_channel_mix(layer["cm"], h, xcm0.astype(h.dtype))
+            return x + o, None
+
+        block = jax.checkpoint(block, prevent_cse=False)
+        x, _ = jax.lax.scan(block, x, layers)
+        return x
+
+    def _hybrid_forward(self, groups, x, ctx, q_chunk, k_chunk):
+        cfg = self.cfg
+        B = x.shape[0]
+
+        def group_block(x, g):
+            aux_sum = jnp.zeros((), jnp.float32)
+            for i in range(cfg.hybrid_group):
+                h = rms_norm(x, g[f"norm_a_{i}"], cfg.norm_eps)
+                if i == cfg.hybrid_attn_index:
+                    o = attn.attention_block(g[f"mixer_{i}"], h, cfg, ctx,
+                                             q_chunk=q_chunk, k_chunk=k_chunk)
+                else:
+                    st, tail = ssm.init_mamba_state(cfg, B)
+                    o, _, _ = ssm.mamba_block(g[f"mixer_{i}"], h, tail, st)
+                x = x + o
+                h = rms_norm(x, g[f"norm_b_{i}"], cfg.norm_eps)
+                if cfg.num_experts and i % cfg.moe_every == cfg.moe_offset:
+                    Bx, T, d = h.shape
+                    y, aux = moe_mod.moe_ffn(g[f"ffn_{i}"], h.reshape(Bx * T, d),
+                                             cfg, ctx)
+                    y = y.reshape(Bx, T, d)
+                    aux_sum = aux_sum + aux
+                else:
+                    y = apply_mlp(g[f"ffn_{i}"], h, cfg.mlp_variant, ctx)
+                x = x + y
+            return x, aux_sum
+
+        group_block = jax.checkpoint(group_block, prevent_cse=False)
+        x, auxs = jax.lax.scan(group_block, x, groups)
+        return x, jnp.sum(auxs)
+
+    def _encode(self, params, frames, ctx):
+        cfg = self.cfg
+        x = frames.astype(COMPUTE_DTYPE) @ params["frame_proj"].astype(COMPUTE_DTYPE)
+        S = x.shape[1]
+
+        def block(x, layer):
+            h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+            pos = jnp.arange(S)[None, :]
+            q, k, v = attn._project_qkv(layer["attn"], h, cfg, pos)
+            o = attn.chunked_attention(q, k, v, causal=False,
+                                       q_chunk=min(1024, S), k_chunk=min(1024, S))
+            x = x + attn._merge_heads(layer["attn"], o, h.dtype)
+            h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+            return x + apply_mlp(layer["mlp"], h, cfg.mlp_variant, ctx), None
+
+        block = jax.checkpoint(block, prevent_cse=False)
+        x, _ = jax.lax.scan(block, x, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _decode_stack(self, layers, x, enc, ctx, q_chunk, k_chunk):
+        cfg = self.cfg
+
+        def block(x, layer):
+            h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+            x = x + attn.attention_block(layer["attn"], h, cfg, ctx,
+                                         q_chunk=q_chunk, k_chunk=k_chunk)
+            h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+            ek, ev = attn.encode_kv(layer["cross"], enc, cfg)
+            x = x + attn.cross_attention(layer["cross"], h, ek, ev, cfg, ctx)
+            h = rms_norm(x, layer["norm3"], cfg.norm_eps)
+            return x + apply_mlp(layer["mlp"], h, cfg.mlp_variant, ctx), None
+
+        block = jax.checkpoint(block, prevent_cse=False)
+        x, _ = jax.lax.scan(block, x, layers)
+        return x
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, batch, ctx=None, q_chunk=1024, k_chunk=1024,
+             aux_weight: float = 0.01):
+        logits, aux = self.forward(params, batch, ctx, q_chunk, k_chunk)
+        labels = batch["labels"]
+        if self.cfg.family == "vlm":            # loss only on text positions
+            logits = logits[:, self.cfg.num_patches:]
+        ce = cross_entropy(logits, labels, batch.get("mask"))
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+    # --------------------------------------------------------------- decode
+    def init_decode_state(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        specs: Dict[str, Any] = {"pos": ()}
+        layout = attn.cache_layout(cfg, max_seq)
+        self._layout = layout
+        if cfg.family in ("dense", "moe", "vlm"):
+            kv, kv_specs = attn.init_kv_cache(cfg, cfg.num_layers, batch, layout)
+            state["kv"], specs["kv"] = kv, kv_specs
+            state["slot_pos"] = jnp.full((layout.size,), -1, jnp.int32)
+            specs["slot_pos"] = ("cache_seq",)
+        elif cfg.family == "ssm":
+            L, B = cfg.num_layers, batch
+            H, hd, d = cfg.num_heads, cfg.head_dim, cfg.d_model
+            state["wkv"] = jnp.zeros((L, B, H, hd, hd), jnp.float32)
+            state["x_tm"] = jnp.zeros((L, B, 1, d), jnp.float32)
+            state["x_cm"] = jnp.zeros((L, B, 1, d), jnp.float32)
+            specs["wkv"] = ("layers", "batch", "heads", "head_dim", None)
+            specs["x_tm"] = ("layers", "batch", None, "embed")
+            specs["x_cm"] = ("layers", "batch", None, "embed")
+        elif cfg.family == "hybrid":
+            G = cfg.num_layers // cfg.hybrid_group
+            M = cfg.hybrid_group - 1                  # mamba layers per group
+            di = cfg.ssm_expand * cfg.d_model
+            kv, kv_specs = attn.init_kv_cache(cfg, G, batch, layout)
+            state["kv"], specs["kv"] = kv, kv_specs
+            state["slot_pos"] = jnp.full((layout.size,), -1, jnp.int32)
+            specs["slot_pos"] = ("cache_seq",)
+            state["mamba_h"] = jnp.zeros((G, M, batch, di, cfg.ssm_state),
+                                         jnp.float32)
+            state["conv_tail"] = jnp.zeros((G, M, batch, cfg.ssm_conv - 1, di),
+                                           jnp.float32)
+            specs["mamba_h"] = ("groups", None, "batch", "ssm_inner", "ssm_state")
+            specs["conv_tail"] = ("groups", None, "batch", "conv", "ssm_inner")
+        elif cfg.family == "encdec":
+            kv, kv_specs = attn.init_kv_cache(cfg, cfg.num_layers, batch, layout)
+            state["kv"], specs["kv"] = kv, kv_specs
+            state["slot_pos"] = jnp.full((layout.size,), -1, jnp.int32)
+            specs["slot_pos"] = ("cache_seq",)
+            K, hd = cfg.num_kv_heads, cfg.head_dim
+            state["cross_k"] = jnp.zeros(
+                (cfg.num_layers, batch, cfg.encoder_seq, K, hd), COMPUTE_DTYPE)
+            state["cross_v"] = jnp.zeros_like(state["cross_k"])
+            specs["cross_k"] = ("layers", "batch", "seq", "kv_heads", "head_dim")
+            specs["cross_v"] = specs["cross_k"]
+        return state, specs
+
+    def decode_step(self, params, tokens, state, ctx=None, max_seq: int = 0):
+        cfg = self.cfg
+        pos = state["pos"]
+        x = embed(params["embed"], tokens, None)
+        if ctx is not None:
+            x = ctx.c(x, ("batch", None, "embed"))
+        layout = getattr(self, "_layout", None)
+        if layout is None:
+            if "slot_pos" in state:
+                size = int(state["slot_pos"].shape[0])
+                layout = attn.CacheLayout(
+                    size=size,
+                    windowed=bool(cfg.sliding_window) and size == cfg.sliding_window)
+            else:
+                layout = attn.cache_layout(cfg, max_seq)
+        new_state = dict(state)
+
+        if cfg.family in ("dense", "moe", "vlm", "encdec"):
+            slot = pos % layout.size if layout.windowed else pos
+            slot_pos = state["slot_pos"].at[slot].set(pos)
+            new_state["slot_pos"] = slot_pos
+
+            def block(x, inputs):
+                if cfg.family == "encdec":
+                    layer, kc, vc, ck, cv = inputs
+                else:
+                    layer, kc, vc = inputs
+                h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+                o, kc, vc = attn.decode_attention(
+                    layer["attn"], h, cfg, kc, vc, slot_pos, pos, layout, ctx)
+                x = x + o
+                if cfg.family == "encdec":
+                    h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+                    x = x + attn.cross_attention(layer["cross"], h, ck, cv, cfg)
+                    h = rms_norm(x, layer["norm3"], cfg.norm_eps)
+                    x = x + apply_mlp(layer["mlp"], h, cfg.mlp_variant, None)
+                else:
+                    h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+                    if "moe" in layer:
+                        B = h.shape[0]
+                        y, _ = moe_mod.moe_ffn(layer["moe"],
+                                               h.reshape(B, cfg.d_model), cfg, ctx)
+                        x = x + y.reshape(B, 1, cfg.d_model)
+                    else:
+                        x = x + apply_mlp(layer["mlp"], h, cfg.mlp_variant, None)
+                return x, (kc, vc)
+
+            if cfg.family == "encdec":
+                xs = (params["layers"], state["kv"]["k"], state["kv"]["v"],
+                      state["cross_k"], state["cross_v"])
+            else:
+                xs = (params["layers"], state["kv"]["k"], state["kv"]["v"])
+            x, (k_new, v_new) = jax.lax.scan(block, x, xs)
+            new_state["kv"] = {"k": k_new, "v": v_new}
+
+        elif cfg.family == "ssm":
+            def block(x, inputs):
+                layer, wkv, xtm, xcm = inputs
+                h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+                o, xtm_new, wkv = ssm.rwkv_time_mix(
+                    layer["tm"], h, xtm.astype(h.dtype), wkv)
+                x = x + o
+                h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+                o, xcm_new = ssm.rwkv_channel_mix(layer["cm"], h, xcm.astype(h.dtype))
+                x = x + o
+                return x, (wkv, xtm_new.astype(jnp.float32),
+                           xcm_new.astype(jnp.float32))
+
+            x, (wkv, xtm, xcm) = jax.lax.scan(
+                block, x, (params["layers"], state["wkv"], state["x_tm"],
+                           state["x_cm"]))
+            new_state.update({"wkv": wkv, "x_tm": xtm, "x_cm": xcm})
+
+        elif cfg.family == "hybrid":
+            slot = pos % layout.size if layout.windowed else pos
+            slot_pos = state["slot_pos"].at[slot].set(pos)
+            new_state["slot_pos"] = slot_pos
+
+            def group_block(x, inputs):
+                g, kc, vc, mh, tails = inputs
+                mi = 0
+                new_mh, new_tails = [], []
+                for i in range(cfg.hybrid_group):
+                    h = rms_norm(x, g[f"norm_a_{i}"], cfg.norm_eps)
+                    if i == cfg.hybrid_attn_index:
+                        o, kc, vc = attn.decode_attention(
+                            g[f"mixer_{i}"], h, cfg, kc, vc, slot_pos, pos,
+                            layout, ctx)
+                    else:
+                        o, tail, hst = ssm.mamba_block(
+                            g[f"mixer_{i}"], h, tails[mi], mh[mi])
+                        new_mh.append(hst)
+                        new_tails.append(tail.astype(jnp.float32))
+                        mi += 1
+                    x = x + o
+                    h = rms_norm(x, g[f"norm_b_{i}"], cfg.norm_eps)
+                    if cfg.num_experts and i % cfg.moe_every == cfg.moe_offset:
+                        B = h.shape[0]
+                        y, _ = moe_mod.moe_ffn(g[f"ffn_{i}"],
+                                               h.reshape(B, cfg.d_model), cfg, ctx)
+                        x = x + y.reshape(B, 1, cfg.d_model)
+                    else:
+                        x = x + apply_mlp(g[f"ffn_{i}"], h, cfg.mlp_variant, None)
+                return x, (kc, vc, jnp.stack(new_mh), jnp.stack(new_tails))
+
+            x, (k_new, v_new, mh, tails) = jax.lax.scan(
+                group_block, x,
+                (params["groups"], state["kv"]["k"], state["kv"]["v"],
+                 state["mamba_h"], state["conv_tail"]))
+            new_state["kv"] = {"k": k_new, "v": v_new}
+            new_state["mamba_h"] = mh
+            new_state["conv_tail"] = tails
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = lm_logits(x, head, None)
+        new_state["pos"] = pos + 1
+        return logits, new_state

@@ -1,0 +1,5 @@
+"""Optimizer substrate: memory-efficient AdamW + sketch-based compression."""
+from . import adamw
+from .adamw import AdamWConfig
+
+__all__ = ["adamw", "AdamWConfig"]

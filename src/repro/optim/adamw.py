@@ -1,0 +1,96 @@
+"""Memory-efficient AdamW with warmup-cosine schedule and global-norm clipping.
+
+Production memory layout for 100B+ models: a single fp32 master copy of the
+parameters (no separate bf16 weight copy; compute casts at use) plus moments
+in a configurable dtype (bf16 moments halve optimizer HBM -- the knob that
+lets 398B Jamba train on 512 v5e chips; see EXPERIMENTS.md §Dry-run).
+Optimizer state inherits the parameters' logical sharding (FSDP/ZeRO comes
+for free from the same rule table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "bfloat16"   # bf16 moments: 4 bytes/param saved
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs):
+    """Moments share the parameters' logical axes; step is replicated."""
+    return {"mu": param_specs, "nu": param_specs, "step": ()}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step.  params fp32 master; grads any float dtype."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu_f = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_f = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        mu_hat = mu_f / bc1
+        nu_hat = nu_f / bc2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                mu_f.astype(mdt), nu_f.astype(mdt))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}

@@ -1,0 +1,6 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e constants)."""
+from .hlo import RooflineCounts, analyze_hlo
+from .terms import HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, model_flops_for
+
+__all__ = ["RooflineCounts", "analyze_hlo", "Roofline", "model_flops_for",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

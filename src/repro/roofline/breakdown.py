@@ -1,0 +1,104 @@
+"""Traffic/FLOP breakdown of a lowered cell: the §Perf profiling tool.
+
+Since the container has no TPU to trace, the "profile" is the compiled HLO:
+this module attributes corrected HBM traffic, FLOPs, and collective bytes to
+individual instructions (x while-loop multipliers) and prints the top
+contributors -- the napkin-math input for every hillclimb hypothesis.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Tuple
+
+from . import hlo as H
+
+
+def instruction_breakdown(hlo_text: str, top: int = 15):
+    comps = H.parse_computations(hlo_text)
+    entry = H.find_entry(hlo_text, comps)
+    mult = H.computation_multipliers(comps, entry)
+    sym = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            sym[ins.name] = H.shape_bytes(ins.shape)
+    fusion_bodies = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op == "fusion":
+                mc = re.search(r"calls=\{?%?([\w\.\-]+)", ins.line)
+                if mc:
+                    fusion_bodies.add(mc.group(1))
+
+    traffic_items: List[Tuple[float, int, str, str, str]] = []
+    coll_items: List[Tuple[float, int, str, str]] = []
+    flop_items: List[Tuple[float, int, str, str]] = []
+
+    for c in comps.values():
+        m = mult.get(c.name, 0)
+        if m == 0:
+            continue
+        in_fusion = c.name in fusion_bodies
+        for ins in c.instrs:
+            if ins.op in H._SKIP_OPS:
+                continue
+            operand_names = H._OPERAND_RE.findall(ins.args)
+            op_bytes = sum(sym.get(o, 0) for o in operand_names)
+            out_bytes = H.shape_bytes(ins.shape)
+
+            if ins.op == "dot":
+                out_elems, _ = H.shape_elems_and_dims(ins.shape)
+                md = H._DOT_DIMS_RE.search(ins.line)
+                kdim = 1
+                if md and operand_names:
+                    lhs_shape = next((i.shape for cc in comps.values()
+                                      for i in cc.instrs
+                                      if i.name == operand_names[0]), "")
+                    _, dims = H.shape_elems_and_dims(lhs_shape)
+                    for ci in md.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            kdim *= dims[int(ci)]
+                flop_items.append((m * 2.0 * out_elems * max(kdim, 1), m,
+                                   c.name, ins.line.strip()[:110]))
+            if in_fusion:
+                continue
+            if ins.op in H._SLICE_READS:
+                traffic = 2 * out_bytes
+            elif ins.op in H._SLICE_WRITES:
+                traffic = 2 * (sym.get(operand_names[1], 0)
+                               if len(operand_names) > 1 else 0)
+            elif ins.op == "fusion":
+                mc = re.search(r"calls=\{?%?([\w\.\-]+)", ins.line)
+                fb = H._fusion_operand_bytes(comps, mc.group(1), operand_names,
+                                             sym) if mc else None
+                traffic = (fb if fb is not None else op_bytes) + out_bytes
+            else:
+                traffic = op_bytes + out_bytes
+            traffic_items.append((m * traffic, m, ins.op, c.name,
+                                  ins.line.strip()[:110]))
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in H.COLLECTIVE_OPS and not ins.op.endswith("-done"):
+                coll_items.append((m * op_bytes, m, base,
+                                   ins.line.strip()[:130]))
+
+    traffic_items.sort(reverse=True)
+    coll_items.sort(reverse=True)
+    flop_items.sort(reverse=True)
+    return {"traffic": traffic_items[:top], "collectives": coll_items[:top],
+            "flops": flop_items[:top],
+            "traffic_total": sum(t[0] for t in traffic_items),
+            "coll_total": sum(t[0] for t in coll_items),
+            "flop_total": sum(t[0] for t in flop_items)}
+
+
+def print_breakdown(hlo_text: str, top: int = 12):
+    b = instruction_breakdown(hlo_text, top)
+    gb = 2.0 ** 30
+    print(f"== HBM traffic total {b['traffic_total']/gb:.0f} GB/dev ==")
+    for t, m, op, cn, line in b["traffic"]:
+        print(f"  {t/gb:8.1f}GB x{m:<5} {op:<12} {line[:90]}")
+    print(f"== collectives total {b['coll_total']/gb:.1f} GB/dev ==")
+    for t, m, kind, line in b["collectives"]:
+        print(f"  {t/gb:8.1f}GB x{m:<5} {kind:<18} {line[:90]}")
+    print(f"== dot FLOPs total {b['flop_total']:.2e}/dev ==")
+    for t, m, cn, line in b["flops"]:
+        print(f"  {t:10.2e} x{m:<5} {line[:90]}")

@@ -1,0 +1,82 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline tables from cell JSONs."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional
+
+
+def load_records(dirpath) -> List[dict]:
+    recs = []
+    for f in sorted(Path(dirpath).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def roofline_table(recs: List[dict], multi_pod: Optional[bool] = None) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful | roofline_frac | peak GB/dev | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        if multi_pod is not None and r["multi_pod"] != multi_pod:
+            continue
+        rl, mem = r["roofline"], r["memory"]
+        peak = mem["peak_bytes_per_device"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{'2x16x16' if r['multi_pod'] else '16x16'} | "
+            f"{rl['compute_s']:.3f} | {rl['memory_s']:.3f} | "
+            f"{rl['collective_s']:.3f} | {rl['dominant']} | "
+            f"{rl['useful_ratio']:.2f} | {rl['roofline_fraction']:.4f} | "
+            f"{_fmt_bytes(peak)} | {'yes' if peak < 16 * 2**30 else 'NO'} |")
+    return "\n".join(lines)
+
+
+def skip_table(recs: List[dict]) -> str:
+    lines = ["| arch | shape | reason |", "|---|---|---|"]
+    seen = set()
+    for r in recs:
+        if r["status"] == "skipped" and (r["arch"], r["shape"]) not in seen:
+            seen.add((r["arch"], r["shape"]))
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['reason']} |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(recs: List[dict]) -> str:
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skipped = sum(1 for r in recs if r["status"] == "skipped")
+    err = sum(1 for r in recs if r["status"] == "error")
+    comp = [r["compile_seconds"] for r in recs if r["status"] == "ok"]
+    return (f"{ok} cells lower+compile OK, {skipped} skipped "
+            f"(per-spec inapplicable), {err} errors; compile time "
+            f"min/median/max = {min(comp):.0f}/{sorted(comp)[len(comp)//2]:.0f}/"
+            f"{max(comp):.0f}s per cell on one CPU core with 512 host devices.")
+
+
+def collective_detail(recs: List[dict], arch: str, shape: str,
+                      multi_pod=False) -> str:
+    for r in recs:
+        if (r["arch"], r["shape"], r["multi_pod"]) == (arch, shape, multi_pod) \
+                and r["status"] == "ok":
+            kinds = r["hlo_counts"]["collectives_by_kind"]
+            return ", ".join(f"{k}: {v/2**30:.1f} GB/dev"
+                             for k, v in sorted(kinds.items(),
+                                                key=lambda kv: -kv[1]))
+    return "n/a"
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load_records(d)
+    print(dryrun_summary(recs))
+    print()
+    print(roofline_table(recs, multi_pod=False))

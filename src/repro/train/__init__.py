@@ -1,0 +1,4 @@
+"""Training runtime: step factory, telemetry, trainer loop."""
+from .step import make_eval_step, make_train_step
+
+__all__ = ["make_train_step", "make_eval_step"]

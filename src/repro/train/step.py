@@ -1,0 +1,96 @@
+"""Training step factory: microbatched gradient accumulation, remat, AdamW.
+
+The step is a single pjit-compiled function over globally-sharded arrays:
+  * batch arrives pre-reshaped [microbatches, global_batch/microbatches, ...]
+    (explicit, so the per-microbatch data-parallel sharding is visible),
+  * gradients accumulate in f32 across a ``lax.scan`` over microbatches --
+    each microbatch's backward ends in reduce-scatter/all-reduce collectives
+    that XLA's latency-hiding scheduler overlaps with the next microbatch's
+    compute (the standard accumulation-overlap trick),
+  * AdamW with fp32 master params and bf16 moments (see repro.optim.adamw).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.distributed.sharding import ShardingCtx
+
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig,
+                    ctx: Optional[ShardingCtx] = None,
+                    q_chunk: int = 1024, k_chunk: int = 1024,
+                    aux_weight: float = 0.01,
+                    param_logical=None,
+                    accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``batch`` leaves are [M, B/M, ...] (M = microbatches; M=1 supported).
+
+    ``param_logical``: optional logical-axes pytree matching ``params``.
+    When given (and ctx is set), each microbatch's gradients are constrained
+    to the parameters' sharding BEFORE accumulation -- without it GSPMD
+    all-reduces full-size f32 gradient tensors across the data axis every
+    microbatch (measured 1.1 TB/device/step on Mixtral train_4k); with it
+    the reduction becomes a reduce-scatter into the FSDP shards.
+    ``accum_dtype``: gradient accumulator dtype (bf16 halves its traffic).
+    """
+
+    def micro_loss(params, mb):
+        loss, parts = model.loss(params, mb, ctx, q_chunk=q_chunk,
+                                 k_chunk=k_chunk, aux_weight=aux_weight)
+        return loss
+
+    def constrain_grads(grads):
+        if ctx is None or param_logical is None:
+            return grads
+        return jax.tree.map(
+            lambda g, l: ctx.c(g, l), grads, param_logical,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    def train_step(params, opt_state, batch):
+        M = jax.tree.leaves(batch)[0].shape[0]
+
+        def one_micro(params, mb):
+            loss, grads = jax.value_and_grad(micro_loss)(params, mb)
+            return loss, constrain_grads(grads)
+
+        if M == 1:
+            mb = jax.tree.map(lambda x: x[0], batch)
+            loss, grads = one_micro(params, mb)
+        else:
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                loss, grads = one_micro(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), g_acc, grads)
+                g_acc = constrain_grads(g_acc)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            g0 = constrain_grads(g0)
+            (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), batch)
+            grads = jax.tree.map(lambda g: g / M, g_sum)
+            loss = l_sum / M
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, opt_cfg.clip_norm)
+        new_params, new_opt = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": adamw.schedule(opt_cfg, new_opt["step"]),
+                   "step": new_opt["step"]}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model, ctx=None, q_chunk: int = 1024, k_chunk: int = 1024):
+    def eval_step(params, batch):
+        loss, parts = model.loss(params, batch, ctx,
+                                 q_chunk=q_chunk, k_chunk=k_chunk)
+        return {"loss": loss, **parts}
+    return eval_step

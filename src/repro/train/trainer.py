@@ -1,0 +1,120 @@
+"""Production training loop: pipeline + pjit step + checkpoint + FT hooks.
+
+Composes every substrate layer: deterministic resumable data, microbatched
+train step, async atomic checkpoints, preemption handling, heartbeat/
+straggler monitors, and sketch-based gradient telemetry.  Runs identically
+on the CPU host mesh (tests, examples) and the production mesh (dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.sharding import ShardingCtx, make_rules
+from repro.ft import HeartbeatRegistry, PreemptionHandler, StragglerDetector
+from repro.models import Model
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq: int = 128
+    microbatches: int = 1
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, tcfg: TrainerConfig,
+                 mesh=None, rules=None,
+                 log_fn: Callable[[str], None] = print):
+        self.model_cfg = model_cfg
+        self.tcfg = tcfg
+        self.model = Model(model_cfg)
+        self.mesh = mesh
+        self.ctx = ShardingCtx(mesh, rules or make_rules()) if mesh else None
+        self.log = log_fn
+        self.preemption = PreemptionHandler()
+        self.heartbeats = HeartbeatRegistry(num_hosts=1, timeout=600)
+        self.stragglers = StragglerDetector(num_hosts=1)
+        self._ckpt = (AsyncCheckpointer(tcfg.ckpt_dir)
+                      if tcfg.ckpt_dir else None)
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        params, specs = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+        opt_state = adamw.init_opt_state(params, self.tcfg.opt)
+        return params, opt_state
+
+    def maybe_restore(self, params, opt_state):
+        start = 0
+        if self._ckpt is not None:
+            step = latest_step(self.tcfg.ckpt_dir)
+            if step is not None:
+                (params, opt_state), extra = restore(
+                    self.tcfg.ckpt_dir, step, (params, opt_state))
+                start = int(extra.get("data_step", step))
+                self.log(f"[trainer] restored checkpoint step={step}")
+        return params, opt_state, start
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, list]:
+        t = self.tcfg
+        params, opt_state = self.init_state()
+        params, opt_state, start_step = self.maybe_restore(params, opt_state)
+
+        step_fn = make_train_step(self.model, t.opt, self.ctx,
+                                  q_chunk=min(1024, t.seq),
+                                  k_chunk=min(1024, t.seq))
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        pipe = TokenPipeline(seed=t.seed, global_batch=t.global_batch,
+                             seq=t.seq, vocab=self.model_cfg.vocab_size,
+                             microbatches=t.microbatches,
+                             start_step=start_step)
+        history = {"loss": [], "step_time": [], "step": []}
+        try:
+            for i in range(start_step, t.steps):
+                batch = next(pipe)
+                data_step = batch.pop("step")
+                if t.microbatches == 1:
+                    batch = {k: v[None] for k, v in batch.items()}
+                t0 = time.time()
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                history["loss"].append(loss)
+                history["step_time"].append(dt)
+                history["step"].append(i)
+                self.heartbeats.post(0, i)
+                self.stragglers.record(0, dt)
+                if i % t.log_every == 0:
+                    self.log(f"[trainer] step={i} loss={loss:.4f} "
+                             f"dt={dt*1e3:.0f}ms lr={float(metrics['lr']):.2e}")
+                want_ckpt = self._ckpt is not None and (
+                    (i + 1) % t.ckpt_every == 0 or self.preemption.should_save()
+                    or i + 1 == t.steps)
+                if want_ckpt:
+                    self._ckpt.save(i + 1, (params, opt_state),
+                                    extra={"data_step": i + 1})
+                if self.preemption.should_save():
+                    self.log("[trainer] preemption requested; checkpointed and exiting")
+                    break
+        finally:
+            pipe.close()
+            if self._ckpt is not None:
+                self._ckpt.wait()
+        return history

@@ -1,0 +1,437 @@
+"""Unit + property tests for the sketching core (the paper's Algorithms 1-5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ICWS, JL, KMV, MERSENNE_P, CountSketch, MinHash,
+                        SparseVec, WeightedMinHash, fact1_bound, inner_fast,
+                        progression_min, progression_min_bruteforce,
+                        round_counts, round_unit, sketch_bruteforce,
+                        stack_icws, stack_mh, stack_wmh, theorem2_bound)
+from repro.core.hashing import AffineHashFamily, PairHashFamily
+
+
+# ---------------------------------------------------------------------------
+# hashing
+# ---------------------------------------------------------------------------
+def test_affine_hash_range_and_determinism():
+    fam = AffineHashFamily.create(16, seed=3)
+    x = np.arange(1000, dtype=np.int64)
+    h = fam.hash_ints(x)
+    assert h.shape == (16, 1000)
+    assert h.min() >= 0 and h.max() < MERSENNE_P
+    fam2 = AffineHashFamily.create(16, seed=3)
+    assert np.array_equal(h, fam2.hash_ints(x))
+    fam3 = AffineHashFamily.create(16, seed=4)
+    assert not np.array_equal(h, fam3.hash_ints(x))
+
+
+def test_pairhash_progression_structure():
+    """h(i, j) must equal start(i) + j*b mod p — the structure progmin exploits."""
+    fam = PairHashFamily.create(8, seed=11)
+    i = 12345
+    js = np.arange(50, dtype=np.int64)
+    brute = fam.hash_pairs_bruteforce(i, js)
+    starts = fam.block_starts(np.array([i]))[:, 0]
+    expect = (starts[:, None] + fam.b[:, None] * js[None, :]) % MERSENNE_P
+    assert np.array_equal(brute, expect)
+
+
+def test_hash_uniformity_rough():
+    fam = AffineHashFamily.create(4, seed=0)
+    u = fam.hash_unit(np.arange(20000, dtype=np.int64))
+    assert abs(u.mean() - 0.5) < 0.02
+    assert abs(np.mean(u < 0.25) - 0.25) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# progression_min: exactness (hypothesis property test)
+# ---------------------------------------------------------------------------
+@given(st.integers(min_value=2, max_value=2**31 - 1), st.data())
+@settings(max_examples=300, deadline=None)
+def test_progmin_matches_bruteforce(m, data):
+    a = data.draw(st.integers(min_value=0, max_value=m - 1))
+    b = data.draw(st.integers(min_value=0, max_value=m - 1))
+    n = data.draw(st.integers(min_value=1, max_value=3000))
+    fast = int(progression_min(a, b, m, n).ravel()[0])
+    assert fast == progression_min_bruteforce(a, b, m, n)
+
+
+def test_progmin_adversarial_small_moduli():
+    """Exhaustive over small moduli — catches off-by-one in both branches."""
+    for m in range(2, 18):
+        for a in range(m):
+            for b in range(m):
+                for n in (1, 2, 3, m, 2 * m + 1):
+                    fast = int(progression_min(a, b, m, n).ravel()[0])
+                    assert fast == progression_min_bruteforce(a, b, m, n), (a, b, m, n)
+
+
+def test_progmin_large_n():
+    # n ~ L = 1e7 with p = 2^31-1: the production regime.
+    p = int(MERSENNE_P)
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        a, b = int(rng.integers(0, p)), int(rng.integers(0, p))
+        n = int(rng.integers(10**6, 10**7))
+        v = int(progression_min(a, b, p, n).ravel()[0])
+        # With ~n samples of a ~uniform progression the min is ~p/n: sanity band.
+        assert 0 <= v < p
+        assert v <= 50 * (p // max(n, 1) + 1) or a == 0
+
+
+# ---------------------------------------------------------------------------
+# rounding (Algorithm 4)
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(min_value=-100, max_value=100,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=60))
+@settings(max_examples=200, deadline=None)
+def test_round_counts_invariants(vals):
+    v = np.array(vals)
+    if np.linalg.norm(v) < 1e-9:
+        return
+    z = v / np.linalg.norm(v)
+    L = 4096
+    k = round_counts(z, L)
+    assert k.sum() == L                      # exactly unit norm after rounding
+    assert (k >= 0).all()
+    zt = round_unit(z, L)
+    assert np.allclose(np.sum(zt * zt), 1.0)  # unit vector out
+    assert np.all(np.sign(zt[zt != 0]) == np.sign(z[zt != 0]))  # sign preserved
+    # every squared entry an integer multiple of 1/L
+    assert np.allclose(zt * zt * L, np.round(zt * zt * L), atol=1e-6)
+
+
+def test_round_counts_only_argmax_rounds_up():
+    z = np.array([0.9, 0.3, np.sqrt(1 - 0.81 - 0.09)])
+    z = z / np.linalg.norm(z)
+    L = 1000
+    k = round_counts(z, L)
+    down = np.floor(z * z * L).astype(np.int64)
+    bumped = np.nonzero(k != down)[0]
+    assert len(bumped) <= 1
+    if len(bumped) == 1:
+        assert bumped[0] == int(np.argmax(np.abs(z)))
+
+
+# ---------------------------------------------------------------------------
+# WMH: bit-exact equivalence with the extended-domain brute force
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,L,n,density", [(0, 257, 40, 0.5), (1, 1000, 25, 0.3),
+                                              (2, 64, 10, 1.0), (3, 4096, 60, 0.2)])
+def test_wmh_fast_path_bit_exact(seed, L, n, density):
+    rng = np.random.default_rng(seed)
+    wmh = WeightedMinHash(m=24, seed=seed, L=L)
+    a = rng.normal(size=n) * (rng.random(n) < density)
+    if not a.any():
+        a[0] = 1.0
+    v = SparseVec.from_dense(a)
+    fast, slow = wmh.sketch(v), sketch_bruteforce(wmh, v)
+    assert np.array_equal(fast.hash_mins, slow.hash_mins)
+    assert np.allclose(fast.values, slow.values)
+
+
+def test_wmh_collision_rate_matches_weighted_jaccard():
+    """Fact 5(1): collision prob == weighted Jaccard of rounded squared entries."""
+    rng = np.random.default_rng(3)
+    n = 100
+    a = rng.normal(size=n) * (rng.random(n) < 0.5)
+    b = rng.normal(size=n) * (rng.random(n) < 0.5)
+    L = 10**6
+    wmh = WeightedMinHash(m=4000, seed=9, L=L)
+    sa = wmh.sketch(SparseVec.from_dense(a))
+    sb = wmh.sketch(SparseVec.from_dense(b))
+    rate = np.mean(sa.hash_mins == sb.hash_mins)
+    za = round_unit(a / np.linalg.norm(a), L) ** 2
+    zb = round_unit(b / np.linalg.norm(b), L) ** 2
+    jbar = np.minimum(za, zb).sum() / np.maximum(za, zb).sum()
+    assert abs(rate - jbar) < 4.0 / np.sqrt(4000) + 0.01
+
+
+def test_wmh_union_estimator_accuracy():
+    """Lemma 1 via Algorithm 5 line 2: M~ ~= sum max(a~^2, b~^2)."""
+    rng = np.random.default_rng(4)
+    n = 200
+    a = rng.normal(size=n) * (rng.random(n) < 0.6)
+    b = rng.normal(size=n) * (rng.random(n) < 0.6)
+    L = 10**6
+    m = 3000
+    wmh = WeightedMinHash(m=m, seed=2, L=L)
+    sa, sb = wmh.sketch(SparseVec.from_dense(a)), wmh.sketch(SparseVec.from_dense(b))
+    hmin = np.minimum(sa.hash_mins, sb.hash_mins).astype(np.float64) / float(MERSENNE_P)
+    m_tilde = (m / hmin.sum() - 1.0) / L
+    za = round_unit(a / np.linalg.norm(a), L) ** 2
+    zb = round_unit(b / np.linalg.norm(b), L) ** 2
+    m_true = np.maximum(za, zb).sum()
+    assert abs(m_tilde - m_true) / m_true < 0.15
+
+
+def _sparse_pair(rng, n=1500, nnz=300, overlap=0.2, outliers=True):
+    """The paper's synthetic protocol (Section 5.1), parameterized."""
+    n_ov = int(overlap * nnz)
+    idx = rng.choice(n, size=2 * nnz - n_ov, replace=False)
+    ia = idx[:nnz]
+    ib = np.concatenate([idx[:n_ov], idx[nnz:]])
+    def vals(k):
+        v = rng.uniform(-1, 1, size=k)
+        if outliers:
+            out = rng.random(k) < 0.1
+            v[out] = rng.uniform(20, 30, size=out.sum())
+        return v
+    a, b = np.zeros(n), np.zeros(n)
+    a[ia], b[ib] = vals(nnz), vals(len(ib))
+    return SparseVec.from_dense(a), SparseVec.from_dense(b)
+
+
+def test_wmh_beats_fact1_bound_statistically():
+    """Theorem 2 in practice: WMH error well under eps*||a||*||b|| at low overlap."""
+    rng = np.random.default_rng(11)
+    m = 400
+    wmh = WeightedMinHash(m=m, seed=5, L=10**7)
+    errs, t2, f1 = [], [], []
+    for _ in range(12):
+        va, vb = _sparse_pair(rng, overlap=0.05)
+        est = wmh.estimate(wmh.sketch(va), wmh.sketch(vb))
+        errs.append(abs(est - inner_fast(va, vb)))
+        t2.append(theorem2_bound(va, vb))
+        f1.append(fact1_bound(va, vb))
+    med = np.median(errs)
+    # eps ~ 1/sqrt(m); allow generous constants, but the Fact-1 scale must be beaten.
+    assert med < 3.0 / np.sqrt(m) * np.median(t2)
+    assert med < 0.5 / np.sqrt(m) * np.median(f1)
+
+
+def test_wmh_estimate_unbiased_statistically():
+    rng = np.random.default_rng(21)
+    va, vb = _sparse_pair(rng, n=400, nnz=80, overlap=0.3)
+    true = inner_fast(va, vb)
+    ests = []
+    for seed in range(30):
+        w = WeightedMinHash(m=128, seed=seed, L=10**6)
+        ests.append(w.estimate(w.sketch(va), w.sketch(vb)))
+    mean = np.mean(ests)
+    spread = np.std(ests) / np.sqrt(len(ests))
+    assert abs(mean - true) < 4 * spread + 0.05 * abs(true)
+
+
+def test_wmh_identical_vectors():
+    rng = np.random.default_rng(8)
+    a = rng.normal(size=50)
+    w = WeightedMinHash(m=512, seed=0, L=10**6)
+    v = SparseVec.from_dense(a)
+    s = w.sketch(v)
+    est = w.estimate(s, s)
+    true = float(np.dot(a, a))
+    assert abs(est - true) / true < 0.2  # all m samples collide; only M~ noise
+
+
+def test_wmh_zero_and_disjoint():
+    w = WeightedMinHash(m=64, seed=0, L=1000)
+    z = SparseVec.from_dense(np.zeros(10))
+    a = SparseVec.from_dense(np.eye(10)[0])
+    b = SparseVec.from_dense(np.eye(10)[5])
+    assert w.estimate(w.sketch(z), w.sketch(a)) == 0.0
+    assert abs(w.estimate(w.sketch(a), w.sketch(b))) < 1e-9  # no collisions
+
+
+def test_wmh_batch_matches_single():
+    rng = np.random.default_rng(13)
+    w = WeightedMinHash(m=64, seed=1, L=10**5)
+    pairs = [_sparse_pair(rng, n=300, nnz=60, overlap=0.4) for _ in range(5)]
+    A = stack_wmh([w.sketch(a) for a, _ in pairs])
+    B = stack_wmh([w.sketch(b) for _, b in pairs])
+    batch = w.estimate_batch(A, B)
+    single = [w.estimate(w.sketch(a), w.sketch(b)) for a, b in pairs]
+    assert np.allclose(batch, single)
+
+
+# ---------------------------------------------------------------------------
+# MinHash (Algorithms 1-2)
+# ---------------------------------------------------------------------------
+def test_minhash_collision_rate_is_jaccard():
+    rng = np.random.default_rng(2)
+    n = 400
+    a = (rng.random(n) < 0.5).astype(float)
+    b = (rng.random(n) < 0.5).astype(float)
+    mh = MinHash(m=4000, seed=1)
+    sa, sb = mh.sketch(SparseVec.from_dense(a)), mh.sketch(SparseVec.from_dense(b))
+    rate = np.mean(sa.hash_mins == sb.hash_mins)
+    inter = np.sum((a > 0) & (b > 0))
+    union = np.sum((a > 0) | (b > 0))
+    assert abs(rate - inter / union) < 0.04
+
+
+def test_minhash_binary_intersection_estimate():
+    rng = np.random.default_rng(6)
+    n = 2000
+    a = (rng.random(n) < 0.3).astype(float)
+    b = (rng.random(n) < 0.3).astype(float)
+    mh = MinHash(m=2000, seed=3)
+    est = mh.estimate(mh.sketch(SparseVec.from_dense(a)),
+                      mh.sketch(SparseVec.from_dense(b)))
+    true = float(np.sum(a * b))
+    assert abs(est - true) / true < 0.25
+
+
+# ---------------------------------------------------------------------------
+# KMV
+# ---------------------------------------------------------------------------
+def test_kmv_inner_product():
+    rng = np.random.default_rng(7)
+    n = 3000
+    a = (rng.random(n) < 0.3) * rng.uniform(-1, 1, n)
+    b = (rng.random(n) < 0.3) * rng.uniform(-1, 1, n)
+    kmv = KMV(k=600, seed=2)
+    est = kmv.estimate(kmv.sketch(SparseVec.from_dense(a)),
+                       kmv.sketch(SparseVec.from_dense(b)))
+    true = float(np.sum(a * b))
+    assert abs(est - true) < 0.3 * np.linalg.norm(a) * np.linalg.norm(b)
+
+
+def test_kmv_small_support():
+    kmv = KMV(k=64, seed=0)
+    a = SparseVec.from_dense(np.array([1.0, 2.0, 0.0, 3.0]))
+    est = kmv.estimate(kmv.sketch(a), kmv.sketch(a))
+    # support smaller than k: sketch is the full vector, estimate near-exact
+    assert abs(est - 14.0) / 14.0 < 0.35  # union estimator noise only
+
+
+# ---------------------------------------------------------------------------
+# JL and CountSketch (linear)
+# ---------------------------------------------------------------------------
+def test_jl_accuracy_and_linearity():
+    rng = np.random.default_rng(9)
+    a, b = rng.normal(size=500), rng.normal(size=500)
+    jl = JL(m=2000, seed=4)
+    sa, sb = jl.sketch_dense(a), jl.sketch_dense(b)
+    est = jl.estimate(sa, sb)
+    true = float(np.dot(a, b))
+    assert abs(est - true) < 4.0 / np.sqrt(2000) * np.linalg.norm(a) * np.linalg.norm(b)
+    # linearity: S(a+b) == S(a) + S(b)
+    merged = jl.merge(sa, sb)
+    direct = jl.sketch_dense(a + b)
+    assert np.allclose(merged.proj, direct.proj, atol=1e-9)
+
+
+def test_countsketch_accuracy_linearity_decode():
+    rng = np.random.default_rng(10)
+    a, b = rng.normal(size=500), rng.normal(size=500)
+    cs = CountSketch(width=400, seed=5)
+    sa, sb = cs.sketch_dense(a), cs.sketch_dense(b)
+    est = cs.estimate(sa, sb)
+    true = float(np.dot(a, b))
+    assert abs(est - true) < 4.0 / np.sqrt(400) * np.linalg.norm(a) * np.linalg.norm(b)
+    assert np.allclose(cs.merge(sa, sb).table, cs.sketch_dense(a + b).table, atol=1e-9)
+    # decode: unbiased point query
+    dec = cs.decode(sa, np.arange(500))
+    assert np.mean((dec - a) ** 2) < np.mean(a ** 2)  # signal recovered
+
+
+# ---------------------------------------------------------------------------
+# ICWS (TPU-native WMH variant)
+# ---------------------------------------------------------------------------
+def test_icws_collision_rate_is_weighted_jaccard():
+    rng = np.random.default_rng(12)
+    n = 100
+    a = rng.normal(size=n) * (rng.random(n) < 0.6)
+    b = rng.normal(size=n) * (rng.random(n) < 0.6)
+    icws = ICWS(m=4000, seed=3)
+    sa = icws.sketch(SparseVec.from_dense(a))
+    sb = icws.sketch(SparseVec.from_dense(b))
+    rate = np.mean((sa.fingerprints == sb.fingerprints) & (sa.fingerprints >= 0))
+    wa = (a / np.linalg.norm(a)) ** 2
+    wb = (b / np.linalg.norm(b)) ** 2
+    jbar = np.minimum(wa, wb).sum() / np.maximum(wa, wb).sum()
+    assert abs(rate - jbar) < 4.0 / np.sqrt(4000) + 0.01
+
+
+def test_icws_estimate_accuracy():
+    rng = np.random.default_rng(14)
+    errs, bounds = [], []
+    icws = ICWS(m=400, seed=6)
+    for _ in range(10):
+        va, vb = _sparse_pair(rng, overlap=0.1)
+        est = icws.estimate(icws.sketch(va), icws.sketch(vb))
+        errs.append(abs(est - inner_fast(va, vb)))
+        bounds.append(theorem2_bound(va, vb))
+    assert np.median(errs) < 3.0 / np.sqrt(400) * np.median(bounds)
+
+
+def test_icws_batch_matches_single():
+    rng = np.random.default_rng(15)
+    icws = ICWS(m=64, seed=1)
+    pairs = [_sparse_pair(rng, n=300, nnz=60, overlap=0.4) for _ in range(4)]
+    A = stack_icws([icws.sketch(a) for a, _ in pairs])
+    B = stack_icws([icws.sketch(b) for _, b in pairs])
+    assert np.allclose(icws.estimate_batch(A, B),
+                       [icws.estimate(icws.sketch(a), icws.sketch(b)) for a, b in pairs])
+
+
+# ---------------------------------------------------------------------------
+# property: sketches are deterministic given (seed) and coordinate across vecs
+# ---------------------------------------------------------------------------
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_wmh_deterministic(seed):
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=30)
+    w1 = WeightedMinHash(m=16, seed=seed, L=1024)
+    w2 = WeightedMinHash(m=16, seed=seed, L=1024)
+    s1, s2 = w1.sketch_dense(a), w2.sketch_dense(a)
+    assert np.array_equal(s1.hash_mins, s2.hash_mins)
+    assert np.array_equal(s1.values, s2.values)
+
+
+# ---------------------------------------------------------------------------
+# union merge: the sharded-ingestion primitive
+# ---------------------------------------------------------------------------
+def test_minhash_union_merge_exact():
+    """Sketching shards and merging == sketching the whole vector."""
+    rng = np.random.default_rng(31)
+    n = 1000
+    full = rng.normal(size=n) * (rng.random(n) < 0.4)
+    lo, hi = full.copy(), full.copy()
+    lo[n // 2:] = 0.0
+    hi[: n // 2] = 0.0
+    mh = MinHash(m=128, seed=4)
+    merged = mh.merge_union(mh.sketch_dense(lo), mh.sketch_dense(hi))
+    direct = mh.sketch_dense(full)
+    assert np.array_equal(merged.hash_mins, direct.hash_mins)
+    assert np.array_equal(merged.values, direct.values)
+
+
+def test_kmv_union_merge_exact():
+    rng = np.random.default_rng(32)
+    n = 1000
+    full = rng.normal(size=n) * (rng.random(n) < 0.4)
+    lo, hi = full.copy(), full.copy()
+    lo[n // 2:] = 0.0
+    hi[: n // 2] = 0.0
+    kmv = KMV(k=64, seed=5)
+    merged = kmv.merge_union(kmv.sketch_dense(lo), kmv.sketch_dense(hi))
+    direct = kmv.sketch_dense(full)
+    assert np.array_equal(merged.hashes, direct.hashes)
+    assert np.array_equal(merged.values, direct.values)
+
+
+@given(st.integers(min_value=2, max_value=6))
+@settings(max_examples=10, deadline=None)
+def test_minhash_union_merge_associative(parts):
+    """Merging P shards in any order gives the direct sketch (fold-safe)."""
+    rng = np.random.default_rng(33)
+    n = 600
+    full = rng.normal(size=n) * (rng.random(n) < 0.5)
+    bounds = np.linspace(0, n, parts + 1).astype(int)
+    mh = MinHash(m=64, seed=6)
+    shards = []
+    for i in range(parts):
+        s = np.zeros(n)
+        s[bounds[i]:bounds[i + 1]] = full[bounds[i]:bounds[i + 1]]
+        if s.any():
+            shards.append(mh.sketch_dense(s))
+    acc = shards[0]
+    for s in shards[1:]:
+        acc = mh.merge_union(acc, s)
+    direct = mh.sketch_dense(full)
+    assert np.array_equal(acc.hash_mins, direct.hash_mins)
