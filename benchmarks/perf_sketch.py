@@ -13,7 +13,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make, stack_wmh
+from repro.core import ICWS, make, stack_wmh
+from repro.core.icws import StackedICWS
+from repro.data.corpus import SketchCorpus
 from repro.data.synthetic import sparse_pair
 from repro.kernels import ops
 from repro.kernels.icws_sketch import icws_sketch_pallas
@@ -57,3 +59,36 @@ def run(fast: bool = False):
     _, us = timed(lambda: ops.icws_estimate(fp, val, na, fp, val, na)
                   .block_until_ready())
     emit("perf/kernel/estimate", us / B_, f"pairs={B_} m={m} interpret=True")
+
+    # device-resident corpus: one-vs-many query hot loop.  The query sketch
+    # stays [1, m] end to end -- no stack_wmh([q] * P)-style restacking, no
+    # [P, m] query tile; the kernel broadcasts it across the corpus grid.
+    P, mc = (16, 128) if fast else (64, 256)
+    lake = [sparse_pair(rng, n=600, nnz=120, overlap=0.2)[0]
+            for _ in range(P)]
+    corpus = SketchCorpus(m=mc, seed=1)
+    _, us = timed(lambda: corpus.add_batch(lake))
+    emit("perf/corpus/ingest", us / P, f"tables={P} m={mc} interpret=True")
+
+    query = sparse_pair(rng, n=600, nnz=120, overlap=0.2)[0]
+    fq, vq, nq = corpus.sketch_query(query)
+    corpus.estimate(fq, vq, nq[0]).block_until_ready()      # warm the jit
+    dev, us = timed(lambda: corpus.estimate(fq, vq, nq[0]).block_until_ready(),
+                    repeat=3)
+    emit("perf/corpus/query_1vN", us / P, f"tables={P} m={mc} interpret=True")
+
+    # cross-check: device one-vs-many vs host ICWS estimator on *identical*
+    # sketches (the host path is the oracle, and may restack freely)
+    fpc, vc, nc = (np.asarray(a) for a in corpus.arrays())
+    A = StackedICWS(fingerprints=np.repeat(np.asarray(fq), P, axis=0),
+                    values=np.repeat(np.asarray(vq, np.float64), P, axis=0),
+                    norm=np.full(P, float(nq[0]), np.float64))
+    B2 = StackedICWS(fingerprints=fpc, values=vc.astype(np.float64),
+                     norm=nc.astype(np.float64))
+    host, us = timed(ICWS(m=mc, seed=1).estimate_batch, A, B2, repeat=3)
+    emit("perf/corpus/query_host_oracle", us / P, f"tables={P} m={mc}")
+    dev64 = np.asarray(dev, np.float64)
+    scale = np.maximum(np.maximum(np.abs(host), np.abs(dev64)), 1e-12)
+    rel = float(np.max(np.abs(dev64 - host) / scale))
+    assert rel < 1e-5, f"device/host corpus estimate divergence: {rel}"
+    emit("perf/corpus/max_rel_dev_vs_host", rel * 1e6, "ppm; must be < 10")

@@ -2,9 +2,16 @@
 
 An analyst holds a (date -> taxi rides) table and wants to discover, from
 sketches alone, which tables in a data lake are joinable AND meaningfully
-correlated.  We build a WMH sketch index over a lake of synthetic tables
+correlated.  We build a sketch index over a lake of synthetic tables
 (weather, festivals, unrelated junk with disjoint keys), then answer the
 query without materializing a single join.
+
+The serving path is device-resident: every table is sketched through the
+Pallas ICWS kernel into pre-stacked [P, m] corpus arrays, and the query is
+estimated against the whole corpus with the one-vs-many estimate kernel
+(the query sketch is broadcast on device -- never tiled into a [P, m]
+copy).  The original host-numpy WMH implementation is kept as an oracle;
+we cross-check against it at the end.
 
 Run:  PYTHONPATH=src python examples/dataset_search.py
 """
@@ -20,7 +27,7 @@ def main():
     rain = np.clip(rng.gamma(2.0, 2.0, size=730) - 2, 0, None)
     ridership = 120_000 - 6_000 * rain + rng.normal(0, 4_000, 730)
 
-    index = DatasetSearchIndex(m=384, seed=7)
+    index = DatasetSearchIndex(m=384, seed=7)    # backend="device" by default
     # lake tables -----------------------------------------------------------
     index.add_table("weather_precipitation", days, rain)              # joinable + correlated
     index.add_table("festivals_2022", days[365:],                     # partial join
@@ -28,10 +35,13 @@ def main():
     index.add_table("stock_prices", np.arange(10_000, 10_730),        # disjoint keys
                     rng.normal(100, 5, 730))
     index.add_table("random_noise", days, rng.normal(0, 1, 730))      # joinable, uncorrelated
+    # taxi logs keyed by day, multiple trips per day: duplicate join keys
+    trip_days = rng.integers(0, 730, size=2000)
+    index.add_table("taxi_trip_fares", trip_days, rng.uniform(5, 60, 2000))
     print(f"lake indexed: {len(index.tables)} tables, "
           f"{index.storage_doubles():.0f} doubles of sketch storage total\n")
 
-    # the analyst's query ----------------------------------------------------
+    # the analyst's query (served from the device-resident corpus) ----------
     results = index.query(days, ridership, top_k=5, min_join=30)
     print(f"{'table':<26}{'join_size':>10}{'joinability':>12}{'corr':>8}")
     for r in results:
@@ -42,6 +52,12 @@ def main():
     print(f"\nweather vs ridership: true corr = {true_corr:.3f}, "
           f"sketch-estimated = {est.corr:.3f}")
     print("(estimated from sketches alone -- no join was ever materialized)")
+
+    # cross-check the device serving path against the host oracle -----------
+    oracle = index.query(days, ridership, top_k=5, min_join=30, backend="host")
+    print("\ndevice vs host-oracle ranking:",
+          [r.name for r in results] == [r.name for r in oracle] and "MATCH"
+          or f"device={[r.name for r in results]} host={[r.name for r in oracle]}")
 
 
 if __name__ == "__main__":

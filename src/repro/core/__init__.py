@@ -10,8 +10,8 @@ from .types import (SparseVec, fact1_bound, inner, inner_fast,
 from .hashing import MERSENNE_P, AffineHashFamily, PairHashFamily
 from .rounding import round_counts, round_unit, rounded_values
 from .progmin import progression_min, progression_min_bruteforce
-from .wmh import (DEFAULT_L, WeightedMinHash, WMHSketch, sketch_bruteforce,
-                  stack_wmh)
+from .wmh import (DEFAULT_L, WeightedMinHash, WMHSketch, compensated_sum,
+                  sketch_bruteforce, stack_wmh)
 from .minhash import MinHash, MHSketch, stack_mh
 from .kmv import KMV, KMVSketch
 from .linear import CountSketch, CSSketch, JL, JLSketch
@@ -24,7 +24,8 @@ __all__ = [
     "MERSENNE_P", "AffineHashFamily", "PairHashFamily",
     "round_counts", "round_unit", "rounded_values",
     "progression_min", "progression_min_bruteforce",
-    "DEFAULT_L", "WeightedMinHash", "WMHSketch", "sketch_bruteforce",
+    "DEFAULT_L", "WeightedMinHash", "WMHSketch", "compensated_sum",
+    "sketch_bruteforce",
     "stack_wmh", "MinHash", "MHSketch", "stack_mh", "KMV", "KMVSketch",
     "CountSketch", "CSSketch", "JL", "JLSketch", "ICWS", "ICWSSketch",
     "stack_icws", "FACTORIES", "PAPER_METHODS", "make",

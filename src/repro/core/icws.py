@@ -10,8 +10,15 @@ collision law
 with O(1) *pure f32 elementwise* work per (non-zero x hash): log/exp/floor and
 an argmin -- ideal VPU shape, no big-integer arithmetic, and it removes the
 discretization parameter L (and the n^6/eps^2 rounding analysis) entirely.
+
 This module is the host (numpy) reference; the Pallas kernel in
-``repro.kernels.icws_sketch`` computes the same quantities on-device.
+``repro.kernels.icws_sketch`` computes the same quantities on-device.  The
+two paths share one pseudo-randomness contract: the uint32 mixing RNG of
+``repro.kernels.common``, mirrored on host by :mod:`repro.core.u32`.  A
+host-sketched vector and a device-sketched vector therefore carry
+*interoperable fingerprints* -- mixed corpora estimate correctly instead of
+silently reporting zero collisions.  (Keys are taken mod 2^32, matching the
+kernel's int32 key lanes.)
 
 Per (index i, sample t), keyed pseudo-randomness:
     r ~ Gamma(2,1)   (= -log(u1*u2)),   c ~ Gamma(2,1),   beta ~ U[0,1]
@@ -19,9 +26,9 @@ Per (index i, sample t), keyed pseudo-randomness:
     y_i  = exp(r * (t_i - beta))
     a_i  = c / (y_i * exp(r))
 Sample = argmin_i a_i; two sketches collide at sample t iff the argmin *index*
-and its *level* t_i agree.  We store a 32-bit fingerprint of (index, level)
-for collision detection (paper-style 1.5m+1 doubles storage), plus the signed
-normalized value at the argmin and ||a||.
+and its *level* t_i agree.  We store a 31-bit fingerprint of (index, level)
+(non-negative int32; -1 is the empty sentinel, exactly as the kernel emits),
+plus the signed normalized value at the argmin and ||a||.
 
 Estimator (Algorithm 5 adapted): with unit-norm weights w = (a/||a||)^2 we
 have  sum_i min + sum_i max = ||a~||^2 + ||b~||^2 = 2,  so the weighted union
@@ -36,28 +43,20 @@ from typing import List
 
 import numpy as np
 
-from .hashing import uniforms_from_key
+from . import u32
 from .types import SparseVec
+
+_BIG = np.float32(3.0e38)  # empty-lane sentinel, matches kernels.ref.BIG
 
 
 @dataclasses.dataclass
 class ICWSSketch:
-    fingerprints: np.ndarray  # int64 [m]: 32-bit fp of (argmin index, level); -1 empty
+    fingerprints: np.ndarray  # int32 [m]: 31-bit fp of (argmin index, level); -1 empty
     values: np.ndarray        # float64 [m]: normalized signed value at argmin
     norm: float
 
     def storage_doubles(self) -> float:
         return 1.5 * self.fingerprints.shape[0] + 1.0
-
-
-def _fingerprint(keys: np.ndarray, levels: np.ndarray, t: np.ndarray) -> np.ndarray:
-    """32-bit mix of (vector index, ICWS level, sample id)."""
-    z = (keys.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
-         ^ (levels.astype(np.int64).astype(np.uint64) + np.uint64(0x2545F4914F6CDD1D))
-         ^ (t.astype(np.uint64) << np.uint64(32)))
-    z = (z ^ (z >> np.uint64(33))) * np.uint64(0xFF51AFD7ED558CCD)
-    z = z ^ (z >> np.uint64(33))
-    return (z & np.uint64(0xFFFFFFFF)).astype(np.int64)
 
 
 class ICWS:
@@ -67,31 +66,44 @@ class ICWS:
         self.m = int(m)
         self.seed = int(seed)
 
-    def _variates(self, keys: np.ndarray):
-        u1 = uniforms_from_key(self.seed, 1, keys, self.m)
-        u2 = uniforms_from_key(self.seed, 2, keys, self.m)
-        u3 = uniforms_from_key(self.seed, 3, keys, self.m)
-        u4 = uniforms_from_key(self.seed, 4, keys, self.m)
-        beta = uniforms_from_key(self.seed, 5, keys, self.m)
-        r = -np.log(u1 * u2)      # Gamma(2,1)
-        c = -np.log(u3 * u4)      # Gamma(2,1)
-        return r, c, beta         # each [m, nnz]
+    def _variates(self, keys_u32: np.ndarray):
+        """Per-(sample t, key) variates, bit-compatible with the kernel RNG."""
+        t = np.arange(self.m, dtype=np.int64)
+
+        def u(stream: int) -> np.ndarray:
+            salt = u32.salt_for(self.seed, stream, t)[:, None]   # [m, 1]
+            return u32.uniform01(keys_u32[None, :], salt)        # [m, nnz] f32
+
+        r = -np.log(u(1) * u(2))      # Gamma(2,1), f32
+        c = -np.log(u(3) * u(4))      # Gamma(2,1), f32
+        beta = u(5)
+        return r, c, beta
 
     def sketch(self, v: SparseVec) -> ICWSSketch:
         norm = v.norm()
         if v.nnz == 0 or norm == 0.0:
-            return ICWSSketch(fingerprints=np.full(self.m, -1, np.int64),
+            return ICWSSketch(fingerprints=np.full(self.m, -1, np.int32),
                               values=np.zeros(self.m), norm=0.0)
+        keys_u32 = (v.indices.astype(np.int64)
+                    & np.int64(0xFFFFFFFF)).astype(np.uint32)
         z = v.values / norm
-        w = z * z                                   # weights, sum == 1
-        r, c, beta = self._variates(v.indices)      # [m, nnz]
-        logw = np.log(w)[None, :]
+        z32 = z.astype(np.float32)
+        w = z32 * z32                               # f32 weights, sum ~ 1
+        r, c, beta = self._variates(keys_u32)       # [m, nnz] f32
+        logw = np.log(np.maximum(w, np.float32(1e-37)))[None, :]
         lvl = np.floor(logw / r + beta)             # t_i
         y = np.exp(r * (lvl - beta))
         a = c / (y * np.exp(r))
+        # f32 squaring can underflow a tiny-but-nonzero entry to w == 0; the
+        # kernel masks those lanes as padding, so the host must too.
+        a = np.where((w > 0)[None, :], a, _BIG)
         arg = np.argmin(a, axis=1)                  # [m]
         rows = np.arange(self.m)
-        fp = _fingerprint(v.indices[arg], lvl[rows, arg], rows)
+        lvl_sel = lvl[rows, arg].astype(np.int32)
+        fpbits = u32.hash_u32(
+            keys_u32[arg] ^ (lvl_sel.astype(np.uint32) * np.uint32(0x9E3779B9)),
+            u32.salt_for(self.seed, 9, rows))
+        fp = (fpbits & np.uint32(0x7FFFFFFF)).astype(np.int32)
         return ICWSSketch(fingerprints=fp, values=z[arg], norm=norm)
 
     def sketch_dense(self, a: np.ndarray) -> ICWSSketch:

@@ -46,9 +46,15 @@ class SparseVec:
         return SparseVec(indices=idx, values=a[idx], n=int(a.shape[0]))
 
     @staticmethod
-    def from_pairs(indices, values, n: int) -> "SparseVec":
+    def from_pairs(indices, values, n: int,
+                   sum_duplicates: bool = False) -> "SparseVec":
         idx = np.asarray(indices, dtype=np.int64)
         val = np.asarray(values, dtype=np.float64)
+        if sum_duplicates and idx.size:
+            uniq, inverse = np.unique(idx, return_inverse=True)
+            acc = np.zeros(uniq.size, np.float64)
+            np.add.at(acc, inverse, val)
+            idx, val = uniq, acc
         keep = val != 0.0
         idx, val = idx[keep], val[keep]
         order = np.argsort(idx, kind="stable")

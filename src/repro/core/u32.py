@@ -1,0 +1,62 @@
+"""Numpy twins of the in-kernel uint32 RNG (:mod:`repro.kernels.common`).
+
+The Pallas kernels build all pseudo-randomness from murmur3-style uint32
+mixing so the TPU vector units never touch 64-bit integers.  The host ICWS
+sketcher must draw the *same* variates and fingerprints, otherwise a
+host-sketched corpus and a device-sketched query silently report zero
+collisions (every fingerprint differs).  These functions mirror
+``repro.kernels.common`` operation for operation: the integer parts are
+bit-exact (uint32 wrap-around arithmetic), and the float parts perform the
+same IEEE f32 operations, so host/device sketches agree except where libm
+and XLA transcendentals differ in the last ulp *and* that ulp flips a floor
+or an argmin (empirically <<1% of samples; the contract test in
+``tests/test_icws_contract.py`` pins this).
+
+All functions take and return numpy arrays; integer overflow wraps mod 2^32
+by construction (uint32 array arithmetic).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def mix32(x: np.ndarray) -> np.ndarray:
+    """Murmur3 fmix32 over uint32 lanes; twin of ``kernels.common.mix32``."""
+    z = np.asarray(x).astype(np.uint32)
+    z = z ^ (z >> np.uint32(16))
+    z = z * _M1
+    z = z ^ (z >> np.uint32(13))
+    z = z * _M2
+    z = z ^ (z >> np.uint32(16))
+    return z
+
+
+def hash_u32(key: np.ndarray, salt: np.ndarray) -> np.ndarray:
+    """Twin of ``kernels.common.hash_u32`` (two mixing rounds, broadcast)."""
+    k = np.asarray(key).astype(np.uint32)
+    s = np.asarray(salt).astype(np.uint32)
+    return mix32(mix32(k + s * _GOLDEN)
+                 ^ (s * _M2 + np.uint32(0x27D4EB2F)))
+
+
+def uniform01(key: np.ndarray, salt: np.ndarray) -> np.ndarray:
+    """Strictly-interior uniform (0,1) f32; twin of ``kernels.common.uniform01``.
+
+    The uint32 hash and the 24-bit -> f32 conversion are exact, so these
+    match the kernel bit for bit.
+    """
+    bits = hash_u32(key, salt) >> np.uint32(8)
+    return (bits.astype(np.float32) * np.float32(2 ** -24)
+            + np.float32(2 ** -25))
+
+
+def salt_for(seed: int, stream: int, t: np.ndarray) -> np.ndarray:
+    """Twin of ``kernels.common.salt_for``: (seed, stream, sample) -> salt."""
+    base = ((int(seed) & 0xFFFFFFFF) * 0x9E3779B1
+            + int(stream) * 0x517CC1B7) & 0xFFFFFFFF
+    return (np.uint32(base)
+            + np.asarray(t).astype(np.uint32) * np.uint32(0x2545F491))

@@ -34,6 +34,26 @@ from .types import SparseVec
 DEFAULT_L = 10 ** 7  # the paper fixes L = 1e7 in all experiments (Section 5)
 
 
+def compensated_sum(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    """Kahan-Neumaier compensated summation along ``axis`` (float64).
+
+    The Algorithm-5 denominator ``sum_t min(ha_t, hb_t)`` is a sum of m
+    same-sign terms of size ~1/m that *scales the whole estimate*; with
+    L = 1e7 the union-size factor amplifies any rounding drift by ~L, so the
+    denominator is accumulated with a running compensation term instead of a
+    plain ``np.sum``.
+    """
+    x = np.moveaxis(np.asarray(x, np.float64), axis, 0)
+    total = np.zeros(x.shape[1:], np.float64)
+    comp = np.zeros_like(total)
+    for row in x:
+        t = total + row
+        comp = comp + np.where(np.abs(total) >= np.abs(row),
+                               (total - t) + row, (row - t) + total)
+        total = t
+    return total + comp
+
+
 @dataclasses.dataclass
 class WMHSketch:
     hash_mins: np.ndarray  # int64 [m], in [0, p); p is the empty-input sentinel
@@ -104,9 +124,9 @@ class WeightedMinHash:
         va, vb = A.values, B.values
         q = np.minimum(va * va, vb * vb)               # line 1
         q = np.where(collide & (q > 0), q, 1.0)        # guarded; masked anyway
-        kahan = np.sum(np.minimum(ha, hb), axis=1)     # line 2 denominator
-        kahan = np.maximum(kahan, 1e-300)
-        m_tilde = (self.m / kahan - 1.0) / float(self.L)
+        denom = compensated_sum(np.minimum(ha, hb), axis=1)  # line 2 denominator
+        denom = np.maximum(denom, 1e-300)
+        m_tilde = (self.m / denom - 1.0) / float(self.L)
         summand = np.where(collide, va * vb / q, 0.0)  # line 3
         est_unit = m_tilde / self.m * np.sum(summand, axis=1)
         out = A.norm * B.norm * est_unit               # line 4

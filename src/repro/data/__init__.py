@@ -1,10 +1,13 @@
 """Data substrate: synthetic generators (paper protocols), sharded pipeline,
-and the dataset-search sketch index (the paper's §1.3 application)."""
+the device-resident sketch corpus, and the dataset-search sketch index (the
+paper's §1.3 application)."""
+from .corpus import SketchCorpus, pad_sparse_batch, sketch_batch
 from .dataset_search import DatasetSearchIndex, SearchResult, TableSketch
 from .pipeline import TokenPipeline
 from .synthetic import (kurtosis, sparse_pair, tfidf_corpus, token_stream,
                         worldbank_like_pair)
 
 __all__ = ["DatasetSearchIndex", "SearchResult", "TableSketch",
+           "SketchCorpus", "sketch_batch", "pad_sparse_batch",
            "TokenPipeline", "sparse_pair", "worldbank_like_pair", "kurtosis",
            "tfidf_corpus", "token_stream"]

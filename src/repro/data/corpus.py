@@ -1,0 +1,162 @@
+"""Device-resident ICWS sketch corpus: sketch once, query many times.
+
+The paper's §1.3 dataset-search regime sketches every column of a data lake
+once, then answers every query by estimating the query sketch against the
+*whole corpus*.  This module keeps that corpus where the estimator runs:
+
+  * ingestion pads sparse vectors into ``[B, N]`` batches and sketches them
+    with the Pallas ICWS kernel (one kernel launch per batch, all fields);
+  * fingerprints / values / norms live as pre-stacked ``[P, m]`` device
+    arrays, appended in chunks (a list of per-batch arrays concatenated
+    lazily, once, on first query after an append) -- queries never restack
+    the corpus and never materialize a ``[P, m]`` copy of the query;
+  * queries run through the one-vs-many estimate kernel
+    (:func:`repro.kernels.ops.icws_estimate_corpus`), which broadcasts the
+    single query sketch across the corpus grid dimension.
+
+Host and device sketches are interchangeable here: :class:`repro.core.ICWS`
+shares the kernel's RNG/fingerprint contract (see :mod:`repro.core.u32`),
+so a corpus may be populated from either path.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import SparseVec
+from repro.kernels import ops
+
+
+def pad_sparse_batch(vecs: Sequence[SparseVec], *, bucket: int = 256
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pad sparse vectors into the kernel's ``[B, N]`` layout.
+
+    Returns host arrays ``(w, keys, vals, norms)``: f32 normalized squared
+    weights, int32 keys (mod 2^32, the kernel's key domain), f32 normalized
+    signed values, and f64 norms.  ``N`` is the max nnz rounded up to a
+    multiple of ``bucket`` so repeated ingests reuse the same jit cache entry.
+    """
+    B = len(vecs)
+    max_nnz = max((v.nnz for v in vecs), default=0)
+    N = max(bucket, -(-max_nnz // bucket) * bucket)
+    w = np.zeros((B, N), np.float32)
+    keys = np.zeros((B, N), np.int32)
+    vals = np.zeros((B, N), np.float32)
+    norms = np.zeros(B, np.float64)
+    for i, v in enumerate(vecs):
+        norm = v.norm()
+        norms[i] = norm
+        if v.nnz == 0 or norm == 0.0:
+            continue
+        z32 = (v.values / norm).astype(np.float32)
+        k = v.nnz
+        w[i, :k] = z32 * z32
+        keys[i, :k] = (v.indices & np.int64(0xFFFFFFFF)).astype(np.uint32).astype(np.int32)
+        vals[i, :k] = z32
+    return w, keys, vals, norms
+
+
+def sketch_batch(vecs: Sequence[SparseVec], *, m: int, seed: int = 0,
+                 bucket: int = 256):
+    """Device-sketch a batch of sparse vectors through the Pallas ICWS kernel.
+
+    Returns device arrays ``(fp [B, m] int32, val [B, m] f32, norm [B] f32)``.
+    """
+    w, keys, vals, norms = pad_sparse_batch(vecs, bucket=bucket)
+    fp, val, _ = ops.icws_sketch(jnp.asarray(w), jnp.asarray(keys),
+                                 jnp.asarray(vals), m=m, seed=seed)
+    return fp, val, jnp.asarray(norms, jnp.float32)
+
+
+class SketchCorpus:
+    """A growing corpus of ICWS sketches resident on the device.
+
+    Append-in-chunks storage: each ``add_*`` call appends one ``[b, m]``
+    device array per component; :meth:`arrays` concatenates the chunks into
+    the canonical ``[P, m]`` layout exactly once per dirty state (cached
+    until the next append).  The query path is a single one-vs-many kernel
+    launch over those arrays.
+    """
+
+    def __init__(self, m: int, seed: int = 0, bucket: int = 256):
+        self.m = int(m)
+        self.seed = int(seed)
+        self.bucket = int(bucket)
+        self._chunks: List[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = []
+        self._cache: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None
+        self._size = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    # -- ingestion ----------------------------------------------------------
+    def add_batch(self, vecs: Sequence[SparseVec]) -> None:
+        """Sketch ``vecs`` on device (one kernel launch) and append them."""
+        if not vecs:
+            return
+        fp, val, norm = sketch_batch(vecs, m=self.m, seed=self.seed,
+                                     bucket=self.bucket)
+        self.add_sketches(fp, val, norm)
+
+    def add_sketches(self, fp, val, norm) -> None:
+        """Append pre-computed sketch rows (``[b, m]``, ``[b]``).
+
+        Accepts device or host arrays; host ICWS sketches interoperate
+        because both paths share the fingerprint contract.
+        """
+        fp = jnp.asarray(fp, jnp.int32).reshape(-1, self.m)
+        val = jnp.asarray(val, jnp.float32).reshape(-1, self.m)
+        norm = jnp.asarray(norm, jnp.float32).reshape(-1)
+        if fp.shape[0] != norm.shape[0]:
+            raise ValueError("fingerprint/norm row count mismatch")
+        self._chunks.append((fp, val, norm))
+        self._cache = None
+        self._size += int(fp.shape[0])
+
+    # -- the device-resident [P, m] view ------------------------------------
+    def arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """The pre-stacked ``(fp [P, m], val [P, m], norm [P])`` device arrays.
+
+        Consolidates pending chunks at most once per append; every query
+        between appends reuses the same device buffers (no restacking).
+        """
+        if self._size == 0:
+            raise ValueError("empty corpus")
+        if self._cache is None:
+            if len(self._chunks) == 1:
+                self._cache = self._chunks[0]
+            else:
+                fp = jnp.concatenate([c[0] for c in self._chunks], axis=0)
+                val = jnp.concatenate([c[1] for c in self._chunks], axis=0)
+                norm = jnp.concatenate([c[2] for c in self._chunks], axis=0)
+                self._cache = (fp, val, norm)
+                self._chunks = [self._cache]
+        return self._cache
+
+    # -- queries ------------------------------------------------------------
+    def sketch_query(self, v: SparseVec):
+        """Sketch one query vector on device: ``(fq [1, m], vq [1, m], nq [1])``."""
+        return sketch_batch([v], m=self.m, seed=self.seed, bucket=self.bucket)
+
+    def estimate(self, fq, vq, nq) -> jnp.ndarray:
+        """Inner-product estimates of one query sketch vs every corpus row.
+
+        The query stays ``[1, m]`` end to end; the one-vs-many kernel
+        broadcasts it across the corpus grid.  Returns ``[P]`` f32.
+        """
+        fpc, vc, nc = self.arrays()
+        return ops.icws_estimate_corpus(jnp.asarray(fq, jnp.int32).reshape(1, -1),
+                                        jnp.asarray(vq, jnp.float32).reshape(1, -1),
+                                        jnp.asarray(nq, jnp.float32).reshape(()),
+                                        fpc, vc, nc)
+
+    def estimate_vec(self, v: SparseVec) -> jnp.ndarray:
+        """Sketch ``v`` and estimate it against the whole corpus."""
+        fq, vq, nq = self.sketch_query(v)
+        return self.estimate(fq, vq, nq[0])
+
+    def storage_doubles(self) -> float:
+        """Paper accounting: 1.5 doubles per sample + 1 norm, per sketch."""
+        return self._size * (1.5 * self.m + 1.0)

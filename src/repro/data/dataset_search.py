@@ -3,12 +3,27 @@
 Tables are (key column, value column) pairs.  Per table we pre-compute WMH
 sketches of the four vector representations from Figure 3:
 
-    x^{1[K]}   binary key-indicator        -> join sizes (inner products)
-    x^{V}      values placed at key index  -> post-join SUM / MEAN / corr
-    x^{V^2}    squared values              -> post-join variance
+    x^{1[K]}   key multiplicities (1 per row)   -> join sizes (inner products)
+    x^{V}      values summed at key index       -> post-join SUM / MEAN / corr
+    x^{V^2}    squared values summed at key     -> post-join variance
 
-A query table is sketched once and compared against the whole corpus with
-the *batched* estimator (the Pallas estimate kernel on device); every §1.3
+Repeated join keys are aggregated (values summed, multiplicities counted), so
+real-world tables with duplicate keys ingest cleanly and join sizes count
+joined row *pairs*, as SQL join cardinality does.
+
+Serving path (default, ``backend="device"``): tables are sketched in batches
+through the Pallas ICWS kernel into three device-resident
+:class:`~repro.data.corpus.SketchCorpus` instances (one per field).  A query
+is sketched once (a single ``[3, N]`` kernel launch covers all three fields)
+and estimated against the whole corpus with the one-vs-many estimate kernel
+-- the query sketch is broadcast on-device, never tiled into a ``[P, m]``
+copy, and the corpus is never restacked.  Candidate ranking (top-k by
+|sketch-estimated corr| among sufficiently-joinable tables) happens in jnp
+before any result leaves the device; the host then refines the correlation
+of just those k candidates from the matched KMV samples.
+
+Oracle path (``backend="host"``): the original host-numpy WMH implementation,
+kept verbatim as the cross-checked reference for the device path.  Every §1.3
 statistic falls out of inner-product estimates:
 
     |K_A join K_B|      = <1[K_A], 1[K_B]>
@@ -19,21 +34,28 @@ statistic falls out of inner-product estimates:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import KMV, SparseVec, WeightedMinHash, stack_wmh
 from repro.core.kmv import KMVSketch
 from repro.core.wmh import StackedWMH, WMHSketch
 
+from .corpus import SketchCorpus, sketch_batch
+
+FIELDS = ("key_indicator", "values", "values_sq")
+
 
 @dataclasses.dataclass
 class TableSketch:
     name: str
-    key_indicator: WMHSketch     # x^{1[K]}
-    values: WMHSketch            # x^{V}
-    values_sq: WMHSketch         # x^{V^2}
+    key_indicator: Optional[WMHSketch]  # x^{1[K]} (host oracle; None if disabled)
+    values: Optional[WMHSketch]         # x^{V}
+    values_sq: Optional[WMHSketch]      # x^{V^2}
     sample: KMVSketch            # KMV keyed sample of (key -> value): the
                                  # correlation sketch of Santos et al. 2021
     n_rows: int
@@ -49,53 +71,158 @@ class SearchResult:
     corr: float
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rank_by_corr(join, sum_a, sum_b, sum_a2, sum_b2, prod,
+                  min_join, k: int):
+    """Top-k corpus rows by |sketch-estimated corr| among joinable rows.
+
+    All inputs are [P] device arrays of inner-product estimates; the output
+    (scores [k], indices [k]) is the only data that leaves the device.
+    Rows failing ``join >= min_join`` score -1 so the host can drop them.
+    """
+    var_a = join * sum_a2 - sum_a * sum_a
+    var_b = join * sum_b2 - sum_b * sum_b
+    cov = join * prod - sum_a * sum_b
+    ok = (var_a > 0) & (var_b > 0)
+    corr = jnp.where(ok, cov * jax.lax.rsqrt(jnp.where(ok, var_a * var_b, 1.0)),
+                     0.0)
+    corr = jnp.clip(corr, -1.0, 1.0)
+    score = jnp.where(join >= min_join, jnp.abs(corr), -1.0)
+    return jax.lax.top_k(score, k)
+
+
 class DatasetSearchIndex:
     """Sketch once, query many times -- the data-lake discovery pattern."""
 
-    def __init__(self, m: int = 256, seed: int = 0, key_space: int = 2 ** 31):
+    def __init__(self, m: int = 256, seed: int = 0, key_space: int = 2 ** 31,
+                 backend: str = "device", keep_host_oracle: bool = True):
+        if backend not in ("device", "host"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.m = m
         self.seed = seed
         self.key_space = key_space
+        self.backend = backend
+        # host oracle sketches are required to serve backend="host" queries;
+        # symmetrically, the device corpora are only built when the index
+        # serves (or may serve) device queries
+        self.keep_host_oracle = keep_host_oracle or backend == "host"
+        self.keep_device_corpus = backend == "device"
         self.sketcher = WeightedMinHash(m=m, seed=seed)
         self.kmv = KMV(k=m, seed=seed)
         self.tables: List[TableSketch] = []
+        self.corpora: Dict[str, SketchCorpus] = {
+            f: SketchCorpus(m=m, seed=seed) for f in FIELDS}
 
     # -- ingestion ----------------------------------------------------------
     def vectorize(self, keys: np.ndarray, values: np.ndarray
                   ) -> Tuple[SparseVec, SparseVec, SparseVec]:
         keys = np.asarray(keys, dtype=np.int64)
         values = np.asarray(values, dtype=np.float64)
-        ind = SparseVec.from_pairs(keys, np.ones_like(values), self.key_space)
         # zero values would vanish from the sparse vector; nudge them so the
         # key stays represented (the paper's vectors assume non-zero values)
         safe = np.where(values == 0.0, 1e-9, values)
-        val = SparseVec.from_pairs(keys, safe, self.key_space)
-        sq = SparseVec.from_pairs(keys, safe ** 2, self.key_space)
+        # aggregate repeated join keys: multiplicity for the indicator,
+        # summed (squared) values for the value vectors
+        ind = SparseVec.from_pairs(keys, np.ones_like(safe), self.key_space,
+                                   sum_duplicates=True)
+        sq = SparseVec.from_pairs(keys, safe ** 2, self.key_space,
+                                  sum_duplicates=True)
+        # signed value sums can cancel to exactly zero, which from_pairs
+        # would drop; nudge post-aggregation so the key stays represented
+        uniq, inverse = np.unique(keys, return_inverse=True)
+        vsum = np.zeros(uniq.size, np.float64)
+        np.add.at(vsum, inverse, safe)
+        val = SparseVec.from_pairs(uniq, np.where(vsum == 0.0, 1e-9, vsum),
+                                   self.key_space)
         return ind, val, sq
 
     def add_table(self, name: str, keys: np.ndarray, values: np.ndarray):
         ind, val, sq = self.vectorize(keys, values)
+        if self.keep_device_corpus:
+            # device path: one [3, N] kernel launch sketches all three fields
+            fp, v, nrm = sketch_batch([ind, val, sq], m=self.m, seed=self.seed)
+            for i, f in enumerate(FIELDS):
+                self.corpora[f].add_sketches(fp[i:i + 1], v[i:i + 1],
+                                             nrm[i:i + 1])
+        host = {}
+        if self.keep_host_oracle:
+            host = {"key_indicator": self.sketcher.sketch(ind),
+                    "values": self.sketcher.sketch(val),
+                    "values_sq": self.sketcher.sketch(sq)}
         self.tables.append(TableSketch(
             name=name,
-            key_indicator=self.sketcher.sketch(ind),
-            values=self.sketcher.sketch(val),
-            values_sq=self.sketcher.sketch(sq),
+            key_indicator=host.get("key_indicator"),
+            values=host.get("values"),
+            values_sq=host.get("values_sq"),
             sample=self.kmv.sketch(val),
             n_rows=len(keys)))
 
     # -- queries ------------------------------------------------------------
-    def _stack(self, field: str) -> StackedWMH:
-        return stack_wmh([getattr(t, field) for t in self.tables])
-
     def query(self, keys: np.ndarray, values: np.ndarray,
-              top_k: int = 10, min_join: float = 1.0) -> List[SearchResult]:
+              top_k: int = 10, min_join: float = 1.0,
+              backend: Optional[str] = None) -> List[SearchResult]:
         """Rank corpus tables by |corr| among sufficiently-joinable tables."""
         if not self.tables:
             return []
+        backend = backend or self.backend
+        if backend == "host":
+            return self._query_host(keys, values, top_k, min_join)
+        return self._query_device(keys, values, top_k, min_join)
+
+    def _query_device(self, keys, values, top_k: int, min_join: float
+                      ) -> List[SearchResult]:
+        if not self.keep_device_corpus:
+            raise ValueError("device corpora were not built at ingest "
+                             "(index constructed with backend='host')")
+        ind, val, sq = self.vectorize(keys, values)
+        q_sample = self.kmv.sketch(val)
+        # one kernel launch sketches the query's three field vectors
+        fq, vq, nq = sketch_batch([ind, val, sq], m=self.m, seed=self.seed)
+        q = {f: (fq[i:i + 1], vq[i:i + 1], nq[i]) for i, f in enumerate(FIELDS)}
+
+        def est(qf: str, cf: str) -> jnp.ndarray:
+            fqi, vqi, nqi = q[qf]
+            return self.corpora[cf].estimate(fqi, vqi, nqi)
+
+        join = est("key_indicator", "key_indicator")   # <1A, 1B>
+        sum_b = est("key_indicator", "values")         # <1A, VB>
+        sum_b2 = est("key_indicator", "values_sq")     # <1A, VB^2>
+        sum_a = est("values", "key_indicator")         # <VA, 1B>
+        sum_a2 = est("values_sq", "key_indicator")     # <VA^2, 1B>
+        prod = est("values", "values")                 # <VA, VB>
+
+        k = min(top_k, len(self.tables))
+        scores, idx = _rank_by_corr(join, sum_a, sum_b, sum_a2, sum_b2, prod,
+                                    jnp.float32(min_join), k=k)
+        scores, idx = np.asarray(scores), np.asarray(idx)
+        join_h, sum_b_h = np.asarray(join), np.asarray(sum_b)
+
+        results = []
+        n_q = max(len(keys), 1)
+        for score, i in zip(scores, idx):
+            if score < 0:                    # failed the min_join filter
+                continue
+            t = self.tables[int(i)]
+            js = max(float(join_h[i]), 0.0)
+            mean_b = float(sum_b_h[i]) / js if js > 0 else 0.0
+            corr = self._sample_corr(q_sample, t.sample)
+            results.append(SearchResult(
+                name=t.name, join_size=js, joinability=js / n_q,
+                sum_b=float(sum_b_h[i]), mean_b=mean_b, corr=corr))
+        results.sort(key=lambda r: abs(r.corr), reverse=True)
+        return results
+
+    # -- host oracle (the original numpy implementation, cross-checked) -----
+    def _stack(self, field: str) -> StackedWMH:
+        return stack_wmh([getattr(t, field) for t in self.tables])
+
+    def _query_host(self, keys, values, top_k: int, min_join: float
+                    ) -> List[SearchResult]:
+        if not self.keep_host_oracle or self.tables[0].key_indicator is None:
+            raise ValueError("host oracle sketches were not kept at ingest "
+                             "(keep_host_oracle=False)")
         ind, val, sq = self.vectorize(keys, values)
         q_ind = self.sketcher.sketch(ind)
-        q_val = self.sketcher.sketch(val)
-        q_sq = self.sketcher.sketch(sq)
         q_sample = self.kmv.sketch(val)
         P = len(self.tables)
 
@@ -105,8 +232,6 @@ class DatasetSearchIndex:
 
         join = est(q_ind, "key_indicator")                  # <1A, 1B>
         sum_b = est(q_ind, "values")                        # <1A, VB>
-        # (q_val x values => <VA,VB>; q_sq / values_sq => post-join variances;
-        # exposed for downstream statistics, not needed for ranking)
 
         results = []
         for i, t in enumerate(self.tables):
@@ -130,7 +255,9 @@ class DatasetSearchIndex:
         Matched hashes within the k smallest of the union form a uniform
         sample of joined rows; the *sample* correlation sidesteps the
         catastrophic moment cancellation that estimated E[x^2]-E[x]^2
-        suffers under sketch noise.
+        suffers under sketch noise.  The device path uses the (noisier)
+        five-inner-product corr only to *select* candidates on device; this
+        refines the k survivors.
         """
         if sa.hashes.size == 0 or sb.hashes.size == 0:
             return 0.0
@@ -146,6 +273,5 @@ class DatasetSearchIndex:
         return float(np.clip(np.corrcoef(va, vb)[0, 1], -1.0, 1.0))
 
     def storage_doubles(self) -> float:
-        return sum(t.key_indicator.storage_doubles()
-                   + t.values.storage_doubles()
-                   + t.values_sq.storage_doubles() for t in self.tables)
+        """Serving-sketch storage (three fields per table, paper accounting)."""
+        return sum(c.storage_doubles() for c in self.corpora.values())

@@ -9,8 +9,8 @@ Kernels (each = pallas_call + explicit BlockSpec VMEM tiling):
 """
 from . import ops, ref
 from .countsketch import countsketch_pallas
-from .estimate import estimate_partials_pallas
+from .estimate import estimate_one_vs_many_pallas, estimate_partials_pallas
 from .icws_sketch import icws_sketch_pallas
 
 __all__ = ["ops", "ref", "icws_sketch_pallas", "countsketch_pallas",
-           "estimate_partials_pallas"]
+           "estimate_partials_pallas", "estimate_one_vs_many_pallas"]

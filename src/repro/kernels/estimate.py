@@ -1,14 +1,21 @@
-"""Pallas TPU kernel: fused sketch-pair estimator partials (Algorithm 5, line 3).
+"""Pallas TPU kernels: fused sketch-pair estimator partials (Algorithm 5, line 3).
 
 For P sketch pairs with m samples each, computes per pair:
   * the collision count  ``sum_t 1[fp_a == fp_b]``
   * the importance sum   ``sum_t 1[...] * va*vb / min(va^2, vb^2)``
 
+Two variants share the kernel body:
+
+  * ``estimate_partials_pallas``          -- pairwise: A and B are both [P, m].
+  * ``estimate_one_vs_many_pallas``       -- one query sketch [1, m] against a
+    corpus [P, m].  The query block is *broadcast* across the P grid dimension
+    via its BlockSpec index map (every grid step re-reads block (0, mi)), so
+    the caller never tiles the query into a [P, m] copy -- this is the
+    dataset-search serving hot loop (every query hits every corpus sketch).
+
 Grid ``(P/BP, m/BM)`` with the m dimension innermost and accumulating into
 ``[BP]`` output blocks.  Pure VPU elementwise + row reduction; one pass over
-the sketches, no intermediate [P, m] materialization in HBM -- this is the
-hot loop of corpus-scale dataset search (every query hits every corpus
-sketch).
+the sketches, no intermediate [P, m] materialization in HBM.
 """
 from __future__ import annotations
 
@@ -65,4 +72,45 @@ def estimate_partials_pallas(fpa, va, fpb, vb, *, bp: int = 8, bm: int = 128,
         interpret=interpret,
     )(fpa.astype(jnp.int32), va.astype(jnp.float32),
       fpb.astype(jnp.int32), vb.astype(jnp.float32))
+    return cnt[:P], sw[:P]
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bm", "interpret"))
+def estimate_one_vs_many_pallas(fq, vq, fpc, vc, *, bp: int = 8, bm: int = 128,
+                                interpret: bool = True):
+    """One query sketch against a P-row corpus; matches
+    :func:`repro.kernels.ref.estimate_one_vs_many_ref`.
+
+    Args: fq/vq [1, m] (or [m]) query fingerprints/values; fpc/vc [P, m]
+    corpus.  Returns (n_collide [P], s_weight [P]).  The query block is
+    broadcast by its index map -- no [P, m] tiling of the query ever exists.
+    """
+    fq = fq.reshape(1, -1)
+    vq = vq.reshape(1, -1)
+    P, m = fpc.shape
+    p_pad = (-P) % bp
+    m_pad = (-m) % bm
+    if m_pad:
+        # pad fingerprints to *different* sentinels so padding never collides
+        fq = jnp.pad(fq, ((0, 0), (0, m_pad)), constant_values=-1)
+        vq = jnp.pad(vq, ((0, 0), (0, m_pad)))
+    if p_pad or m_pad:
+        fpc = jnp.pad(fpc, ((0, p_pad), (0, m_pad)), constant_values=-2)
+        vc = jnp.pad(vc, ((0, p_pad), (0, m_pad)))
+    Pp, mp = fpc.shape
+    grid = (Pp // bp, mp // bm)
+    cnt, sw = pl.pallas_call(
+        _est_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda p, mi: (0, mi)),   # query: broadcast
+            pl.BlockSpec((1, bm), lambda p, mi: (0, mi)),
+            pl.BlockSpec((bp, bm), lambda p, mi: (p, mi)),  # corpus: tiled
+            pl.BlockSpec((bp, bm), lambda p, mi: (p, mi)),
+        ],
+        out_specs=[pl.BlockSpec((bp,), lambda p, mi: (p,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((Pp,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(fq.astype(jnp.int32), vq.astype(jnp.float32),
+      fpc.astype(jnp.int32), vc.astype(jnp.float32))
     return cnt[:P], sw[:P]

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .countsketch import countsketch_pallas
-from .estimate import estimate_partials_pallas
+from .estimate import estimate_one_vs_many_pallas, estimate_partials_pallas
 from .icws_sketch import icws_sketch_pallas
 
 
@@ -44,6 +44,12 @@ def estimate_partials(fpa, va, fpb, vb):
     return estimate_partials_pallas(fpa, va, fpb, vb, interpret=_interpret())
 
 
+def estimate_partials_one_vs_many(fq, vq, fpc, vc):
+    """Fused Algorithm-5 partial sums: one query sketch vs a [P, m] corpus."""
+    return estimate_one_vs_many_pallas(fq, vq, fpc, vc,
+                                       interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=())
 def icws_estimate(fpa, va, na, fpb, vb, nb):
     """Full ICWS inner-product estimate for P pairs (epilogue in jnp).
@@ -56,3 +62,19 @@ def icws_estimate(fpa, va, na, fpb, vb, nb):
     m_tilde = 2.0 / (1.0 + j_hat)
     est = na * nb * (m_tilde / m) * sw
     return jnp.where((na == 0) | (nb == 0), 0.0, est)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def icws_estimate_corpus(fq, vq, nq, fpc, vc, nc):
+    """ICWS inner-product estimates of one query against a whole corpus.
+
+    Args: fq/vq [1, m] (or [m]) query, nq scalar norm; fpc/vc [P, m] corpus,
+    nc [P] norms.  Returns [P] f32 estimates.  The query is broadcast inside
+    the kernel -- no [P, m] query tiling is ever materialized.
+    """
+    m = fpc.shape[1]
+    cnt, sw = estimate_partials_one_vs_many(fq, vq, fpc, vc)
+    j_hat = cnt / m
+    m_tilde = 2.0 / (1.0 + j_hat)
+    est = nq * nc * (m_tilde / m) * sw
+    return jnp.where((nq == 0) | (nc == 0), 0.0, est)

@@ -123,3 +123,14 @@ def estimate_partials_ref(fpa, va, fpb, vb):
     safe_q = jnp.where(collide & (q > 0), q, 1.0)
     term = jnp.where(collide, va * vb / safe_q, 0.0)
     return collide.astype(jnp.float32).sum(axis=1), term.sum(axis=1)
+
+
+def estimate_one_vs_many_ref(fq, vq, fpc, vc):
+    """One query sketch vs a P-row corpus (broadcast form of the above).
+
+    Args:  fq/vq [1, m] or [m] query; fpc/vc [P, m] corpus.
+    Returns (n_collide [P], s_weight [P]).
+    """
+    fq = fq.reshape(1, -1)
+    vq = vq.reshape(1, -1)
+    return estimate_partials_ref(fq, vq, fpc, vc)

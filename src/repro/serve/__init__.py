@@ -1,4 +1,7 @@
-"""Serving runtime: prefill/decode steps + batched engine."""
+"""Serving runtime: prefill/decode steps + batched engine, and the
+sketch-corpus search service (the §1.3 dataset-search endpoint)."""
+from .sketch_service import ServiceStats, SketchSearchService
 from .step import greedy_sample, make_decode_step, make_prefill_step
 
-__all__ = ["make_prefill_step", "make_decode_step", "greedy_sample"]
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_sample",
+           "SketchSearchService", "ServiceStats"]

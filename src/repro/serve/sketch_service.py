@@ -1,0 +1,75 @@
+"""Serving front-end for corpus-scale dataset search.
+
+Wraps :class:`repro.data.DatasetSearchIndex` in the shape a query service
+needs: named-table ingestion, a ``search`` endpoint, and request accounting.
+The hot loop is the device path -- the corpus lives as pre-stacked device
+arrays and every query is one ICWS sketch launch plus six one-vs-many
+estimate launches, independent of how the corpus was ingested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data import DatasetSearchIndex, SearchResult
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    tables_ingested: int = 0
+    rows_ingested: int = 0
+    queries_served: int = 0
+    total_query_ms: float = 0.0
+    last_query_ms: float = 0.0
+
+    @property
+    def mean_query_ms(self) -> float:
+        return self.total_query_ms / max(self.queries_served, 1)
+
+
+class SketchSearchService:
+    """Sketch-index serving: ingest tables once, answer joinability/corr
+    queries against the whole corpus from sketches alone."""
+
+    def __init__(self, m: int = 256, seed: int = 0,
+                 backend: str = "device", keep_host_oracle: bool = True):
+        self.index = DatasetSearchIndex(m=m, seed=seed, backend=backend,
+                                        keep_host_oracle=keep_host_oracle)
+        self.stats = ServiceStats()
+
+    # -- ingestion ----------------------------------------------------------
+    def ingest(self, name: str, keys: np.ndarray, values: np.ndarray) -> None:
+        if any(t.name == name for t in self.index.tables):
+            raise ValueError(f"table {name!r} already ingested")
+        self.index.add_table(name, keys, values)
+        self.stats.tables_ingested += 1
+        self.stats.rows_ingested += len(keys)
+
+    def ingest_many(self, tables: Sequence[Tuple[str, np.ndarray, np.ndarray]]
+                    ) -> None:
+        for name, keys, values in tables:
+            self.ingest(name, keys, values)
+
+    # -- queries ------------------------------------------------------------
+    def search(self, keys: np.ndarray, values: np.ndarray, *,
+               top_k: int = 10, min_join: float = 1.0,
+               backend: Optional[str] = None) -> List[SearchResult]:
+        t0 = time.perf_counter()
+        results = self.index.query(keys, values, top_k=top_k,
+                                   min_join=min_join, backend=backend)
+        ms = (time.perf_counter() - t0) * 1e3
+        self.stats.queries_served += 1
+        self.stats.last_query_ms = ms
+        self.stats.total_query_ms += ms
+        return results
+
+    def describe(self) -> Dict[str, float]:
+        return {
+            "tables": float(len(self.index.tables)),
+            "storage_doubles": self.index.storage_doubles(),
+            "queries_served": float(self.stats.queries_served),
+            "mean_query_ms": self.stats.mean_query_ms,
+        }

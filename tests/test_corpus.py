@@ -1,0 +1,240 @@
+"""Device-resident sketch corpus + one-vs-many estimation path.
+
+Covers: the one-vs-many Pallas kernel vs its jnp oracle and vs the pairwise
+kernel on a tiled query; SketchCorpus chunked append semantics; the device
+corpus-query path against the host ICWS estimator on identical sketches
+(1e-5 relative); the rewired DatasetSearchIndex (device vs host-oracle
+agreement, duplicate-key ingestion); and the serving front-end.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ICWS, SparseVec
+from repro.core.icws import StackedICWS
+from repro.data import DatasetSearchIndex, SketchCorpus, sketch_batch
+from repro.data.synthetic import sparse_pair
+from repro.kernels import ops, ref
+from repro.kernels.estimate import (estimate_one_vs_many_pallas,
+                                    estimate_partials_pallas)
+from repro.serve import SketchSearchService
+
+
+# ---------------------------------------------------------------------------
+# one-vs-many kernel: vs oracle, vs pairwise kernel on a tiled query
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("P,m", [(8, 128), (5, 100), (16, 512), (1, 64),
+                                 (9, 130)])
+def test_one_vs_many_kernel_matches_ref(P, m):
+    rng = np.random.default_rng(P * 37 + m)
+    fq = rng.integers(0, 50, size=(1, m)).astype(np.int32)
+    fpc = rng.integers(0, 50, size=(P, m)).astype(np.int32)
+    vq = rng.normal(size=(1, m)).astype(np.float32)
+    vc = rng.normal(size=(P, m)).astype(np.float32)
+    cnt_k, sw_k = estimate_one_vs_many_pallas(
+        jnp.asarray(fq), jnp.asarray(vq), jnp.asarray(fpc), jnp.asarray(vc),
+        interpret=True)
+    cnt_r, sw_r = ref.estimate_one_vs_many_ref(
+        jnp.asarray(fq), jnp.asarray(vq), jnp.asarray(fpc), jnp.asarray(vc))
+    np.testing.assert_allclose(np.asarray(cnt_k), np.asarray(cnt_r))
+    np.testing.assert_allclose(np.asarray(sw_k), np.asarray(sw_r), rtol=1e-4)
+
+
+def test_one_vs_many_equals_pairwise_on_tiled_query():
+    """Broadcasting the query in-kernel == materializing the [P, m] tile."""
+    rng = np.random.default_rng(3)
+    P, m = 12, 256
+    fq = rng.integers(0, 30, size=(1, m)).astype(np.int32)
+    vq = rng.normal(size=(1, m)).astype(np.float32)
+    fpc = rng.integers(0, 30, size=(P, m)).astype(np.int32)
+    vc = rng.normal(size=(P, m)).astype(np.float32)
+    cnt_b, sw_b = estimate_one_vs_many_pallas(
+        jnp.asarray(fq), jnp.asarray(vq), jnp.asarray(fpc), jnp.asarray(vc),
+        interpret=True)
+    tiled_f = jnp.asarray(np.repeat(fq, P, axis=0))
+    tiled_v = jnp.asarray(np.repeat(vq, P, axis=0))
+    cnt_p, sw_p = estimate_partials_pallas(tiled_f, tiled_v,
+                                           jnp.asarray(fpc), jnp.asarray(vc),
+                                           interpret=True)
+    np.testing.assert_allclose(np.asarray(cnt_b), np.asarray(cnt_p))
+    np.testing.assert_allclose(np.asarray(sw_b), np.asarray(sw_p), rtol=1e-5)
+
+
+def test_one_vs_many_empty_query_guard():
+    """An all-empty query sketch (fp == -1) collides with nothing."""
+    P, m = 4, 128
+    fq = jnp.full((1, m), -1, jnp.int32)
+    vq = jnp.zeros((1, m))
+    fpc = jnp.full((P, m), -1, jnp.int32)     # empty corpus rows too
+    vc = jnp.zeros((P, m))
+    cnt, sw = estimate_one_vs_many_pallas(fq, vq, fpc, vc, interpret=True)
+    assert np.all(np.asarray(cnt) == 0.0)
+    assert np.all(np.asarray(sw) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# SketchCorpus: chunked append, no restacking, device-vs-host estimates
+# ---------------------------------------------------------------------------
+def _lake_vecs(rng, count, n=600, nnz=150):
+    vecs = []
+    for _ in range(count):
+        a, b = sparse_pair(rng, n=n, nnz=nnz, overlap=0.3)
+        vecs.append(a)
+    return vecs
+
+
+def test_corpus_chunked_append_matches_one_shot():
+    rng = np.random.default_rng(17)
+    vecs = _lake_vecs(rng, 7)
+    m = 128
+    one = SketchCorpus(m=m, seed=5)
+    one.add_batch(vecs)
+    chunked = SketchCorpus(m=m, seed=5)
+    chunked.add_batch(vecs[:3])
+    chunked.add_batch(vecs[3:5])
+    chunked.add_batch(vecs[5:])
+    assert len(one) == len(chunked) == 7
+    fp1, v1, n1 = one.arrays()
+    fp2, v2, n2 = chunked.arrays()
+    assert np.array_equal(np.asarray(fp1), np.asarray(fp2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(n2))
+    # consolidation is cached: same buffers returned until the next append
+    assert chunked.arrays()[0] is fp2
+    chunked.add_batch(vecs[:1])
+    assert len(chunked) == 8
+
+
+def test_corpus_device_query_matches_host_estimator_on_identical_sketches():
+    """The acceptance bar: one-vs-many device estimates == host ICWS
+    estimate_batch on the same sketch arrays, to 1e-5 relative."""
+    rng = np.random.default_rng(23)
+    vecs = _lake_vecs(rng, 9)
+    q, _ = sparse_pair(rng, n=600, nnz=150, overlap=0.3)
+    m = 256
+    corpus = SketchCorpus(m=m, seed=2)
+    corpus.add_batch(vecs)
+    fq, vq, nq = corpus.sketch_query(q)
+    dev = np.asarray(corpus.estimate(fq, vq, nq[0]), np.float64)
+
+    # identical sketches, host estimator (f64), query tiled host-side
+    fpc, vc, nc = (np.asarray(a) for a in corpus.arrays())
+    P = len(vecs)
+    A = StackedICWS(fingerprints=np.repeat(np.asarray(fq), P, axis=0),
+                    values=np.repeat(np.asarray(vq, np.float64), P, axis=0),
+                    norm=np.full(P, float(nq[0]), np.float64))
+    B = StackedICWS(fingerprints=fpc, values=vc.astype(np.float64),
+                    norm=nc.astype(np.float64))
+    host = ICWS(m=m, seed=2).estimate_batch(A, B)
+    scale = np.maximum(np.abs(host), np.abs(dev))
+    rel = np.abs(dev - host) / np.where(scale == 0, 1.0, scale)
+    assert rel.max() < 1e-5, rel
+
+
+def test_corpus_estimate_accuracy_end_to_end():
+    """Device corpus query estimates true inner products (paper band)."""
+    rng = np.random.default_rng(29)
+    m = 2048
+    pairs = [sparse_pair(rng, n=800, nnz=200, overlap=0.4) for _ in range(4)]
+    corpus = SketchCorpus(m=m, seed=9)
+    corpus.add_batch([b for _, b in pairs])
+    from repro.core import inner_fast
+    for qi, (a, _) in enumerate(pairs):
+        est = np.asarray(corpus.estimate_vec(a))
+        true = inner_fast(a, pairs[qi][1])
+        bound = 4.0 / np.sqrt(m) * a.norm() * pairs[qi][1].norm()
+        assert abs(est[qi] - true) < bound
+
+
+def test_corpus_empty_raises():
+    corpus = SketchCorpus(m=64)
+    with pytest.raises(ValueError):
+        corpus.arrays()
+
+
+# ---------------------------------------------------------------------------
+# DatasetSearchIndex: device path vs host oracle, duplicate keys
+# ---------------------------------------------------------------------------
+def test_dataset_search_device_vs_host_oracle():
+    rng = np.random.default_rng(31)
+    idx = DatasetSearchIndex(m=768, seed=4)
+    keys = np.arange(800)
+    signal = rng.normal(size=800)
+    idx.add_table("corr", keys, signal + 0.2 * rng.normal(size=800))
+    idx.add_table("noise", keys, rng.normal(size=800))
+    idx.add_table("disjoint", np.arange(10_000, 10_800),
+                  rng.normal(size=800))
+
+    dev = idx.query(keys, signal, top_k=3, min_join=40)
+    host = idx.query(keys, signal, top_k=3, min_join=40, backend="host")
+    assert [r.name for r in dev] == [r.name for r in host]
+    assert dev[0].name == "corr"
+    for d, h in zip(dev, host):
+        # two unbiased estimators of the same join size; both near truth
+        assert abs(d.join_size - h.join_size) < 0.35 * 800
+        assert d.corr == h.corr          # KMV refinement is shared
+
+
+def test_dataset_search_duplicate_keys_regression():
+    """Realistic lake table with repeated join keys must ingest and the
+    join size must count joined row *pairs* (SQL semantics)."""
+    rng = np.random.default_rng(37)
+    n_orders = 1200
+    customer = rng.integers(0, 200, size=n_orders)        # many repeats
+    amount = rng.uniform(10, 500, size=n_orders)
+    idx = DatasetSearchIndex(m=1024, seed=6)
+    idx.add_table("orders", customer, amount)             # crashed before
+
+    q_keys = np.arange(200)                               # customer dimension
+    q_vals = rng.uniform(0, 1, size=200)
+    res = idx.query(q_keys, q_vals, top_k=1, min_join=10)
+    assert len(res) == 1
+    # true join cardinality = number of order rows with customer in 0..199
+    true_pairs = float(n_orders)
+    assert abs(res[0].join_size - true_pairs) / true_pairs < 0.5
+    # the indicator vector carries multiplicities
+    ind, val, sq = idx.vectorize(customer, amount)
+    assert ind.values.sum() == n_orders
+    assert ind.nnz == len(np.unique(customer))
+    # aggregated value vector sums duplicates
+    first_key = int(ind.indices[0])
+    assert np.isclose(val.values[0], amount[customer == first_key].sum())
+
+
+def test_dataset_search_zero_values_survive_aggregation():
+    keys = np.array([3, 3, 5])
+    vals = np.array([1.0, -1.0, 0.0])     # duplicates cancel; explicit zero
+    idx = DatasetSearchIndex(m=64, seed=0)
+    ind, val, sq = idx.vectorize(keys, vals)
+    assert set(ind.indices) == {3, 5}     # both keys represented
+    assert set(val.indices) == {3, 5}     # cancellation nudged, not dropped
+
+
+def test_sparsevec_sum_duplicates_option():
+    v = SparseVec.from_pairs([4, 1, 4, 2], [1.0, 2.0, 3.0, 4.0], 10,
+                             sum_duplicates=True)
+    assert list(v.indices) == [1, 2, 4]
+    assert list(v.values) == [2.0, 4.0, 4.0]
+    with pytest.raises(ValueError):
+        SparseVec.from_pairs([4, 1, 4], [1.0, 2.0, 3.0], 10)
+
+
+# ---------------------------------------------------------------------------
+# serving front-end
+# ---------------------------------------------------------------------------
+def test_sketch_search_service():
+    rng = np.random.default_rng(41)
+    svc = SketchSearchService(m=512, seed=3)
+    keys = np.arange(500)
+    signal = rng.normal(size=500)
+    svc.ingest_many([
+        ("a_corr", keys, signal + 0.1 * rng.normal(size=500)),
+        ("b_noise", keys, rng.normal(size=500)),
+    ])
+    with pytest.raises(ValueError):
+        svc.ingest("a_corr", keys, signal)
+    res = svc.search(keys, signal, top_k=2, min_join=20)
+    assert res and res[0].name == "a_corr"
+    d = svc.describe()
+    assert d["tables"] == 2.0 and d["queries_served"] == 1.0
+    assert svc.stats.last_query_ms > 0

@@ -22,6 +22,7 @@ def _qkv(rng, B, T, H, K, D, S=None, dtype=jnp.float32):
     (1, 96, 6, 2, 16, True, 24, 32, 32),      # sliding window, ragged heads
     (1, 64, 2, 2, 64, True, 0, 64, 64),       # single chunk
 ])
+@pytest.mark.slow
 def test_flash_matches_chunked_reference(B, T, H, K, D, causal, window, qc, kc):
     rng = np.random.default_rng(B * 100 + T + H)
     q, k, v = _qkv(rng, B, T, H, K, D)
@@ -47,6 +48,7 @@ def test_flash_dtypes(dtype):
     assert out.dtype == dtype
 
 
+@pytest.mark.slow
 def test_flash_block_size_invariance():
     rng = np.random.default_rng(9)
     q, k, v = _qkv(rng, 1, 128, 4, 2, 16)

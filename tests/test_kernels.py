@@ -34,6 +34,7 @@ def _sparse_batch(rng, B, N, density=0.6, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("B,N,m", [(1, 256, 128), (3, 300, 64), (2, 1000, 200),
                                    (4, 64, 128), (2, 513, 257)])
+@pytest.mark.slow
 def test_icws_kernel_matches_ref(B, N, m):
     rng = np.random.default_rng(B * 1000 + N + m)
     w, keys, vals = _sparse_batch(rng, B, N)
@@ -69,6 +70,7 @@ def test_icws_kernel_empty_rows():
     assert np.all(np.asarray(val) == 0.0)
 
 
+@pytest.mark.slow
 def test_icws_kernel_block_size_invariance():
     """Different tilings must give identical results (tie semantics included)."""
     rng = np.random.default_rng(42)
@@ -83,6 +85,7 @@ def test_icws_kernel_block_size_invariance():
                                    rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_icws_device_collision_law():
     """End-to-end: device sketches obey the weighted-Jaccard collision law."""
     rng = np.random.default_rng(5)
@@ -169,6 +172,7 @@ def test_estimate_kernel_matches_ref(P, m):
     np.testing.assert_allclose(np.asarray(sw_k), np.asarray(sw_r), rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_full_device_estimate_accuracy():
     """Device pipeline (sketch kernel + estimate kernel) estimates <a, b>."""
     rng = np.random.default_rng(8)
