@@ -9,13 +9,13 @@ import numpy as np
 from repro.core import (PAPER_METHODS, SparseVec, inner_fast, make,
                         stack_icws, stack_mh, stack_wmh)
 
-ROWS: List[str] = []
+RECORDS: List[Dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str):
-    row = f"{name},{us_per_call:.2f},{derived}"
-    ROWS.append(row)
-    print(row, flush=True)
+    RECORDS.append({"name": name, "value": float(us_per_call),
+                    "derived": derived})
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
 
 
 def timed(fn: Callable, *args, repeat: int = 1):

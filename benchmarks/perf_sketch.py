@@ -19,6 +19,7 @@ from repro.data.corpus import SketchCorpus
 from repro.data.synthetic import sparse_pair
 from repro.kernels import ops
 from repro.kernels.icws_sketch import icws_sketch_pallas
+from repro.serve import SketchSearchService
 
 from .common import emit, timed
 
@@ -92,3 +93,49 @@ def run(fast: bool = False):
     rel = float(np.max(np.abs(dev64 - host) / scale))
     assert rel < 1e-5, f"device/host corpus estimate divergence: {rel}"
     emit("perf/corpus/max_rel_dev_vs_host", rel * 1e6, "ppm; must be < 10")
+
+    # single-vs-batched serving: the §1.3 endpoint end to end at corpus
+    # scale.  Sequential serving pays one ICWS sketch launch + six
+    # one-vs-many estimate launches per query; search_batch folds a whole
+    # micro-batch into one [3Q, N] sketch launch + ONE fused multi-field
+    # many-vs-many launch whose [bq, bp, bm] blocks amortize per-step costs
+    # across queries.  Min-of-reps timing: this container's wall clock is
+    # noisy and the floor is the honest per-path cost.
+    n_tables, Qn, ms, reps = (48, 4, 64, 1) if fast else (1024, 16, 128, 3)
+    n_rows = 100 if fast else 150
+    svc = SketchSearchService(m=ms, seed=7, keep_host_oracle=False)
+    lake_rng = np.random.default_rng(31)
+    base_keys = np.arange(n_rows)
+    sig = lake_rng.normal(size=n_rows)
+    for t in range(n_tables):
+        svc.ingest(f"t{t}", base_keys,
+                   sig + (0.1 + 0.2 * t) * lake_rng.normal(size=n_rows))
+    queries = [(base_keys, sig + 0.1 * lake_rng.normal(size=n_rows))
+               for _ in range(Qn)]
+    # warm both jit/kernel caches before timing
+    svc.search(*queries[0], top_k=3, min_join=10)
+    svc.search_batch(queries, top_k=3, min_join=10, micro_batch=Qn)
+
+    s_seq, s_bat = float("inf"), float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        seq_res = [svc.search(k, v, top_k=3, min_join=10) for k, v in queries]
+        s_seq = min(s_seq, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bat_res = svc.search_batch(queries, top_k=3, min_join=10,
+                                   micro_batch=Qn)
+        s_bat = min(s_bat, time.perf_counter() - t0)
+    assert bat_res == seq_res, "batched results diverged from sequential"
+    qps_seq = Qn / s_seq
+    qps_bat = Qn / s_bat
+    emit("perf/serve/search_sequential", s_seq / Qn * 1e6,
+         f"Q={Qn} tables={n_tables} m={ms} qps={qps_seq:.2f}")
+    emit("perf/serve/search_batched", s_bat / Qn * 1e6,
+         f"Q={Qn} tables={n_tables} m={ms} qps={qps_bat:.2f} micro_batch={Qn}")
+    speedup = qps_bat / qps_seq
+    emit("perf/serve/batched_speedup", speedup,
+         f"x; batched qps / sequential qps at Q={Qn}")
+    if Qn >= 16:
+        assert speedup >= 2.0, (
+            f"batched serving must be >= 2x sequential at Q={Qn}; "
+            f"got {speedup:.2f}x")

@@ -2,11 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
 ``--fast`` shrinks trial counts for CI; the default sizes reproduce the
-paper's qualitative results.
+paper's qualitative results.  ``--json PATH`` additionally dumps every
+emitted row as a JSON artifact (CI uploads ``BENCH_sketch.json`` from the
+perf suite's smoke run).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -16,9 +19,11 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig4,fig5,fig6,table7,theory,perf")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows as a JSON benchmark artifact")
     args = ap.parse_args()
 
-    from . import (fig4_synthetic, fig5_worldbank, fig6_newsgroups,
+    from . import (common, fig4_synthetic, fig5_worldbank, fig6_newsgroups,
                    perf_sketch, table7_overlap, theory_check)
     suites = {
         "fig4": fig4_synthetic.run,
@@ -31,11 +36,19 @@ def main() -> None:
     only = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     t0 = time.time()
+    durations = {}
     for name in only:
         t = time.time()
         suites[name](fast=args.fast)
-        print(f"# {name} done in {time.time()-t:.1f}s", flush=True)
+        durations[name] = time.time() - t
+        print(f"# {name} done in {durations[name]:.1f}s", flush=True)
     print(f"# total {time.time()-t0:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"fast": bool(args.fast), "suites": only,
+                       "suite_seconds": durations,
+                       "rows": common.RECORDS}, f, indent=2)
+        print(f"# wrote {len(common.RECORDS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh, shard_map
 from repro.optim.compression import (CompressionConfig, compressed_update,
                                      compression_ratio)
 from repro.train.telemetry import TelemetryConfig, gradient_agreement
@@ -32,8 +33,7 @@ def main():
     n, replicas, steps, lr = 2048, 4, 200, 8.0
     ccfg = CompressionConfig(width=256, reps=5, seed=11)
     tcfg = TelemetryConfig(m=256, seed=3)
-    mesh = jax.make_mesh((replicas,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((replicas,), ("data",))
 
     rng = np.random.default_rng(0)
     w_true = rng.normal(size=n).astype(np.float32)
@@ -54,11 +54,11 @@ def main():
         delta, new_r = compressed_update(g, r[0], "data", ccfg, lr=lr)
         return (w[0] - delta)[None], new_r[None]
 
-    step = jax.jit(jax.shard_map(
+    step = jax.jit(shard_map(
         worker, mesh=mesh,
         in_specs=(P("data", None), P("data", None), P("data", None, None),
                   P("data", None)),
-        out_specs=(P("data", None), P("data", None)), check_vma=False))
+        out_specs=(P("data", None), P("data", None)), check=False))
 
     def err_of(w):
         w = np.asarray(w)
@@ -94,10 +94,10 @@ def main():
         g = local_grad(jnp.zeros(n), Xr[0], yr[0])
         return gradient_agreement(g, "data", tcfg)[None]
 
-    sim = jax.shard_map(telem, mesh=mesh,
-                        in_specs=(P("data", None, None), P("data", None)),
-                        out_specs=P("data", None, None),
-                        check_vma=False)(Xj, yj)
+    sim = shard_map(telem, mesh=mesh,
+                    in_specs=(P("data", None, None), P("data", None)),
+                    out_specs=P("data", None, None),
+                    check=False)(Xj, yj)
     print("\nsketch-estimated gradient agreement at step 0 (m=256 floats per "
           "replica on the wire,\n instead of full gradients; diagonal = self = 1):")
     print(np.array_str(np.asarray(sim)[0], precision=2, suppress_small=True))

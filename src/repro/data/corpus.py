@@ -152,10 +152,31 @@ class SketchCorpus:
                                         jnp.asarray(nq, jnp.float32).reshape(()),
                                         fpc, vc, nc)
 
+    def estimate_batch(self, fq, vq, nq) -> jnp.ndarray:
+        """Inner-product estimates of Q query sketches vs every corpus row.
+
+        One many-vs-many kernel launch for the whole query batch: each
+        ``[bq, m]`` query block is re-read across the corpus grid dimension,
+        so no ``[Q, P, m]`` intermediate ever exists.  Returns ``[Q, P]`` f32.
+        """
+        fpc, vc, nc = self.arrays()
+        return ops.icws_estimate_many(
+            jnp.asarray(fq, jnp.int32).reshape(-1, self.m),
+            jnp.asarray(vq, jnp.float32).reshape(-1, self.m),
+            jnp.asarray(nq, jnp.float32).reshape(-1),
+            fpc, vc, nc)
+
     def estimate_vec(self, v: SparseVec) -> jnp.ndarray:
         """Sketch ``v`` and estimate it against the whole corpus."""
         fq, vq, nq = self.sketch_query(v)
         return self.estimate(fq, vq, nq[0])
+
+    def estimate_vecs(self, vecs: Sequence[SparseVec]) -> jnp.ndarray:
+        """Sketch a batch of queries (one launch) and estimate all of them
+        against the whole corpus (one launch).  Returns ``[Q, P]`` f32."""
+        fq, vq, nq = sketch_batch(vecs, m=self.m, seed=self.seed,
+                                  bucket=self.bucket)
+        return self.estimate_batch(fq, vq, nq)
 
     def storage_doubles(self) -> float:
         """Paper accounting: 1.5 doubles per sample + 1 norm, per sketch."""

@@ -22,6 +22,15 @@ copy, and the corpus is never restacked.  Candidate ranking (top-k by
 before any result leaves the device; the host then refines the correlation
 of just those k candidates from the matched KMV samples.
 
+Batched serving path (:meth:`DatasetSearchIndex.query_batch`): Q queries are
+vectorized together, sketched by ONE ``[3Q, N]`` ICWS kernel launch, and all
+six field-pair inner products of every query are computed by ONE fused
+multi-field many-vs-many estimate launch
+(:func:`repro.kernels.ops.icws_estimate_fields`) against cached ``[3, P, m]``
+field stacks; ranking is the same top-k kernel ``vmap``'d over the batch.
+Rankings are identical to a loop of :meth:`query` -- the batch path exists
+purely to collapse ``O(6Q)`` kernel launches into ``O(1)``.
+
 Oracle path (``backend="host"``): the original host-numpy WMH implementation,
 kept verbatim as the cross-checked reference for the device path.  Every §1.3
 statistic falls out of inner-product estimates:
@@ -44,10 +53,18 @@ import numpy as np
 from repro.core import KMV, SparseVec, WeightedMinHash, stack_wmh
 from repro.core.kmv import KMVSketch
 from repro.core.wmh import StackedWMH, WMHSketch
+from repro.kernels import ops
 
 from .corpus import SketchCorpus, sketch_batch
 
 FIELDS = ("key_indicator", "values", "values_sq")
+
+# Field-pair maps for the fused multi-field estimate kernel, in
+# _rank_by_corr argument order (join, sum_a, sum_b, sum_a2, sum_b2, prod):
+# estimate g pairs query field QFIELD[g] with corpus field CFIELD[g].
+_IND, _VAL, _SQ = 0, 1, 2
+QFIELD = (_IND, _VAL, _IND, _SQ, _IND, _VAL)
+CFIELD = (_IND, _IND, _VAL, _IND, _SQ, _VAL)
 
 
 @dataclasses.dataclass
@@ -71,9 +88,8 @@ class SearchResult:
     corr: float
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _rank_by_corr(join, sum_a, sum_b, sum_a2, sum_b2, prod,
-                  min_join, k: int):
+def _rank_by_corr_body(join, sum_a, sum_b, sum_a2, sum_b2, prod,
+                       min_join, k: int):
     """Top-k corpus rows by |sketch-estimated corr| among joinable rows.
 
     All inputs are [P] device arrays of inner-product estimates; the output
@@ -89,6 +105,23 @@ def _rank_by_corr(join, sum_a, sum_b, sum_a2, sum_b2, prod,
     corr = jnp.clip(corr, -1.0, 1.0)
     score = jnp.where(join >= min_join, jnp.abs(corr), -1.0)
     return jax.lax.top_k(score, k)
+
+
+_rank_by_corr = jax.jit(_rank_by_corr_body, static_argnames=("k",))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rank_by_corr_batch(join, sum_a, sum_b, sum_a2, sum_b2, prod,
+                        min_join, k: int):
+    """:func:`_rank_by_corr` vmapped over a [Q, P] estimate batch.
+
+    Returns (scores [Q, k], indices [Q, k]); numerics per row are exactly
+    the single-query kernel's, so batched rankings match the query loop.
+    """
+    return jax.vmap(
+        lambda j, sa, sb, sa2, sb2, pr: _rank_by_corr_body(
+            j, sa, sb, sa2, sb2, pr, min_join, k)
+    )(join, sum_a, sum_b, sum_a2, sum_b2, prod)
 
 
 class DatasetSearchIndex:
@@ -112,17 +145,26 @@ class DatasetSearchIndex:
         self.tables: List[TableSketch] = []
         self.corpora: Dict[str, SketchCorpus] = {
             f: SketchCorpus(m=m, seed=seed) for f in FIELDS}
+        # cached [3, P, m] stacks of the field corpora for the fused batched
+        # query path; invalidated by table count (append-only corpus)
+        self._field_stack: Optional[Tuple[int, Tuple]] = None
 
     # -- ingestion ----------------------------------------------------------
     def vectorize(self, keys: np.ndarray, values: np.ndarray
                   ) -> Tuple[SparseVec, SparseVec, SparseVec]:
         keys = np.asarray(keys, dtype=np.int64)
         values = np.asarray(values, dtype=np.float64)
+        # the sketch key domain is [0, key_space): fold raw int64 keys FIRST,
+        # so two distinct keys that collide mod key_space aggregate the same
+        # way in all three field vectors (pre-fix, the signed-value vector
+        # deduplicated raw keys and then hit from_pairs' duplicate-index
+        # error when folded keys collided, while the indicator aggregated)
+        keys = keys % np.int64(self.key_space)
         # zero values would vanish from the sparse vector; nudge them so the
         # key stays represented (the paper's vectors assume non-zero values)
         safe = np.where(values == 0.0, 1e-9, values)
-        # aggregate repeated join keys: multiplicity for the indicator,
-        # summed (squared) values for the value vectors
+        # aggregate repeated (post-modulus) join keys: multiplicity for the
+        # indicator, summed (squared) values for the value vectors
         ind = SparseVec.from_pairs(keys, np.ones_like(safe), self.key_space,
                                    sum_duplicates=True)
         sq = SparseVec.from_pairs(keys, safe ** 2, self.key_space,
@@ -194,11 +236,16 @@ class DatasetSearchIndex:
         k = min(top_k, len(self.tables))
         scores, idx = _rank_by_corr(join, sum_a, sum_b, sum_a2, sum_b2, prod,
                                     jnp.float32(min_join), k=k)
-        scores, idx = np.asarray(scores), np.asarray(idx)
-        join_h, sum_b_h = np.asarray(join), np.asarray(sum_b)
+        return self._assemble_results(
+            np.asarray(scores), np.asarray(idx), np.asarray(join),
+            np.asarray(sum_b), q_sample, n_q=max(len(keys), 1))
 
+    def _assemble_results(self, scores, idx, join_h, sum_b_h, q_sample,
+                          n_q: int) -> List[SearchResult]:
+        """Host epilogue shared by the sequential and batched device paths:
+        drop min_join failures, refine corr from the matched KMV samples,
+        re-rank the k survivors by refined |corr|."""
         results = []
-        n_q = max(len(keys), 1)
         for score, i in zip(scores, idx):
             if score < 0:                    # failed the min_join filter
                 continue
@@ -211,6 +258,81 @@ class DatasetSearchIndex:
                 sum_b=float(sum_b_h[i]), mean_b=mean_b, corr=corr))
         results.sort(key=lambda r: abs(r.corr), reverse=True)
         return results
+
+    # -- batched queries -----------------------------------------------------
+    def query_batch(self, queries: Sequence[Tuple[np.ndarray, np.ndarray]],
+                    top_k: int = 10, min_join: float = 1.0,
+                    backend: Optional[str] = None) -> List[List[SearchResult]]:
+        """Answer Q ``(keys, values)`` queries in one shot.
+
+        Device backend: ONE ``[3Q, N]`` ICWS sketch launch covers every field
+        vector of every query, and ONE fused multi-field many-vs-many launch
+        computes all ``6 * Q * P`` inner-product estimates; ranking is the
+        single-query top-k ``vmap``'d over the batch.  Per-query results are
+        identical to ``[self.query(k, v) for k, v in queries]``.
+
+        Host backend: the host oracle has no kernel launches to amortize, so
+        it simply loops the sequential oracle path.
+        """
+        queries = list(queries)
+        if not self.tables or not queries:
+            return [[] for _ in queries]
+        backend = backend or self.backend
+        if backend == "host":
+            return [self._query_host(np.asarray(k), np.asarray(v),
+                                     top_k, min_join) for k, v in queries]
+        return self._query_batch_device(queries, top_k, min_join)
+
+    def _stacked_field_arrays(self):
+        """Cached ``[3, P, m]`` device stacks of the three field corpora
+        (+ ``[3, P]`` norms), rebuilt only when tables were added.
+
+        Note: the stack is a copy, so an index serving both sequential and
+        batched queries holds its sketches twice on device; making the stack
+        canonical (sequential path slicing ``fc3[i]``) would halve that and
+        is the planned follow-up for very large lakes."""
+        P = len(self.tables)
+        if self._field_stack is None or self._field_stack[0] != P:
+            arrs = [self.corpora[f].arrays() for f in FIELDS]
+            self._field_stack = (P, (jnp.stack([a[0] for a in arrs]),
+                                     jnp.stack([a[1] for a in arrs]),
+                                     jnp.stack([a[2] for a in arrs])))
+        return self._field_stack[1]
+
+    def _query_batch_device(self, queries, top_k: int, min_join: float
+                            ) -> List[List[SearchResult]]:
+        if not self.keep_device_corpus:
+            raise ValueError("device corpora were not built at ingest "
+                             "(index constructed with backend='host')")
+        Q = len(queries)
+        field_vecs: List[SparseVec] = []
+        samples: List[KMVSketch] = []
+        for keys, values in queries:
+            ind, val, sq = self.vectorize(keys, values)
+            field_vecs.extend((ind, val, sq))
+            samples.append(self.kmv.sketch(val))
+        # one kernel launch sketches all 3Q query field vectors
+        fq, vq, nq = sketch_batch(field_vecs, m=self.m, seed=self.seed)
+        fq3 = fq.reshape(Q, 3, self.m).transpose(1, 0, 2)      # [3, Q, m]
+        vq3 = vq.reshape(Q, 3, self.m).transpose(1, 0, 2)
+        nq3 = nq.reshape(Q, 3).T                               # [3, Q]
+
+        # one fused launch: all six field-pair estimates for every query
+        fc3, vc3, nc3 = self._stacked_field_arrays()
+        est = ops.icws_estimate_fields(fq3, vq3, nq3, fc3, vc3, nc3,
+                                       qmap=QFIELD, cmap=CFIELD)  # [6, Q, P]
+
+        k = min(top_k, len(self.tables))
+        scores, idx = _rank_by_corr_batch(est[0], est[1], est[2], est[3],
+                                          est[4], est[5],
+                                          jnp.float32(min_join), k=k)
+        scores, idx = np.asarray(scores), np.asarray(idx)
+        join_h, sum_b_h = np.asarray(est[0]), np.asarray(est[2])
+        return [
+            self._assemble_results(scores[qi], idx[qi], join_h[qi],
+                                   sum_b_h[qi], samples[qi],
+                                   n_q=max(len(queries[qi][0]), 1))
+            for qi in range(Q)]
 
     # -- host oracle (the original numpy implementation, cross-checked) -----
     def _stack(self, field: str) -> StackedWMH:

@@ -44,7 +44,6 @@ DEFAULT_RULES: Dict[str, MeshAxes] = {
     "ssm_state": None,
     "conv": None,
     "dt_rank": None,
-    "capacity": None,
     "stats": None,
 }
 

@@ -4,18 +4,28 @@ For P sketch pairs with m samples each, computes per pair:
   * the collision count  ``sum_t 1[fp_a == fp_b]``
   * the importance sum   ``sum_t 1[...] * va*vb / min(va^2, vb^2)``
 
-Two variants share the kernel body:
+Four variants share the kernel math:
 
   * ``estimate_partials_pallas``          -- pairwise: A and B are both [P, m].
   * ``estimate_one_vs_many_pallas``       -- one query sketch [1, m] against a
     corpus [P, m].  The query block is *broadcast* across the P grid dimension
     via its BlockSpec index map (every grid step re-reads block (0, mi)), so
-    the caller never tiles the query into a [P, m] copy -- this is the
-    dataset-search serving hot loop (every query hits every corpus sketch).
+    the caller never tiles the query into a [P, m] copy.
+  * ``estimate_many_vs_many_pallas``      -- Q query sketches against a corpus
+    [P, m] in ONE launch, grid ``(Q/BQ, P/BP, m/BM)``.  Each query block is
+    re-read across the P grid dimension exactly the way the one-vs-many
+    variant broadcasts its single row; collisions are formed blockwise as
+    ``[BQ, BP, BM]`` in VMEM and reduced immediately -- no ``[Q, P, m]``
+    tensor is ever materialized.
+  * ``estimate_fields_pallas``            -- the fused multi-field form of the
+    above: query/corpus sketches arrive stacked per *field* (``[F, Q, m]`` /
+    ``[C, P, m]``) and a static list of (query-field, corpus-field) pairs is
+    folded into the leading grid dimension, so e.g. all six §1.3 field-pair
+    estimates of a dataset-search batch run as a single kernel launch.
 
-Grid ``(P/BP, m/BM)`` with the m dimension innermost and accumulating into
-``[BP]`` output blocks.  Pure VPU elementwise + row reduction; one pass over
-the sketches, no intermediate [P, m] materialization in HBM.
+Grids keep the m dimension innermost and accumulate into per-(row[, col])
+output blocks.  Pure VPU elementwise + reduction; one pass over the sketches,
+no intermediate [P, m] / [Q, P, m] materialization in HBM.
 """
 from __future__ import annotations
 
@@ -76,7 +86,7 @@ def estimate_partials_pallas(fpa, va, fpb, vb, *, bp: int = 8, bm: int = 128,
 
 
 @functools.partial(jax.jit, static_argnames=("bp", "bm", "interpret"))
-def estimate_one_vs_many_pallas(fq, vq, fpc, vc, *, bp: int = 8, bm: int = 128,
+def estimate_one_vs_many_pallas(fq, vq, fpc, vc, *, bp: int = 64, bm: int = 128,
                                 interpret: bool = True):
     """One query sketch against a P-row corpus; matches
     :func:`repro.kernels.ref.estimate_one_vs_many_ref`.
@@ -114,3 +124,170 @@ def estimate_one_vs_many_pallas(fq, vq, fpc, vc, *, bp: int = 8, bm: int = 128,
     )(fq.astype(jnp.int32), vq.astype(jnp.float32),
       fpc.astype(jnp.int32), vc.astype(jnp.float32))
     return cnt[:P], sw[:P]
+
+
+def _mvm_body(fq, vq, fc, vc):
+    """Blockwise many-vs-many partials: [BQ, BM] x [BP, BM] -> [BQ, BP].
+
+    The [BQ, BP, BM] collision tensor lives only in VMEM for this block.
+    """
+    fqb, fcb = fq[:, None, :], fc[None, :, :]
+    vqb, vcb = vq[:, None, :], vc[None, :, :]
+    collide = (fqb == fcb) & (fqb >= 0)
+    q = jnp.minimum(vqb * vqb, vcb * vcb)
+    safe_q = jnp.where(collide & (q > 0), q, 1.0)
+    term = jnp.where(collide, vqb * vcb / safe_q, 0.0)
+    return collide.astype(jnp.float32).sum(axis=2), term.sum(axis=2)
+
+
+def _mvm_kernel(fq_ref, vq_ref, fc_ref, vc_ref, cnt_ref, sw_ref):
+    m_idx = pl.program_id(2)
+    cnt, sw = _mvm_body(fq_ref[:, :], vq_ref[:, :], fc_ref[:, :], vc_ref[:, :])
+
+    @pl.when(m_idx == 0)
+    def _init():
+        cnt_ref[:, :] = cnt
+        sw_ref[:, :] = sw
+
+    @pl.when(m_idx != 0)
+    def _acc():
+        cnt_ref[:, :] = cnt_ref[:, :] + cnt
+        sw_ref[:, :] = sw_ref[:, :] + sw
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bp", "bm", "interpret"))
+def estimate_many_vs_many_pallas(fq, vq, fpc, vc, *, bq: int = 8,
+                                 bp: int = 128, bm: int = 128,
+                                 interpret: bool = True):
+    """Q query sketches against a P-row corpus in one launch; matches
+    :func:`repro.kernels.ref.estimate_many_vs_many_ref`.
+
+    Args: fq/vq [Q, m] query fingerprints/values; fpc/vc [P, m] corpus.
+    Returns (n_collide [Q, P], s_weight [Q, P]).  Grid (Q/bq, P/bp, m/bm),
+    m innermost; the query block's index map ignores the P grid index, so
+    every query block is re-read (broadcast) across the corpus dimension and
+    no [Q, P, m] intermediate ever exists outside a [bq, bp, bm] VMEM tile.
+    """
+    Q, m = fq.shape
+    P, _ = fpc.shape
+    q_pad = (-Q) % bq
+    p_pad = (-P) % bp
+    m_pad = (-m) % bm
+    if q_pad or m_pad:
+        # distinct pad sentinels: query padding (-1) never collides with
+        # corpus padding (-2), and fq >= 0 guards both out of the estimate
+        fq = jnp.pad(fq, ((0, q_pad), (0, m_pad)), constant_values=-1)
+        vq = jnp.pad(vq, ((0, q_pad), (0, m_pad)))
+    if p_pad or m_pad:
+        fpc = jnp.pad(fpc, ((0, p_pad), (0, m_pad)), constant_values=-2)
+        vc = jnp.pad(vc, ((0, p_pad), (0, m_pad)))
+    Qp, mp = fq.shape
+    Pp = fpc.shape[0]
+    grid = (Qp // bq, Pp // bp, mp // bm)
+    cnt, sw = pl.pallas_call(
+        _mvm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bm), lambda q, p, mi: (q, mi)),   # re-read over p
+            pl.BlockSpec((bq, bm), lambda q, p, mi: (q, mi)),
+            pl.BlockSpec((bp, bm), lambda q, p, mi: (p, mi)),
+            pl.BlockSpec((bp, bm), lambda q, p, mi: (p, mi)),
+        ],
+        out_specs=[pl.BlockSpec((bq, bp), lambda q, p, mi: (q, p))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((Qp, Pp), jnp.float32)] * 2,
+        interpret=interpret,
+    )(fq.astype(jnp.int32), vq.astype(jnp.float32),
+      fpc.astype(jnp.int32), vc.astype(jnp.float32))
+    return cnt[:Q, :P], sw[:Q, :P]
+
+
+def _fields_kernel(fq_ref, vq_ref, fc_ref, vc_ref, cnt_ref, sw_ref):
+    m_idx = pl.program_id(3)
+    cnt, sw = _mvm_body(fq_ref[0, :, :], vq_ref[0, :, :],
+                        fc_ref[0, :, :], vc_ref[0, :, :])
+
+    @pl.when(m_idx == 0)
+    def _init():
+        cnt_ref[0, :, :] = cnt
+        sw_ref[0, :, :] = sw
+
+    @pl.when(m_idx != 0)
+    def _acc():
+        cnt_ref[0, :, :] = cnt_ref[0, :, :] + cnt
+        sw_ref[0, :, :] = sw_ref[0, :, :] + sw
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap", "bq", "bp", "bm",
+                                             "interpret"))
+def estimate_fields_pallas(fq, vq, fpc, vc, *, qmap, cmap, bq: int = 8,
+                           bp: int = 128, bm: int = 128,
+                           interpret: bool = True):
+    """Fused multi-field many-vs-many partials in ONE kernel launch; matches
+    :func:`repro.kernels.ref.estimate_fields_ref`.
+
+    Args:
+      fq/vq: [F, Q, m] per-field query sketches.
+      fpc/vc: [C, P, m] per-field corpus sketches.
+      qmap/cmap: static same-length tuples of field indices; estimate ``g``
+        pairs query field ``qmap[g]`` with corpus field ``cmap[g]`` (§1.3
+        uses six such pairs over F = C = 3 fields).
+    Returns (n_collide [G, Q, P], s_weight [G, Q, P]) with G = len(qmap).
+
+    The pair list is folded into the leading grid dimension: the query /
+    corpus BlockSpec index maps gather the right field via a static lookup
+    table, so no per-pair [Q, m] / [P, m] copies are ever stacked in HBM.
+    """
+    qmap = tuple(int(i) for i in qmap)
+    cmap = tuple(int(i) for i in cmap)
+    if len(qmap) != len(cmap):
+        raise ValueError("qmap/cmap length mismatch")
+    if not qmap:
+        raise ValueError("qmap/cmap must name at least one field pair")
+    G = len(qmap)
+    F, Q, m = fq.shape
+    C, P, _ = fpc.shape
+    if min(qmap) < 0 or max(qmap) >= F or min(cmap) < 0 or max(cmap) >= C:
+        raise ValueError("field map index out of range")
+    q_pad = (-Q) % bq
+    p_pad = (-P) % bp
+    m_pad = (-m) % bm
+    if q_pad or m_pad:
+        fq = jnp.pad(fq, ((0, 0), (0, q_pad), (0, m_pad)), constant_values=-1)
+        vq = jnp.pad(vq, ((0, 0), (0, q_pad), (0, m_pad)))
+    if p_pad or m_pad:
+        fpc = jnp.pad(fpc, ((0, 0), (0, p_pad), (0, m_pad)),
+                      constant_values=-2)
+        vc = jnp.pad(vc, ((0, 0), (0, p_pad), (0, m_pad)))
+    Qp, mp = fq.shape[1:]
+    Pp = fpc.shape[1]
+
+    def _lut(table):
+        # static python-int lookup expressed as select arithmetic: index maps
+        # may not capture traced constants, only combine grid indices with
+        # python scalars
+        def sel(g):
+            idx = table[0]
+            for i, v in enumerate(table[1:], start=1):
+                idx = jnp.where(g == i, v, idx)
+            return idx
+        return sel
+
+    qsel, csel = _lut(qmap), _lut(cmap)
+    grid = (G, Qp // bq, Pp // bp, mp // bm)
+    cnt, sw = pl.pallas_call(
+        _fields_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, bm), lambda g, q, p, mi: (qsel(g), q, mi)),
+            pl.BlockSpec((1, bq, bm), lambda g, q, p, mi: (qsel(g), q, mi)),
+            pl.BlockSpec((1, bp, bm), lambda g, q, p, mi: (csel(g), p, mi)),
+            pl.BlockSpec((1, bp, bm), lambda g, q, p, mi: (csel(g), p, mi)),
+        ],
+        out_specs=[pl.BlockSpec((1, bq, bp),
+                                lambda g, q, p, mi: (g, q, p))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((G, Qp, Pp), jnp.float32)] * 2,
+        interpret=interpret,
+    )(fq.astype(jnp.int32), vq.astype(jnp.float32),
+      fpc.astype(jnp.int32), vc.astype(jnp.float32))
+    return cnt[:, :Q, :P], sw[:, :Q, :P]

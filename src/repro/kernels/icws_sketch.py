@@ -1,18 +1,26 @@
 """Pallas TPU kernel: batched ICWS (weighted MinHash) sketching.
 
-Grid: ``(B, M/BM, N/BN)`` with the non-zero dimension N innermost and
+Grid: ``(B/BR, M/BM, N/BN)`` with the non-zero dimension N innermost and
 *sequential* ("arbitrary"): each step computes ICWS hash values for a
-``[BM, BN]`` tile of (samples x non-zeros) entirely in VMEM -- 5 uniform
-draws, two logs, one exp, one divide per lane, then a row argmin -- and
-merges the tile winner into the running ``[1, BM]`` output blocks
+``[BR, BM, BN]`` tile of (rows x samples x non-zeros) entirely in VMEM -- 5
+uniform draws, two logs, one exp, one divide per lane, then a per-row argmin
+-- and merges the tile winner into the running ``[BR, BM]`` output blocks
 (value / fingerprint / min) with a strict ``<`` so earlier tiles win ties,
 matching ``jnp.argmin`` first-hit semantics in the oracle.
 
-VMEM budget per step (f32): inputs ``3 * BN`` + intermediates ``~6 * BM*BN``.
-Defaults BM=128, BN=256 => ~800 KiB, comfortably under the ~16 MiB/core VMEM
-of TPU v5e.  The lane dimension (BN=256) is a multiple of 128 as the VPU
-wants; there is no MXU work in this kernel -- it is VPU/transcendental bound,
-which is exactly why it beats the paper's scalar "active index" loop on TPU.
+``BR`` (row block, default 1) amortizes per-step costs across sketch rows:
+a single query sketches 3 field rows and cannot fill a row block, but the
+batched serving/ingest paths launch 3Q-row batches and sketch them with
+``BR`` rows per grid step.  Results are bitwise independent of all three
+block sizes (each row's winner is a global min with first-index ties).
+
+VMEM budget per step (f32): inputs ``3 * BR*BN`` + intermediates
+``~6 * BR*BM*BN``.  Defaults BR=1, BM=128, BN=256 => ~800 KiB, comfortably
+under the ~16 MiB/core VMEM of TPU v5e; keep ``BR*BM*BN`` under ~128K lanes
+(~3 MiB per intermediate) when raising BR.  The lane dimension (BN=256) is a
+multiple of 128 as the VPU wants; there is no MXU work in this kernel -- it
+is VPU/transcendental bound, which is exactly why it beats the paper's
+scalar "active index" loop on TPU.
 """
 from __future__ import annotations
 
@@ -31,96 +39,100 @@ def _icws_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
     m_idx = pl.program_id(1)
     n_idx = pl.program_id(2)
 
-    w = w_ref[0, :]                                   # [BN]
-    keys = key_ref[0, :]                              # [BN] int32
-    vals = val_ref[0, :]                              # [BN]
+    w = w_ref[:, :]                                   # [BR, BN]
+    keys = key_ref[:, :]                              # [BR, BN] int32
+    vals = val_ref[:, :]                              # [BR, BN]
 
     t = m_idx * bm + jax.lax.iota(jnp.int32, bm)      # global sample ids [BM]
-    kk = keys.astype(jnp.uint32)[None, :]             # [1, BN]
+    kk = keys.astype(jnp.uint32)[:, None, :]          # [BR, 1, BN]
 
     def u(stream):
-        salt = salt_for(seed, stream, t)[:, None]     # [BM, 1]
-        return uniform01(kk, salt)                    # [BM, BN]
+        salt = salt_for(seed, stream, t)[None, :, None]   # [1, BM, 1]
+        return uniform01(kk, salt)                    # [BR, BM, BN]
 
     r = -jnp.log(u(1) * u(2))
     c = -jnp.log(u(3) * u(4))
     beta = u(5)
-    logw = jnp.log(jnp.maximum(w, 1e-37))[None, :]
+    logw = jnp.log(jnp.maximum(w, 1e-37))[:, None, :]
     lvl = jnp.floor(logw / r + beta)
     y = jnp.exp(r * (lvl - beta))
     a = c / (y * jnp.exp(r))
-    a = jnp.where((w > 0)[None, :], a, BIG)           # mask padding
+    a = jnp.where((w > 0)[:, None, :], a, BIG)        # mask padding
 
-    arg = jnp.argmin(a, axis=1)                       # [BM]
-    cols = jax.lax.iota(jnp.int32, bn)[None, :]
-    sel = cols == arg[:, None]                        # one-hot [BM, BN]
-    amin = jnp.min(a, axis=1)
-    key_sel = jnp.sum(jnp.where(sel, keys[None, :], 0), axis=1)
-    lvl_sel = jnp.sum(jnp.where(sel, lvl, 0.0), axis=1)
-    val_sel = jnp.sum(jnp.where(sel, vals[None, :], 0.0), axis=1)
+    arg = jnp.argmin(a, axis=2)                       # [BR, BM]
+    cols = jax.lax.iota(jnp.int32, bn)[None, None, :]
+    sel = cols == arg[:, :, None]                     # one-hot [BR, BM, BN]
+    amin = jnp.min(a, axis=2)
+    key_sel = jnp.sum(jnp.where(sel, keys[:, None, :], 0), axis=2)
+    lvl_sel = jnp.sum(jnp.where(sel, lvl, 0.0), axis=2)
+    val_sel = jnp.sum(jnp.where(sel, vals[:, None, :], 0.0), axis=2)
 
     fpbits = hash_u32(
         key_sel.astype(jnp.uint32)
         ^ (lvl_sel.astype(jnp.int32).astype(jnp.uint32) * jnp.uint32(0x9E3779B9)),
-        salt_for(seed, 9, t))
+        salt_for(seed, 9, t)[None, :])
     # 31-bit fingerprint: non-negative int32 (see ref.icws_sketch_ref)
     fp = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
 
     @pl.when(n_idx == 0)
     def _init():
-        amin_ref[0, :] = amin
-        fp_ref[0, :] = fp
-        out_val_ref[0, :] = val_sel
+        amin_ref[:, :] = amin
+        fp_ref[:, :] = fp
+        out_val_ref[:, :] = val_sel
 
     @pl.when(n_idx != 0)
     def _merge():
-        better = amin < amin_ref[0, :]
-        amin_ref[0, :] = jnp.where(better, amin, amin_ref[0, :])
-        fp_ref[0, :] = jnp.where(better, fp, fp_ref[0, :])
-        out_val_ref[0, :] = jnp.where(better, val_sel, out_val_ref[0, :])
+        better = amin < amin_ref[:, :]
+        amin_ref[:, :] = jnp.where(better, amin, amin_ref[:, :])
+        fp_ref[:, :] = jnp.where(better, fp, fp_ref[:, :])
+        out_val_ref[:, :] = jnp.where(better, val_sel, out_val_ref[:, :])
 
 
-@functools.partial(jax.jit, static_argnames=("m", "seed", "bm", "bn", "interpret"))
-def icws_sketch_pallas(w, keys, vals, *, m: int, seed: int,
+@functools.partial(jax.jit, static_argnames=("m", "seed", "br", "bm", "bn",
+                                             "interpret"))
+def icws_sketch_pallas(w, keys, vals, *, m: int, seed: int, br: int = 1,
                        bm: int = 128, bn: int = 256, interpret: bool = True):
     """Batched ICWS sketch via Pallas.  See :func:`repro.kernels.ref.icws_sketch_ref`.
 
     Args: w/keys/vals [B, N] (N padded to a multiple of ``bn`` by the caller
     or here); returns (fp [B, m] int32, val [B, m] f32, amin [B, m] f32).
+    ``br`` rows are sketched per grid step (pad rows are all-zero => empty);
+    results are bitwise identical for every (br, bm, bn) choice.
     """
     B, N = w.shape
     n_pad = (-N) % bn
-    if n_pad:
-        w = jnp.pad(w, ((0, 0), (0, n_pad)))
-        keys = jnp.pad(keys, ((0, 0), (0, n_pad)))
-        vals = jnp.pad(vals, ((0, 0), (0, n_pad)))
+    b_pad = (-B) % br
+    if n_pad or b_pad:
+        w = jnp.pad(w, ((0, b_pad), (0, n_pad)))
+        keys = jnp.pad(keys, ((0, b_pad), (0, n_pad)))
+        vals = jnp.pad(vals, ((0, b_pad), (0, n_pad)))
     m_pad = (-m) % bm
     mp = m + m_pad
-    Np = N + n_pad
+    Bp, Np = w.shape
 
-    grid = (B, mp // bm, Np // bn)
+    grid = (Bp // br, mp // bm, Np // bn)
     kernel = functools.partial(_icws_kernel, seed=seed, bm=bm, bn=bn)
     fp, val, amin = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bn), lambda b, mi, ni: (b, ni)),
-            pl.BlockSpec((1, bn), lambda b, mi, ni: (b, ni)),
-            pl.BlockSpec((1, bn), lambda b, mi, ni: (b, ni)),
+            pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
+            pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
+            pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
         ],
         out_specs=[
-            pl.BlockSpec((1, bm), lambda b, mi, ni: (b, mi)),
-            pl.BlockSpec((1, bm), lambda b, mi, ni: (b, mi)),
-            pl.BlockSpec((1, bm), lambda b, mi, ni: (b, mi)),
+            pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+            pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+            pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, mp), jnp.int32),
-            jax.ShapeDtypeStruct((B, mp), jnp.float32),
-            jax.ShapeDtypeStruct((B, mp), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
         ],
         interpret=interpret,
     )(w.astype(jnp.float32), keys.astype(jnp.int32), vals.astype(jnp.float32))
 
-    fp, val, amin = fp[:, :m], val[:, :m], amin[:, :m]
+    fp, val, amin = fp[:B, :m], val[:B, :m], amin[:B, :m]
     empty = amin >= BIG
     return (jnp.where(empty, -1, fp), jnp.where(empty, 0.0, val), amin)

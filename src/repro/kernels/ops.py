@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .countsketch import countsketch_pallas
-from .estimate import estimate_one_vs_many_pallas, estimate_partials_pallas
+from .estimate import (estimate_fields_pallas, estimate_many_vs_many_pallas,
+                       estimate_one_vs_many_pallas, estimate_partials_pallas)
 from .icws_sketch import icws_sketch_pallas
 
 
@@ -22,9 +23,17 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def icws_sketch(w, keys, vals, *, m: int, seed: int = 0):
-    """Device ICWS sketch of padded sparse batch.  [B,N] -> (fp, val, amin) [B,m]."""
-    return icws_sketch_pallas(w, keys, vals, m=m, seed=seed,
+def icws_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0):
+    """Device ICWS sketch of padded sparse batch.  [B,N] -> (fp, val, amin) [B,m].
+
+    ``row_block=0`` auto-picks: large batches (serving micro-batches, lake
+    ingest) sketch several rows per grid step; small/single-query launches
+    keep the minimal-VMEM one-row tiling.  Results are bitwise identical
+    either way.
+    """
+    if row_block == 0:
+        row_block = 4 if w.shape[0] >= 8 else 1
+    return icws_sketch_pallas(w, keys, vals, m=m, seed=seed, br=row_block,
                               interpret=_interpret())
 
 
@@ -48,6 +57,18 @@ def estimate_partials_one_vs_many(fq, vq, fpc, vc):
     """Fused Algorithm-5 partial sums: one query sketch vs a [P, m] corpus."""
     return estimate_one_vs_many_pallas(fq, vq, fpc, vc,
                                        interpret=_interpret())
+
+
+def estimate_partials_many_vs_many(fq, vq, fpc, vc):
+    """Fused Algorithm-5 partial sums: [Q, m] queries vs a [P, m] corpus."""
+    return estimate_many_vs_many_pallas(fq, vq, fpc, vc,
+                                        interpret=_interpret())
+
+
+def estimate_partials_fields(fq, vq, fpc, vc, *, qmap, cmap):
+    """Fused multi-field partial sums: one launch for all field pairs."""
+    return estimate_fields_pallas(fq, vq, fpc, vc, qmap=tuple(qmap),
+                                  cmap=tuple(cmap), interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -78,3 +99,38 @@ def icws_estimate_corpus(fq, vq, nq, fpc, vc, nc):
     m_tilde = 2.0 / (1.0 + j_hat)
     est = nq * nc * (m_tilde / m) * sw
     return jnp.where((nq == 0) | (nc == 0), 0.0, est)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def icws_estimate_many(fq, vq, nq, fpc, vc, nc):
+    """ICWS inner-product estimates of Q queries against a whole corpus.
+
+    Args: fq/vq [Q, m] queries, nq [Q] norms; fpc/vc [P, m] corpus, nc [P]
+    norms.  Returns [Q, P] f32 estimates from ONE many-vs-many kernel launch.
+    """
+    m = fpc.shape[1]
+    cnt, sw = estimate_partials_many_vs_many(fq, vq, fpc, vc)
+    j_hat = cnt / m
+    m_tilde = 2.0 / (1.0 + j_hat)
+    est = nq[:, None] * nc[None, :] * (m_tilde / m) * sw
+    return jnp.where((nq[:, None] == 0) | (nc[None, :] == 0), 0.0, est)
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
+def icws_estimate_fields(fq, vq, nq, fpc, vc, nc, *, qmap, cmap):
+    """Fused multi-field ICWS estimates: all field pairs in ONE launch.
+
+    Args: fq/vq [F, Q, m] per-field queries, nq [F, Q] norms; fpc/vc
+    [C, P, m] per-field corpus, nc [C, P] norms; qmap/cmap static length-G
+    field-pair maps.  Returns [G, Q, P] f32 estimates -- for §1.3 dataset
+    search, the six estimate launches of the sequential path collapse into
+    this single call.
+    """
+    m = fpc.shape[2]
+    cnt, sw = estimate_partials_fields(fq, vq, fpc, vc, qmap=qmap, cmap=cmap)
+    j_hat = cnt / m
+    m_tilde = 2.0 / (1.0 + j_hat)
+    nqg = jnp.stack([nq[qf] for qf in qmap])[:, :, None]    # [G, Q, 1]
+    ncg = jnp.stack([nc[cf] for cf in cmap])[:, None, :]    # [G, 1, P]
+    est = nqg * ncg * (m_tilde / m) * sw
+    return jnp.where((nqg == 0) | (ncg == 0), 0.0, est)

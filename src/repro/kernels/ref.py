@@ -134,3 +134,34 @@ def estimate_one_vs_many_ref(fq, vq, fpc, vc):
     fq = fq.reshape(1, -1)
     vq = vq.reshape(1, -1)
     return estimate_partials_ref(fq, vq, fpc, vc)
+
+
+def estimate_many_vs_many_ref(fq, vq, fpc, vc):
+    """Q query sketches vs a P-row corpus.
+
+    Args:  fq/vq [Q, m] queries; fpc/vc [P, m] corpus.
+    Returns (n_collide [Q, P], s_weight [Q, P]).  The oracle may materialize
+    the [Q, P, m] broadcast; the kernel must not.
+    """
+    fqb, fcb = fq[:, None, :], fpc[None, :, :]
+    vqb, vcb = vq[:, None, :], vc[None, :, :]
+    collide = (fqb == fcb) & (fqb >= 0)
+    q = jnp.minimum(vqb * vqb, vcb * vcb)
+    safe_q = jnp.where(collide & (q > 0), q, 1.0)
+    term = jnp.where(collide, vqb * vcb / safe_q, 0.0)
+    return collide.astype(jnp.float32).sum(axis=2), term.sum(axis=2)
+
+
+def estimate_fields_ref(fq, vq, fpc, vc, *, qmap, cmap):
+    """Fused multi-field many-vs-many partials.
+
+    Args:  fq/vq [F, Q, m] per-field queries; fpc/vc [C, P, m] per-field
+    corpus; qmap/cmap length-G field-index tuples (see the kernel).
+    Returns (n_collide [G, Q, P], s_weight [G, Q, P]).
+    """
+    cnts, sws = [], []
+    for qf, cf in zip(qmap, cmap):
+        cnt, sw = estimate_many_vs_many_ref(fq[qf], vq[qf], fpc[cf], vc[cf])
+        cnts.append(cnt)
+        sws.append(sw)
+    return jnp.stack(cnts), jnp.stack(sws)

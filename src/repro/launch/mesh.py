@@ -7,16 +7,14 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.compat import auto_axis_types, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -24,4 +22,5 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=auto_axis_types(2))

@@ -201,6 +201,29 @@ def test_dataset_search_duplicate_keys_regression():
     assert np.isclose(val.values[0], amount[customer == first_key].sum())
 
 
+def test_vectorize_aggregates_keys_colliding_mod_key_space():
+    """Two distinct int64 keys that collide mod ``key_space`` must fold and
+    aggregate identically in all three field vectors (pre-fix, the signed-
+    value vector deduplicated *raw* keys, so colliding keys crashed/dropped
+    in ``from_pairs`` while the indicator path aggregated them)."""
+    ks = 97
+    idx = DatasetSearchIndex(m=64, seed=0, key_space=ks)
+    keys = np.array([1, 1 + ks, 5, 5 + 3 * ks, 96])
+    vals = np.array([2.0, 3.0, 1.0, 4.0, -1.0])
+    ind, val, sq = idx.vectorize(keys, vals)
+    for v in (ind, val, sq):
+        assert list(v.indices) == [1, 5, 96]          # folded + deduplicated
+        assert np.all(v.indices < ks)                 # in the sketch domain
+    assert ind.values[0] == 2.0                       # multiplicity of key 1
+    assert val.values[0] == 5.0 and val.values[1] == 5.0
+    assert sq.values[0] == 2.0 ** 2 + 3.0 ** 2
+    # and a colliding table ingests + serves end to end on both paths
+    idx.add_table("t", keys, vals)
+    res = idx.query(keys, vals, top_k=1, min_join=1)
+    host = idx.query(keys, vals, top_k=1, min_join=1, backend="host")
+    assert res and host and res[0].name == host[0].name == "t"
+
+
 def test_dataset_search_zero_values_survive_aggregation():
     keys = np.array([3, 3, 5])
     vals = np.array([1.0, -1.0, 0.0])     # duplicates cancel; explicit zero

@@ -1,0 +1,56 @@
+"""Regression tests for the logical-axis rule table.
+
+``DEFAULT_RULES`` is a dict literal; a duplicate key silently shadows the
+earlier entry (this bit us: a second ``"capacity": None`` overrode the
+documented ``("pod", "data")`` mapping).  Python can't see this at runtime,
+so the uniqueness check parses the source.
+"""
+import ast
+import inspect
+
+import pytest
+
+from repro.distributed import sharding
+from repro.distributed.sharding import DEFAULT_RULES, spec_for
+
+
+def _default_rules_literal_keys():
+    """Keys of the DEFAULT_RULES dict literal, in source order, with repeats."""
+    tree = ast.parse(inspect.getsource(sharding))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            targets = [node.target.id]
+        else:
+            continue
+        if "DEFAULT_RULES" in targets and isinstance(node.value, ast.Dict):
+            return [k.value for k in node.value.keys
+                    if isinstance(k, ast.Constant)]
+    raise AssertionError("DEFAULT_RULES dict literal not found")
+
+
+def test_default_rules_keys_are_unique():
+    keys = _default_rules_literal_keys()
+    dupes = {k for k in keys if keys.count(k) > 1}
+    assert not dupes, f"duplicate DEFAULT_RULES keys shadow earlier entries: {dupes}"
+
+
+def test_capacity_resolves_to_data_axes():
+    assert DEFAULT_RULES["capacity"] == ("pod", "data")
+
+
+def test_capacity_sharding_falls_back_when_tokens_take_data():
+    """In MoE dispatch the tokens dim consumes the data axes first; the
+    capacity dim must then replicate (axes already used), not error."""
+    pytest.importorskip("jax")
+    import numpy as np
+    from jax.sharding import Mesh
+
+    import jax
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    spec = spec_for((4, 8, 16, 32), ("tokens", "experts", "capacity", "embed"),
+                    DEFAULT_RULES, mesh)
+    # tokens got the data axis, capacity must not reuse it
+    assert spec[0] == "data" and spec[2] is None

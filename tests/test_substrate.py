@@ -108,9 +108,9 @@ def test_checkpoint_elastic_restore_across_mesh_sizes(tmp_path):
         import sys
         sys.path.insert(0, "src")
         from repro.checkpoint import save, restore
+        from repro.compat import make_mesh
 
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        mesh8 = make_mesh((8,), ("data",))
         x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
         xs = jax.device_put(x, NamedSharding(mesh8, P("data", None)))
         save(r"{tmp_path}", 5, {{"x": xs}})
@@ -267,11 +267,11 @@ def test_compressed_psum_in_shard_map():
         import sys; sys.path.insert(0, "src")
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.optim.compression import CompressionConfig, compressed_update, compress
 
         cfg = CompressionConfig(width=256, reps=5, seed=3)
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         rng = np.random.default_rng(0)
         # heavy-tailed shared signal + per-replica noise
         base = np.zeros(2048)
@@ -283,10 +283,10 @@ def test_compressed_psum_in_shard_map():
             delta, new_r = compressed_update(g[0], r[0], "data", cfg, lr=1.0)
             return delta[None], new_r[None]
 
-        f = jax.shard_map(worker, mesh=mesh,
-                          in_specs=(P("data", None), P("data", None)),
-                          out_specs=(P("data", None), P("data", None)),
-                          check_vma=False)
+        f = shard_map(worker, mesh=mesh,
+                      in_specs=(P("data", None), P("data", None)),
+                      out_specs=(P("data", None), P("data", None)),
+                      check=False)
         delta, res = f(grads, jnp.zeros_like(grads))
         delta = np.asarray(delta)
         # every replica got the SAME update
@@ -315,11 +315,11 @@ def test_gradient_telemetry_pairwise_similarity():
         import sys; sys.path.insert(0, "src")
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.train.telemetry import TelemetryConfig, gradient_agreement
 
         cfg = TelemetryConfig(m=512, seed=5)
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         rng = np.random.default_rng(2)
         base = rng.normal(size=2048)
         grads = np.stack([base + 0.3 * rng.normal(size=2048) for _ in range(3)]
@@ -329,8 +329,8 @@ def test_gradient_telemetry_pairwise_similarity():
         def worker(g):
             return gradient_agreement(g[0], "data", cfg)[None]
 
-        f = jax.shard_map(worker, mesh=mesh, in_specs=(P("data", None),),
-                          out_specs=P("data", None, None), check_vma=False)
+        f = shard_map(worker, mesh=mesh, in_specs=(P("data", None),),
+                      out_specs=P("data", None, None), check=False)
         sim = np.asarray(f(grads))[0]
         true = np.corrcoef(np.asarray(grads))
         # healthy replicas: high estimated cosine; diverged: low
