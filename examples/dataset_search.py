@@ -7,17 +7,52 @@ correlated.  We build a sketch index over a lake of synthetic tables
 query without materializing a single join.
 
 The serving path is device-resident: every table is sketched through the
-Pallas ICWS kernel into pre-stacked [P, m] corpus arrays, and the query is
-estimated against the whole corpus with the one-vs-many estimate kernel
-(the query sketch is broadcast on device -- never tiled into a [P, m]
-copy).  The original host-numpy WMH implementation is kept as an oracle;
-we cross-check against it at the end.
+Pallas ICWS kernel into ONE canonical field-stacked corpus store
+(``[3, capacity, m]`` buffers, amortized in-place append -- the single
+device copy of all three field corpora), and each query is answered by one
+fused multi-field estimate launch straight off those buffers.  The original
+host-numpy WMH implementation is kept as an oracle; we cross-check against
+it, and then re-serve the same query *sharded*: corpus rows split over a
+2-device ``data`` mesh axis (forced host devices below), per-shard top-k +
+global merge, rankings bitwise identical to the single-device path.
 
 Run:  PYTHONPATH=src python examples/dataset_search.py
 """
+import os
+
+# force 2 CPU "devices" so the sharded serving path is demonstrable on a
+# laptop; must be set before jax first initializes, and appended (not
+# setdefault) so a user's own XLA_FLAGS don't silently disable the demo
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2"
+                               ).strip()
+
 import numpy as np
 
 from repro.data import DatasetSearchIndex
+from repro.launch.mesh import make_corpus_mesh
+
+
+def lake_tables(rng, days, rain):
+    # taxi logs keyed by day, multiple trips per day: duplicate join keys
+    trip_days = rng.integers(0, 730, size=2000)
+    return [
+        ("weather_precipitation", days, rain),            # joinable + correlated
+        ("festivals_2022", days[365:],                    # partial join
+         (rng.random(365) < 0.05).astype(float)),
+        ("stock_prices", np.arange(10_000, 10_730),       # disjoint keys
+         rng.normal(100, 5, 730)),
+        ("random_noise", days, rng.normal(0, 1, 730)),    # joinable, uncorrelated
+        ("taxi_trip_fares", trip_days, rng.uniform(5, 60, 2000)),
+    ]
+
+
+def build_index(tables, mesh=None):
+    index = DatasetSearchIndex(m=384, seed=7, mesh=mesh)
+    for name, keys, values in tables:
+        index.add_table(name, keys, values)
+    return index
 
 
 def main():
@@ -27,19 +62,12 @@ def main():
     rain = np.clip(rng.gamma(2.0, 2.0, size=730) - 2, 0, None)
     ridership = 120_000 - 6_000 * rain + rng.normal(0, 4_000, 730)
 
-    index = DatasetSearchIndex(m=384, seed=7)    # backend="device" by default
-    # lake tables -----------------------------------------------------------
-    index.add_table("weather_precipitation", days, rain)              # joinable + correlated
-    index.add_table("festivals_2022", days[365:],                     # partial join
-                    (rng.random(365) < 0.05).astype(float))
-    index.add_table("stock_prices", np.arange(10_000, 10_730),        # disjoint keys
-                    rng.normal(100, 5, 730))
-    index.add_table("random_noise", days, rng.normal(0, 1, 730))      # joinable, uncorrelated
-    # taxi logs keyed by day, multiple trips per day: duplicate join keys
-    trip_days = rng.integers(0, 730, size=2000)
-    index.add_table("taxi_trip_fares", trip_days, rng.uniform(5, 60, 2000))
-    print(f"lake indexed: {len(index.tables)} tables, "
-          f"{index.storage_doubles():.0f} doubles of sketch storage total\n")
+    tables = lake_tables(rng, days, rain)
+    index = build_index(tables)                  # backend="device" by default
+    store = index.store
+    print(f"lake indexed: {len(index.tables)} tables in one canonical "
+          f"[3, {store.capacity}, {index.m}] store "
+          f"({index.storage_doubles():.0f} doubles of sketch storage)\n")
 
     # the analyst's query (served from the device-resident corpus) ----------
     results = index.query(days, ridership, top_k=5, min_join=30)
@@ -58,6 +86,17 @@ def main():
     print("\ndevice vs host-oracle ranking:",
           [r.name for r in results] == [r.name for r in oracle] and "MATCH"
           or f"device={[r.name for r in results]} host={[r.name for r in oracle]}")
+
+    # sharded serving: corpus rows split over a 2-device data axis ----------
+    mesh = make_corpus_mesh()
+    if mesh.shape["data"] < 2:
+        print("sharded serving skipped: only 1 device visible "
+              "(a pre-set device count override?)")
+        return
+    sharded = build_index(tables, mesh=mesh)
+    res_sh = sharded.query(days, ridership, top_k=5, min_join=30)
+    print(f"sharded ({mesh.shape['data']}-way) vs single-device serving:",
+          res_sh == results and "IDENTICAL (bitwise)" or "DIVERGED")
 
 
 if __name__ == "__main__":

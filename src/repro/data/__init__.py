@@ -4,10 +4,11 @@ paper's §1.3 application)."""
 from .corpus import SketchCorpus, pad_sparse_batch, sketch_batch
 from .dataset_search import DatasetSearchIndex, SearchResult, TableSketch
 from .pipeline import TokenPipeline
+from .store import CorpusStore
 from .synthetic import (kurtosis, sparse_pair, tfidf_corpus, token_stream,
                         worldbank_like_pair)
 
 __all__ = ["DatasetSearchIndex", "SearchResult", "TableSketch",
-           "SketchCorpus", "sketch_batch", "pad_sparse_batch",
+           "CorpusStore", "SketchCorpus", "sketch_batch", "pad_sparse_batch",
            "TokenPipeline", "sparse_pair", "worldbank_like_pair", "kurtosis",
            "tfidf_corpus", "token_stream"]

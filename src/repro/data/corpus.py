@@ -4,15 +4,18 @@ The paper's §1.3 dataset-search regime sketches every column of a data lake
 once, then answers every query by estimating the query sketch against the
 *whole corpus*.  This module keeps that corpus where the estimator runs:
 
-  * ingestion pads sparse vectors into ``[B, N]`` batches and sketches them
-    with the Pallas ICWS kernel (one kernel launch per batch, all fields);
-  * fingerprints / values / norms live as pre-stacked ``[P, m]`` device
-    arrays, appended in chunks (a list of per-batch arrays concatenated
-    lazily, once, on first query after an append) -- queries never restack
-    the corpus and never materialize a ``[P, m]`` copy of the query;
-  * queries run through the one-vs-many estimate kernel
-    (:func:`repro.kernels.ops.icws_estimate_corpus`), which broadcasts the
-    single query sketch across the corpus grid dimension.
+  * ingestion pads sparse vectors into ``[B, N]`` batches with one flat
+    numpy scatter (no per-vector Python loop) and sketches them with the
+    Pallas ICWS kernel (one kernel launch per batch, all fields);
+  * fingerprints / values / norms live in a single canonical
+    :class:`repro.data.store.CorpusStore` -- preallocated capacity-doubling
+    device buffers, appended in place via ``jax.lax.dynamic_update_slice``
+    (amortized O(rows appended); the old chunk-list scheme re-concatenated
+    the whole corpus on the first query after every append);
+  * queries run through the one-vs-many / many-vs-many estimate kernels
+    directly on the store buffers (unused capacity rows are inert), and a
+    mesh with a multi-device corpus axis shards the many-vs-many launch
+    over corpus rows with bitwise-identical results.
 
 Host and device sketches are interchangeable here: :class:`repro.core.ICWS`
 shares the kernel's RNG/fingerprint contract (see :mod:`repro.core.u32`),
@@ -20,13 +23,15 @@ so a corpus may be populated from either path.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import SparseVec
 from repro.kernels import ops
+
+from .store import CorpusStore
 
 
 def pad_sparse_batch(vecs: Sequence[SparseVec], *, bucket: int = 256
@@ -37,24 +42,35 @@ def pad_sparse_batch(vecs: Sequence[SparseVec], *, bucket: int = 256
     weights, int32 keys (mod 2^32, the kernel's key domain), f32 normalized
     signed values, and f64 norms.  ``N`` is the max nnz rounded up to a
     multiple of ``bucket`` so repeated ingests reuse the same jit cache entry.
+
+    The fill is one flat numpy scatter over the concatenated indices/values
+    of the whole batch -- no per-vector Python loop.  Norms stay per-vector
+    ``SparseVec.norm()`` calls so the normalized values are bitwise
+    identical to the host sketcher's (``np.sum`` pairwise summation).
     """
     B = len(vecs)
-    max_nnz = max((v.nnz for v in vecs), default=0)
+    nnz = np.fromiter((v.nnz for v in vecs), np.int64, count=B)
+    max_nnz = int(nnz.max()) if B else 0
     N = max(bucket, -(-max_nnz // bucket) * bucket)
     w = np.zeros((B, N), np.float32)
     keys = np.zeros((B, N), np.int32)
     vals = np.zeros((B, N), np.float32)
-    norms = np.zeros(B, np.float64)
-    for i, v in enumerate(vecs):
-        norm = v.norm()
-        norms[i] = norm
-        if v.nnz == 0 or norm == 0.0:
-            continue
-        z32 = (v.values / norm).astype(np.float32)
-        k = v.nnz
-        w[i, :k] = z32 * z32
-        keys[i, :k] = (v.indices & np.int64(0xFFFFFFFF)).astype(np.uint32).astype(np.int32)
-        vals[i, :k] = z32
+    norms = np.array([v.norm() for v in vecs], np.float64)
+    active = (nnz > 0) & (norms > 0.0) if B else np.zeros(0, bool)
+    if np.any(active):
+        counts = nnz[active]
+        idx_cat = np.concatenate(
+            [v.indices for v, a in zip(vecs, active) if a])
+        val_cat = np.concatenate(
+            [v.values for v, a in zip(vecs, active) if a])
+        rows = np.repeat(np.nonzero(active)[0], counts)
+        starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+        cols = np.arange(idx_cat.size) - np.repeat(starts, counts)
+        z32 = (val_cat / np.repeat(norms[active], counts)).astype(np.float32)
+        w[rows, cols] = z32 * z32
+        keys[rows, cols] = (idx_cat & np.int64(0xFFFFFFFF)
+                            ).astype(np.uint32).astype(np.int32)
+        vals[rows, cols] = z32
     return w, keys, vals, norms
 
 
@@ -73,23 +89,32 @@ def sketch_batch(vecs: Sequence[SparseVec], *, m: int, seed: int = 0,
 class SketchCorpus:
     """A growing corpus of ICWS sketches resident on the device.
 
-    Append-in-chunks storage: each ``add_*`` call appends one ``[b, m]``
-    device array per component; :meth:`arrays` concatenates the chunks into
-    the canonical ``[P, m]`` layout exactly once per dirty state (cached
-    until the next append).  The query path is a single one-vs-many kernel
-    launch over those arrays.
+    A thin single-field (F=1) view over :class:`repro.data.store.CorpusStore`:
+    appends write into the store's preallocated buffers (amortized
+    capacity-doubling growth, no chunk lists, no restacking), and queries
+    launch the one-vs-many / many-vs-many estimate kernels directly on
+    those buffers.  Pass a ``mesh`` whose corpus axis (see
+    :func:`repro.distributed.sharding.corpus_axis`) spans 2+ devices to run
+    batched estimates sharded over corpus rows -- results are bitwise
+    identical to the single-device launch.
     """
 
-    def __init__(self, m: int, seed: int = 0, bucket: int = 256):
+    def __init__(self, m: int, seed: int = 0, bucket: int = 256, mesh=None):
         self.m = int(m)
         self.seed = int(seed)
         self.bucket = int(bucket)
-        self._chunks: List[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = []
-        self._cache: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None
-        self._size = 0
+        self.mesh = mesh
+        # the store resolves the corpus axis, shards its buffers over it,
+        # and keeps capacity divisible by the shard count
+        self._store = CorpusStore(m=m, fields=1, mesh=mesh)
+        self._axis = self._store.corpus_axis
 
     def __len__(self) -> int:
-        return self._size
+        return len(self._store)
+
+    @property
+    def capacity(self) -> int:
+        return self._store.capacity
 
     # -- ingestion ----------------------------------------------------------
     def add_batch(self, vecs: Sequence[SparseVec]) -> None:
@@ -104,36 +129,24 @@ class SketchCorpus:
         """Append pre-computed sketch rows (``[b, m]``, ``[b]``).
 
         Accepts device or host arrays; host ICWS sketches interoperate
-        because both paths share the fingerprint contract.
+        because both paths share the fingerprint contract.  All three
+        components are validated against each other (a mismatched ``val``
+        or ``norm`` raises here, not at query time).
         """
         fp = jnp.asarray(fp, jnp.int32).reshape(-1, self.m)
         val = jnp.asarray(val, jnp.float32).reshape(-1, self.m)
         norm = jnp.asarray(norm, jnp.float32).reshape(-1)
-        if fp.shape[0] != norm.shape[0]:
-            raise ValueError("fingerprint/norm row count mismatch")
-        self._chunks.append((fp, val, norm))
-        self._cache = None
-        self._size += int(fp.shape[0])
+        self._store.append(fp, val, norm)
 
-    # -- the device-resident [P, m] view ------------------------------------
+    # -- the device-resident view -------------------------------------------
     def arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """The pre-stacked ``(fp [P, m], val [P, m], norm [P])`` device arrays.
+        """Exact-size ``(fp [P, m], val [P, m], norm [P])`` device slices.
 
-        Consolidates pending chunks at most once per append; every query
-        between appends reuses the same device buffers (no restacking).
+        A transient copy of the canonical store buffers when the corpus has
+        spare capacity -- use for host cross-checks; query methods run on
+        the buffers themselves.
         """
-        if self._size == 0:
-            raise ValueError("empty corpus")
-        if self._cache is None:
-            if len(self._chunks) == 1:
-                self._cache = self._chunks[0]
-            else:
-                fp = jnp.concatenate([c[0] for c in self._chunks], axis=0)
-                val = jnp.concatenate([c[1] for c in self._chunks], axis=0)
-                norm = jnp.concatenate([c[2] for c in self._chunks], axis=0)
-                self._cache = (fp, val, norm)
-                self._chunks = [self._cache]
-        return self._cache
+        return self._store.arrays()
 
     # -- queries ------------------------------------------------------------
     def sketch_query(self, v: SparseVec):
@@ -146,25 +159,33 @@ class SketchCorpus:
         The query stays ``[1, m]`` end to end; the one-vs-many kernel
         broadcasts it across the corpus grid.  Returns ``[P]`` f32.
         """
-        fpc, vc, nc = self.arrays()
-        return ops.icws_estimate_corpus(jnp.asarray(fq, jnp.int32).reshape(1, -1),
-                                        jnp.asarray(vq, jnp.float32).reshape(1, -1),
-                                        jnp.asarray(nq, jnp.float32).reshape(()),
-                                        fpc, vc, nc)
+        fpb, vb, nb = self._store.buffers()
+        est = ops.icws_estimate_corpus_stacked(
+            jnp.asarray(fq, jnp.int32).reshape(1, -1),
+            jnp.asarray(vq, jnp.float32).reshape(1, -1),
+            jnp.asarray(nq, jnp.float32).reshape(()),
+            fpb, vb, nb)
+        return est[:len(self)]
 
     def estimate_batch(self, fq, vq, nq) -> jnp.ndarray:
         """Inner-product estimates of Q query sketches vs every corpus row.
 
-        One many-vs-many kernel launch for the whole query batch: each
-        ``[bq, m]`` query block is re-read across the corpus grid dimension,
-        so no ``[Q, P, m]`` intermediate ever exists.  Returns ``[Q, P]`` f32.
+        One many-vs-many kernel launch for the whole query batch (per mesh
+        shard when the corpus is sharded): each ``[bq, m]`` query block is
+        re-read across the corpus grid dimension, so no ``[Q, P, m]``
+        intermediate ever exists.  Returns ``[Q, P]`` f32.
         """
-        fpc, vc, nc = self.arrays()
-        return ops.icws_estimate_many(
-            jnp.asarray(fq, jnp.int32).reshape(-1, self.m),
-            jnp.asarray(vq, jnp.float32).reshape(-1, self.m),
-            jnp.asarray(nq, jnp.float32).reshape(-1),
-            fpc, vc, nc)
+        fpb, vb, nb = self._store.buffers()
+        fq = jnp.asarray(fq, jnp.int32).reshape(-1, self.m)
+        vq = jnp.asarray(vq, jnp.float32).reshape(-1, self.m)
+        nq = jnp.asarray(nq, jnp.float32).reshape(-1)
+        if self._axis is not None:
+            est = ops.icws_estimate_many_sharded(fq, vq, nq, fpb, vb, nb,
+                                                 mesh=self.mesh,
+                                                 axis=self._axis)
+        else:
+            est = ops.icws_estimate_many_stacked(fq, vq, nq, fpb, vb, nb)
+        return est[:, :len(self)]
 
     def estimate_vec(self, v: SparseVec) -> jnp.ndarray:
         """Sketch ``v`` and estimate it against the whole corpus."""
@@ -180,4 +201,4 @@ class SketchCorpus:
 
     def storage_doubles(self) -> float:
         """Paper accounting: 1.5 doubles per sample + 1 norm, per sketch."""
-        return self._size * (1.5 * self.m + 1.0)
+        return self._store.storage_doubles()

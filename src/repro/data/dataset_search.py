@@ -11,25 +11,27 @@ Repeated join keys are aggregated (values summed, multiplicities counted), so
 real-world tables with duplicate keys ingest cleanly and join sizes count
 joined row *pairs*, as SQL join cardinality does.
 
-Serving path (default, ``backend="device"``): tables are sketched in batches
-through the Pallas ICWS kernel into three device-resident
-:class:`~repro.data.corpus.SketchCorpus` instances (one per field).  A query
-is sketched once (a single ``[3, N]`` kernel launch covers all three fields)
-and estimated against the whole corpus with the one-vs-many estimate kernel
--- the query sketch is broadcast on-device, never tiled into a ``[P, m]``
-copy, and the corpus is never restacked.  Candidate ranking (top-k by
-|sketch-estimated corr| among sufficiently-joinable tables) happens in jnp
-before any result leaves the device; the host then refines the correlation
-of just those k candidates from the matched KMV samples.
+Serving path (default, ``backend="device"``): all three field corpora live
+in ONE canonical :class:`~repro.data.store.CorpusStore` -- field-stacked
+``[3, capacity, m]`` device buffers with amortized in-place append (the
+single device-resident copy of the corpus; there is no per-field duplicate
+and no stack-for-batching duplicate).  Every device query, single or
+batched, is sketched by one ``[3Q, N]`` ICWS kernel launch and answered by
+ONE fused multi-field many-vs-many estimate launch
+(:func:`repro.kernels.ops.icws_estimate_fields`) straight off the store
+buffers; a single query is simply the Q=1 case.  Candidate ranking (top-k
+by |sketch-estimated corr| among sufficiently-joinable tables) happens in
+jnp before any result leaves the device; the host then refines the
+correlation of just those k candidates from the matched KMV samples.
 
-Batched serving path (:meth:`DatasetSearchIndex.query_batch`): Q queries are
-vectorized together, sketched by ONE ``[3Q, N]`` ICWS kernel launch, and all
-six field-pair inner products of every query are computed by ONE fused
-multi-field many-vs-many estimate launch
-(:func:`repro.kernels.ops.icws_estimate_fields`) against cached ``[3, P, m]``
-field stacks; ranking is the same top-k kernel ``vmap``'d over the batch.
-Rankings are identical to a loop of :meth:`query` -- the batch path exists
-purely to collapse ``O(6Q)`` kernel launches into ``O(1)``.
+Sharded serving: construct the index with a ``mesh`` whose corpus axis (see
+:func:`repro.distributed.sharding.corpus_axis`, logical axis ``"corpus"``,
+by default the ``data`` mesh axis) spans 2+ devices, and the fused estimate
+launch runs per shard over corpus rows under ``repro.compat.shard_map``
+with queries replicated, followed by a per-shard top-k and a global merge.
+Rankings are bitwise identical to the single-device path: per-row estimate
+math is independent of the row count, and the top-k merge preserves
+``jax.lax.top_k`` tie order (ascending index).
 
 Oracle path (``backend="host"``): the original host-numpy WMH implementation,
 kept verbatim as the cross-checked reference for the device path.  Every §1.3
@@ -44,7 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,12 +57,13 @@ from repro.core.kmv import KMVSketch
 from repro.core.wmh import StackedWMH, WMHSketch
 from repro.kernels import ops
 
-from .corpus import SketchCorpus, sketch_batch
+from .corpus import sketch_batch
+from .store import CorpusStore
 
 FIELDS = ("key_indicator", "values", "values_sq")
 
 # Field-pair maps for the fused multi-field estimate kernel, in
-# _rank_by_corr argument order (join, sum_a, sum_b, sum_a2, sum_b2, prod):
+# _corr_scores argument order (join, sum_a, sum_b, sum_a2, sum_b2, prod):
 # estimate g pairs query field QFIELD[g] with corpus field CFIELD[g].
 _IND, _VAL, _SQ = 0, 1, 2
 QFIELD = (_IND, _VAL, _IND, _SQ, _IND, _VAL)
@@ -88,13 +91,14 @@ class SearchResult:
     corr: float
 
 
-def _rank_by_corr_body(join, sum_a, sum_b, sum_a2, sum_b2, prod,
-                       min_join, k: int):
-    """Top-k corpus rows by |sketch-estimated corr| among joinable rows.
+@jax.jit
+def _corr_scores(join, sum_a, sum_b, sum_a2, sum_b2, prod, min_join):
+    """Ranking scores: |sketch-estimated corr| among joinable rows.
 
-    All inputs are [P] device arrays of inner-product estimates; the output
-    (scores [k], indices [k]) is the only data that leaves the device.
-    Rows failing ``join >= min_join`` score -1 so the host can drop them.
+    All inputs are [Q, P] device arrays of inner-product estimates.  Rows
+    failing ``join >= min_join`` score -1 so the host can drop them.  One
+    jitted executable serves both the single-device and the sharded ranking
+    path, so scores are bitwise identical between them.
     """
     var_a = join * sum_a2 - sum_a * sum_a
     var_b = join * sum_b2 - sum_b * sum_b
@@ -103,32 +107,22 @@ def _rank_by_corr_body(join, sum_a, sum_b, sum_a2, sum_b2, prod,
     corr = jnp.where(ok, cov * jax.lax.rsqrt(jnp.where(ok, var_a * var_b, 1.0)),
                      0.0)
     corr = jnp.clip(corr, -1.0, 1.0)
-    score = jnp.where(join >= min_join, jnp.abs(corr), -1.0)
-    return jax.lax.top_k(score, k)
-
-
-_rank_by_corr = jax.jit(_rank_by_corr_body, static_argnames=("k",))
+    return jnp.where(join >= min_join, jnp.abs(corr), -1.0)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def _rank_by_corr_batch(join, sum_a, sum_b, sum_a2, sum_b2, prod,
-                        min_join, k: int):
-    """:func:`_rank_by_corr` vmapped over a [Q, P] estimate batch.
-
-    Returns (scores [Q, k], indices [Q, k]); numerics per row are exactly
-    the single-query kernel's, so batched rankings match the query loop.
-    """
-    return jax.vmap(
-        lambda j, sa, sb, sa2, sb2, pr: _rank_by_corr_body(
-            j, sa, sb, sa2, sb2, pr, min_join, k)
-    )(join, sum_a, sum_b, sum_a2, sum_b2, prod)
+def _top_k(score, k: int):
+    """Top-k scores + indices per query row; (scores [Q, k], idx [Q, k]) is
+    the only data that leaves the device."""
+    return jax.lax.top_k(score, k)
 
 
 class DatasetSearchIndex:
     """Sketch once, query many times -- the data-lake discovery pattern."""
 
     def __init__(self, m: int = 256, seed: int = 0, key_space: int = 2 ** 31,
-                 backend: str = "device", keep_host_oracle: bool = True):
+                 backend: str = "device", keep_host_oracle: bool = True,
+                 mesh=None):
         if backend not in ("device", "host"):
             raise ValueError(f"unknown backend {backend!r}")
         self.m = m
@@ -136,18 +130,22 @@ class DatasetSearchIndex:
         self.key_space = key_space
         self.backend = backend
         # host oracle sketches are required to serve backend="host" queries;
-        # symmetrically, the device corpora are only built when the index
+        # symmetrically, the device corpus is only built when the index
         # serves (or may serve) device queries
         self.keep_host_oracle = keep_host_oracle or backend == "host"
         self.keep_device_corpus = backend == "device"
+        self.mesh = mesh
         self.sketcher = WeightedMinHash(m=m, seed=seed)
         self.kmv = KMV(k=m, seed=seed)
         self.tables: List[TableSketch] = []
-        self.corpora: Dict[str, SketchCorpus] = {
-            f: SketchCorpus(m=m, seed=seed) for f in FIELDS}
-        # cached [3, P, m] stacks of the field corpora for the fused batched
-        # query path; invalidated by table count (append-only corpus)
-        self._field_stack: Optional[Tuple[int, Tuple]] = None
+        # the single device-resident copy of all three field corpora: the
+        # store resolves the corpus axis, shards its buffers over it, and
+        # keeps capacity divisible by the shard count
+        self.store: Optional[CorpusStore] = (
+            CorpusStore(m=m, fields=len(FIELDS), mesh=mesh)
+            if self.keep_device_corpus else None)
+        self._corpus_axis = (self.store.corpus_axis
+                             if self.store is not None else None)
 
     # -- ingestion ----------------------------------------------------------
     def vectorize(self, keys: np.ndarray, values: np.ndarray
@@ -180,12 +178,11 @@ class DatasetSearchIndex:
 
     def add_table(self, name: str, keys: np.ndarray, values: np.ndarray):
         ind, val, sq = self.vectorize(keys, values)
-        if self.keep_device_corpus:
-            # device path: one [3, N] kernel launch sketches all three fields
+        if self.store is not None:
+            # device path: one [3, N] kernel launch sketches all three
+            # fields; the rows append in place into the canonical store
             fp, v, nrm = sketch_batch([ind, val, sq], m=self.m, seed=self.seed)
-            for i, f in enumerate(FIELDS):
-                self.corpora[f].add_sketches(fp[i:i + 1], v[i:i + 1],
-                                             nrm[i:i + 1])
+            self.store.append(fp[:, None, :], v[:, None, :], nrm[:, None])
         host = {}
         if self.keep_host_oracle:
             host = {"key_indicator": self.sketcher.sketch(ind),
@@ -209,42 +206,16 @@ class DatasetSearchIndex:
         backend = backend or self.backend
         if backend == "host":
             return self._query_host(keys, values, top_k, min_join)
-        return self._query_device(keys, values, top_k, min_join)
-
-    def _query_device(self, keys, values, top_k: int, min_join: float
-                      ) -> List[SearchResult]:
-        if not self.keep_device_corpus:
-            raise ValueError("device corpora were not built at ingest "
-                             "(index constructed with backend='host')")
-        ind, val, sq = self.vectorize(keys, values)
-        q_sample = self.kmv.sketch(val)
-        # one kernel launch sketches the query's three field vectors
-        fq, vq, nq = sketch_batch([ind, val, sq], m=self.m, seed=self.seed)
-        q = {f: (fq[i:i + 1], vq[i:i + 1], nq[i]) for i, f in enumerate(FIELDS)}
-
-        def est(qf: str, cf: str) -> jnp.ndarray:
-            fqi, vqi, nqi = q[qf]
-            return self.corpora[cf].estimate(fqi, vqi, nqi)
-
-        join = est("key_indicator", "key_indicator")   # <1A, 1B>
-        sum_b = est("key_indicator", "values")         # <1A, VB>
-        sum_b2 = est("key_indicator", "values_sq")     # <1A, VB^2>
-        sum_a = est("values", "key_indicator")         # <VA, 1B>
-        sum_a2 = est("values_sq", "key_indicator")     # <VA^2, 1B>
-        prod = est("values", "values")                 # <VA, VB>
-
-        k = min(top_k, len(self.tables))
-        scores, idx = _rank_by_corr(join, sum_a, sum_b, sum_a2, sum_b2, prod,
-                                    jnp.float32(min_join), k=k)
-        return self._assemble_results(
-            np.asarray(scores), np.asarray(idx), np.asarray(join),
-            np.asarray(sum_b), q_sample, n_q=max(len(keys), 1))
+        # the fused batch engine with Q=1: same kernels, same numerics --
+        # single and batched queries are one code path by construction
+        return self._query_batch_device(
+            [(np.asarray(keys), np.asarray(values))], top_k, min_join)[0]
 
     def _assemble_results(self, scores, idx, join_h, sum_b_h, q_sample,
                           n_q: int) -> List[SearchResult]:
-        """Host epilogue shared by the sequential and batched device paths:
-        drop min_join failures, refine corr from the matched KMV samples,
-        re-rank the k survivors by refined |corr|."""
+        """Host epilogue shared by all device paths: drop min_join failures,
+        refine corr from the matched KMV samples, re-rank the k survivors
+        by refined |corr|."""
         results = []
         for score, i in zip(scores, idx):
             if score < 0:                    # failed the min_join filter
@@ -267,9 +238,9 @@ class DatasetSearchIndex:
 
         Device backend: ONE ``[3Q, N]`` ICWS sketch launch covers every field
         vector of every query, and ONE fused multi-field many-vs-many launch
-        computes all ``6 * Q * P`` inner-product estimates; ranking is the
-        single-query top-k ``vmap``'d over the batch.  Per-query results are
-        identical to ``[self.query(k, v) for k, v in queries]``.
+        (per mesh shard when the corpus is sharded) computes all ``6 * Q * P``
+        inner-product estimates.  Per-query results are identical to
+        ``[self.query(k, v) for k, v in queries]``.
 
         Host backend: the host oracle has no kernel launches to amortize, so
         it simply loops the sequential oracle path.
@@ -283,26 +254,10 @@ class DatasetSearchIndex:
                                      top_k, min_join) for k, v in queries]
         return self._query_batch_device(queries, top_k, min_join)
 
-    def _stacked_field_arrays(self):
-        """Cached ``[3, P, m]`` device stacks of the three field corpora
-        (+ ``[3, P]`` norms), rebuilt only when tables were added.
-
-        Note: the stack is a copy, so an index serving both sequential and
-        batched queries holds its sketches twice on device; making the stack
-        canonical (sequential path slicing ``fc3[i]``) would halve that and
-        is the planned follow-up for very large lakes."""
-        P = len(self.tables)
-        if self._field_stack is None or self._field_stack[0] != P:
-            arrs = [self.corpora[f].arrays() for f in FIELDS]
-            self._field_stack = (P, (jnp.stack([a[0] for a in arrs]),
-                                     jnp.stack([a[1] for a in arrs]),
-                                     jnp.stack([a[2] for a in arrs])))
-        return self._field_stack[1]
-
     def _query_batch_device(self, queries, top_k: int, min_join: float
                             ) -> List[List[SearchResult]]:
-        if not self.keep_device_corpus:
-            raise ValueError("device corpora were not built at ingest "
+        if self.store is None:
+            raise ValueError("device corpus was not built at ingest "
                              "(index constructed with backend='host')")
         Q = len(queries)
         field_vecs: List[SparseVec] = []
@@ -317,15 +272,28 @@ class DatasetSearchIndex:
         vq3 = vq.reshape(Q, 3, self.m).transpose(1, 0, 2)
         nq3 = nq.reshape(Q, 3).T                               # [3, Q]
 
-        # one fused launch: all six field-pair estimates for every query
-        fc3, vc3, nc3 = self._stacked_field_arrays()
-        est = ops.icws_estimate_fields(fq3, vq3, nq3, fc3, vc3, nc3,
-                                       qmap=QFIELD, cmap=CFIELD)  # [6, Q, P]
+        # one fused launch (per corpus shard): all six field-pair estimates
+        # for every query, straight off the canonical store buffers (unused
+        # capacity rows are inert and sliced out of the estimates below)
+        fc3, vc3, nc3 = self.store.buffers()
+        if self._corpus_axis is not None:
+            est = ops.icws_estimate_fields_sharded(
+                fq3, vq3, nq3, fc3, vc3, nc3, qmap=QFIELD, cmap=CFIELD,
+                mesh=self.mesh, axis=self._corpus_axis)        # [6, Q, cap]
+        else:
+            est = ops.icws_estimate_fields(fq3, vq3, nq3, fc3, vc3, nc3,
+                                           qmap=QFIELD, cmap=CFIELD)
+        P = len(self.tables)
+        est = est[:, :, :P]
 
-        k = min(top_k, len(self.tables))
-        scores, idx = _rank_by_corr_batch(est[0], est[1], est[2], est[3],
-                                          est[4], est[5],
-                                          jnp.float32(min_join), k=k)
+        k = min(top_k, P)
+        score = _corr_scores(est[0], est[1], est[2], est[3], est[4], est[5],
+                             jnp.float32(min_join))
+        if self._corpus_axis is not None:
+            scores, idx = ops.sharded_top_k(score, k, mesh=self.mesh,
+                                            axis=self._corpus_axis)
+        else:
+            scores, idx = _top_k(score, k)
         scores, idx = np.asarray(scores), np.asarray(idx)
         join_h, sum_b_h = np.asarray(est[0]), np.asarray(est[2])
         return [
@@ -396,4 +364,7 @@ class DatasetSearchIndex:
 
     def storage_doubles(self) -> float:
         """Serving-sketch storage (three fields per table, paper accounting)."""
-        return sum(c.storage_doubles() for c in self.corpora.values())
+        if self.store is not None:
+            return self.store.storage_doubles()
+        # host-only index: same accounting, counted from the oracle sketches
+        return len(self.tables) * len(FIELDS) * (1.5 * self.m + 1.0)

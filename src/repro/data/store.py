@@ -1,0 +1,248 @@
+"""Canonical field-stacked sketch store with amortized device-side append.
+
+This is the single device-resident copy of a sketch corpus.  All F field
+corpora of a dataset-search index (F = 3 for the §1.3 fields) live in one
+set of preallocated buffers:
+
+    fingerprints  [F, capacity, m]  int32
+    values        [F, capacity, m]  float32
+    norms         [F, capacity]     float32
+
+``append`` writes new rows into the buffers with
+``jax.lax.dynamic_update_slice`` under a jit whose buffer arguments are
+*donated*, so on accelerators the write is in place and costs O(rows
+appended), not O(corpus).  When the corpus outgrows its capacity the buffers
+double (classic amortized growth: total copy work over any append sequence
+is O(final size)).  This replaces the old chunk-list scheme whose first
+query after an append re-concatenated every row ever ingested.
+
+Unused capacity rows are *inert* under the estimate kernels: their
+fingerprints hold the corpus pad sentinel (``-2``, the same value the
+kernels pad with, which never equals a query fingerprint) and their norms
+are zero (the estimate epilogue zeroes any pair with a zero norm).  Query
+paths therefore run directly on the full-capacity buffers -- no exact-size
+slice of the corpus is ever materialized on the hot path -- and slice the
+*estimates* (cheap, ``O(capacity)`` per query row) down to the live row
+count.  Per-row estimates are bitwise independent of trailing capacity, so
+results are identical to running on exact-size arrays.
+
+On CPU (no buffer donation in XLA's CPU client) the update falls back to a
+buffer copy; the scheme still never restacks chunk lists and becomes truly
+in-place on TPU.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import warnings
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.distributed.sharding import corpus_axis
+from repro.kernels.estimate import CORPUS_PAD_FP
+
+
+@contextlib.contextmanager
+def _quiet_cpu_donation():
+    # XLA's CPU client has no buffer donation; jax warns once per shape at
+    # compile time.  The copy fallback is this module's documented CPU
+    # behavior, so the warning is noise here (donation works on TPU).
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+# Corpus pad sentinel: the estimate kernels' own corpus padding fill
+# (single definition in repro.kernels.estimate), so unused capacity rows
+# never collide with any query fingerprint (queries pad with -1; live
+# fingerprints are >= 0).
+PAD_FP = CORPUS_PAD_FP
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _write_rows(fpb, vb, nb, fp, val, norm, off):
+    zero = jnp.int32(0)
+    return (jax.lax.dynamic_update_slice(fpb, fp, (zero, off, zero)),
+            jax.lax.dynamic_update_slice(vb, val, (zero, off, zero)),
+            jax.lax.dynamic_update_slice(nb, norm, (zero, off)))
+
+
+@functools.partial(jax.jit, static_argnames=("cap",), donate_argnums=(0, 1, 2))
+def _grow_buffers(fpb, vb, nb, *, cap: int):
+    F, old, m = fpb.shape
+    ext = cap - old
+    return (jnp.concatenate([fpb, jnp.full((F, ext, m), PAD_FP, jnp.int32)],
+                            axis=1),
+            jnp.concatenate([vb, jnp.zeros((F, ext, m), jnp.float32)], axis=1),
+            jnp.concatenate([nb, jnp.zeros((F, ext), jnp.float32)], axis=1))
+
+
+class CorpusStore:
+    """Growable field-stacked device store of ICWS sketch rows.
+
+    ``fields=1`` is the generic single-corpus case (see
+    :class:`repro.data.corpus.SketchCorpus`, a thin view over this class);
+    ``fields=3`` backs :class:`repro.data.dataset_search.DatasetSearchIndex`
+    with all three §1.3 field corpora in one canonical stack.
+    """
+
+    def __init__(self, m: int, fields: int = 1, min_capacity: int = 64,
+                 mesh=None, row_multiple: int = 0):
+        if fields < 1:
+            raise ValueError("fields must be >= 1")
+        if min_capacity < 1:
+            raise ValueError("min_capacity must be >= 1")
+        self.m = int(m)
+        self.fields = int(fields)
+        # a mesh with a multi-device corpus axis (see
+        # repro.distributed.sharding.corpus_axis) shards the buffers over
+        # their row dim at allocation, so the corpus memory -- not just the
+        # query compute -- spreads across devices and no per-query
+        # redistribution ever happens
+        self.mesh = mesh
+        self.corpus_axis = corpus_axis(mesh) if mesh is not None else None
+        if self.corpus_axis is not None:
+            self._buf_sharding = NamedSharding(
+                mesh, PartitionSpec(None, self.corpus_axis, None))
+            self._norm_sharding = NamedSharding(
+                mesh, PartitionSpec(None, self.corpus_axis))
+        else:
+            self._buf_sharding = self._norm_sharding = None
+        # round the capacity floor up to a multiple of row_multiple (the
+        # corpus-axis size unless overridden): doubling preserves
+        # divisibility, so every capacity this store ever allocates splits
+        # evenly over the shards and the query path never re-pads rows
+        if row_multiple < 1:
+            row_multiple = (mesh.shape[self.corpus_axis]
+                            if self.corpus_axis is not None else 1)
+        self.row_multiple = int(row_multiple)
+        self.min_capacity = (-(-int(min_capacity) // self.row_multiple)
+                             * self.row_multiple)
+        self._fp = None
+        self._val = None
+        self._norm = None
+        self._size = 0
+        self._cap = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    @property
+    def size(self) -> int:
+        """Live rows per field."""
+        return self._size
+
+    @property
+    def capacity(self) -> int:
+        """Allocated rows per field (size <= capacity < 2 * max(size, min))."""
+        return self._cap
+
+    # -- ingestion -----------------------------------------------------------
+    def append(self, fp, val, norm) -> None:
+        """Append sketch rows: ``fp``/``val`` ``[F, b, m]``, ``norm [F, b]``
+        (``[b, m]`` / ``[b]`` accepted when ``fields == 1``).
+
+        All three components are validated against each other up front --
+        a row-count mismatch raises here, at ingest, never at query time.
+        """
+        fp = jnp.asarray(fp, jnp.int32)
+        val = jnp.asarray(val, jnp.float32)
+        norm = jnp.asarray(norm, jnp.float32)
+        if self.fields == 1 and fp.ndim == 2:
+            fp, val, norm = fp[None], val[None], norm.reshape(1, -1)
+        if fp.ndim != 3 or fp.shape[0] != self.fields or fp.shape[2] != self.m:
+            raise ValueError(
+                f"fingerprints must be [{self.fields}, b, {self.m}]; "
+                f"got {tuple(fp.shape)}")
+        if val.shape != fp.shape:
+            raise ValueError(
+                f"value rows {tuple(val.shape)} do not match fingerprint "
+                f"rows {tuple(fp.shape)}")
+        b = int(fp.shape[1])
+        if norm.shape != (self.fields, b):
+            raise ValueError(
+                f"norm rows {tuple(norm.shape)} do not match fingerprint "
+                f"rows ({self.fields}, {b})")
+        if b == 0:
+            return
+        self._reserve(self._size + b)
+        with _quiet_cpu_donation():
+            self._fp, self._val, self._norm = _write_rows(
+                self._fp, self._val, self._norm, fp, val, norm,
+                jnp.int32(self._size))
+        self._place()
+        self._size += b
+
+    def _reserve(self, n: int) -> None:
+        if n <= self._cap:
+            return
+        cap = max(self._cap, self.min_capacity)
+        while cap < n:
+            cap *= 2
+        if self._fp is None:
+            F, m = self.fields, self.m
+            self._fp = jnp.full((F, cap, m), PAD_FP, jnp.int32)
+            self._val = jnp.zeros((F, cap, m), jnp.float32)
+            self._norm = jnp.zeros((F, cap), jnp.float32)
+        else:
+            with _quiet_cpu_donation():
+                self._fp, self._val, self._norm = _grow_buffers(
+                    self._fp, self._val, self._norm, cap=cap)
+        self._cap = cap
+        self._place()
+
+    def _place(self) -> None:
+        """Pin the buffers to their row-sharded placement.
+
+        ``device_put`` onto an array's existing sharding is a no-op, so
+        this only moves data when an allocation / growth / update changed
+        the placement; single-device stores skip it entirely."""
+        if self._buf_sharding is None:
+            return
+        self._fp = jax.device_put(self._fp, self._buf_sharding)
+        self._val = jax.device_put(self._val, self._buf_sharding)
+        self._norm = jax.device_put(self._norm, self._norm_sharding)
+
+    # -- views ---------------------------------------------------------------
+    def buffers(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """The canonical full-capacity device buffers
+        ``(fp [F, cap, m], val [F, cap, m], norm [F, cap])``.
+
+        This is what query paths consume: unused capacity rows are inert
+        under the estimate kernels (pad-sentinel fingerprints, zero norms),
+        so estimates over the buffers match estimates over exact-size
+        arrays row for row -- callers slice the *estimates* to
+        ``[..., :len(store)]``, never the corpus.
+
+        .. warning:: the next :meth:`append` DONATES these exact arrays
+           back to XLA for the in-place update, which invalidates them on
+           backends with donation (TPU/GPU: using a stale reference raises
+           ``Array has been deleted``).  Re-fetch per query; never cache
+           the returned arrays across appends.
+        """
+        if self._size == 0:
+            raise ValueError("empty corpus")
+        return self._fp, self._val, self._norm
+
+    def arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Exact-size ``(fp [F, P, m], val [F, P, m], norm [F, P])`` slices
+        (``[P, m]`` / ``[P]`` when ``fields == 1``).
+
+        A transient copy when ``size < capacity`` -- intended for host-side
+        cross-checks and tests; hot query paths use :meth:`buffers`.
+        """
+        if self._size == 0:
+            raise ValueError("empty corpus")
+        fp = self._fp[:, :self._size]
+        val = self._val[:, :self._size]
+        norm = self._norm[:, :self._size]
+        if self.fields == 1:
+            return fp[0], val[0], norm[0]
+        return fp, val, norm
+
+    def storage_doubles(self) -> float:
+        """Paper accounting: 1.5 doubles per sample + 1 norm, per sketch."""
+        return self._size * self.fields * (1.5 * self.m + 1.0)

@@ -1,6 +1,8 @@
 """Distributed runtime: logical-axis sharding + mesh helpers."""
-from .sharding import (DEFAULT_RULES, ShardingCtx, constrain, make_rules,
-                       rules_for_cell, sharding_for, spec_for, tree_shardings)
+from .sharding import (DEFAULT_RULES, ShardingCtx, constrain, corpus_axis,
+                       make_rules, rules_for_cell, sharding_for, spec_for,
+                       tree_shardings)
 
-__all__ = ["DEFAULT_RULES", "ShardingCtx", "constrain", "make_rules",
-           "rules_for_cell", "sharding_for", "spec_for", "tree_shardings"]
+__all__ = ["DEFAULT_RULES", "ShardingCtx", "constrain", "corpus_axis",
+           "make_rules", "rules_for_cell", "sharding_for", "spec_for",
+           "tree_shardings"]

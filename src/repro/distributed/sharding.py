@@ -45,7 +45,29 @@ DEFAULT_RULES: Dict[str, MeshAxes] = {
     "conv": None,
     "dt_rank": None,
     "stats": None,
+    "corpus": "data",             # sketch-store corpus rows (dataset search):
+                                  # queries replicate, corpus rows shard
 }
+
+
+def corpus_axis(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None
+                ) -> Optional[str]:
+    """The mesh axis carrying the logical ``"corpus"`` (sketch-store row)
+    dim, or ``None`` when unmapped / absent / size 1 (single-device path).
+
+    Sharded corpus-query execution (``repro.kernels.ops.*_sharded``) keys
+    off this: a ``None`` means run the plain single-launch path.
+    """
+    if mesh is None:
+        return None
+    mapped = (rules or DEFAULT_RULES).get("corpus")
+    if mapped is None:
+        return None
+    axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+    for a in axes:
+        if mesh.shape.get(a, 1) > 1:
+            return a
+    return None
 
 
 def axis_size(mesh: Mesh, axes: MeshAxes) -> int:

@@ -35,6 +35,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Pad sentinels -- the single definition of the padding convention every
+# estimate variant (and the corpus store / sharded wrappers) relies on:
+# query padding (-1, also the empty-sketch fingerprint) and corpus padding
+# (-2) never equal each other or a live fingerprint (>= 0), and the kernel
+# guard ``fq >= 0`` keeps both out of the estimate.
+QUERY_PAD_FP = -1
+CORPUS_PAD_FP = -2
+
 
 def _est_kernel(fpa_ref, va_ref, fpb_ref, vb_ref, cnt_ref, sw_ref):
     m_idx = pl.program_id(1)
@@ -67,8 +75,8 @@ def estimate_partials_pallas(fpa, va, fpb, vb, *, bp: int = 8, bm: int = 128,
     p_pad = (-P) % bp
     m_pad = (-m) % bm
     if p_pad or m_pad:
-        fpa = jnp.pad(fpa, ((0, p_pad), (0, m_pad)), constant_values=-1)
-        fpb = jnp.pad(fpb, ((0, p_pad), (0, m_pad)), constant_values=-2)
+        fpa = jnp.pad(fpa, ((0, p_pad), (0, m_pad)), constant_values=QUERY_PAD_FP)
+        fpb = jnp.pad(fpb, ((0, p_pad), (0, m_pad)), constant_values=CORPUS_PAD_FP)
         va = jnp.pad(va, ((0, p_pad), (0, m_pad)))
         vb = jnp.pad(vb, ((0, p_pad), (0, m_pad)))
     Pp, mp = fpa.shape
@@ -102,10 +110,10 @@ def estimate_one_vs_many_pallas(fq, vq, fpc, vc, *, bp: int = 64, bm: int = 128,
     m_pad = (-m) % bm
     if m_pad:
         # pad fingerprints to *different* sentinels so padding never collides
-        fq = jnp.pad(fq, ((0, 0), (0, m_pad)), constant_values=-1)
+        fq = jnp.pad(fq, ((0, 0), (0, m_pad)), constant_values=QUERY_PAD_FP)
         vq = jnp.pad(vq, ((0, 0), (0, m_pad)))
     if p_pad or m_pad:
-        fpc = jnp.pad(fpc, ((0, p_pad), (0, m_pad)), constant_values=-2)
+        fpc = jnp.pad(fpc, ((0, p_pad), (0, m_pad)), constant_values=CORPUS_PAD_FP)
         vc = jnp.pad(vc, ((0, p_pad), (0, m_pad)))
     Pp, mp = fpc.shape
     grid = (Pp // bp, mp // bm)
@@ -177,10 +185,10 @@ def estimate_many_vs_many_pallas(fq, vq, fpc, vc, *, bq: int = 8,
     if q_pad or m_pad:
         # distinct pad sentinels: query padding (-1) never collides with
         # corpus padding (-2), and fq >= 0 guards both out of the estimate
-        fq = jnp.pad(fq, ((0, q_pad), (0, m_pad)), constant_values=-1)
+        fq = jnp.pad(fq, ((0, q_pad), (0, m_pad)), constant_values=QUERY_PAD_FP)
         vq = jnp.pad(vq, ((0, q_pad), (0, m_pad)))
     if p_pad or m_pad:
-        fpc = jnp.pad(fpc, ((0, p_pad), (0, m_pad)), constant_values=-2)
+        fpc = jnp.pad(fpc, ((0, p_pad), (0, m_pad)), constant_values=CORPUS_PAD_FP)
         vc = jnp.pad(vc, ((0, p_pad), (0, m_pad)))
     Qp, mp = fq.shape
     Pp = fpc.shape[0]
@@ -253,11 +261,11 @@ def estimate_fields_pallas(fq, vq, fpc, vc, *, qmap, cmap, bq: int = 8,
     p_pad = (-P) % bp
     m_pad = (-m) % bm
     if q_pad or m_pad:
-        fq = jnp.pad(fq, ((0, 0), (0, q_pad), (0, m_pad)), constant_values=-1)
+        fq = jnp.pad(fq, ((0, 0), (0, q_pad), (0, m_pad)), constant_values=QUERY_PAD_FP)
         vq = jnp.pad(vq, ((0, 0), (0, q_pad), (0, m_pad)))
     if p_pad or m_pad:
         fpc = jnp.pad(fpc, ((0, 0), (0, p_pad), (0, m_pad)),
-                      constant_values=-2)
+                      constant_values=CORPUS_PAD_FP)
         vc = jnp.pad(vc, ((0, 0), (0, p_pad), (0, m_pad)))
     Qp, mp = fq.shape[1:]
     Pp = fpc.shape[1]

@@ -11,10 +11,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PSpec
+
+from repro import compat
 
 from . import ref
 from .countsketch import countsketch_pallas
-from .estimate import (estimate_fields_pallas, estimate_many_vs_many_pallas,
+from .estimate import (CORPUS_PAD_FP, estimate_fields_pallas,
+                       estimate_many_vs_many_pallas,
                        estimate_one_vs_many_pallas, estimate_partials_pallas)
 from .icws_sketch import icws_sketch_pallas
 
@@ -116,6 +120,24 @@ def icws_estimate_many(fq, vq, nq, fpc, vc, nc):
     return jnp.where((nq[:, None] == 0) | (nc[None, :] == 0), 0.0, est)
 
 
+@jax.jit
+def icws_estimate_corpus_stacked(fq, vq, nq, fpb, vb, nb):
+    """One query vs field 0 of stacked ``[1, cap, m]`` store buffers.
+
+    The field slice happens inside jit, so no standalone ``[cap, m]`` copy
+    of the corpus is materialized outside the launch.  Unused capacity rows
+    (pad-sentinel fingerprints, zero norms) estimate to zero -- callers
+    slice the result to the live row count.
+    """
+    return icws_estimate_corpus(fq, vq, nq, fpb[0], vb[0], nb[0])
+
+
+@jax.jit
+def icws_estimate_many_stacked(fq, vq, nq, fpb, vb, nb):
+    """Q queries vs field 0 of stacked ``[1, cap, m]`` store buffers."""
+    return icws_estimate_many(fq, vq, nq, fpb[0], vb[0], nb[0])
+
+
 @functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
 def icws_estimate_fields(fq, vq, nq, fpc, vc, nc, *, qmap, cmap):
     """Fused multi-field ICWS estimates: all field pairs in ONE launch.
@@ -134,3 +156,122 @@ def icws_estimate_fields(fq, vq, nq, fpc, vc, nc, *, qmap, cmap):
     ncg = jnp.stack([nc[cf] for cf in cmap])[:, None, :]    # [G, 1, P]
     est = nqg * ncg * (m_tilde / m) * sw
     return jnp.where((nqg == 0) | (ncg == 0), 0.0, est)
+
+
+# ---------------------------------------------------------------------------
+# sharded query execution: corpus rows spread over a mesh axis
+# ---------------------------------------------------------------------------
+# Each shard runs the same jitted estimate launch on its slice of the corpus
+# rows with the queries replicated; because every corpus row's estimate is
+# independent of every other row (the kernels reduce only over the sample
+# axis m, with identical block sizes on any row count), the concatenated
+# per-shard results are bitwise identical to the single-device launch.
+
+def _pad_corpus_rows(x, pad: int, axis: int, value=0):
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# The shard_map-transformed callables are built once per (mesh, axis, ...)
+# and cached: rebuilding the closure per call would change the transformed
+# function's identity and defeat jax's tracing cache on the serving hot
+# path -- exactly the per-launch overhead the batched engine amortizes.
+
+@functools.lru_cache(maxsize=None)
+def _many_sharded_fn(mesh, axis: str):
+    def body(fq, vq, nq, fpb, vb, nb):
+        return icws_estimate_many(fq, vq, nq, fpb[0], vb[0], nb[0])
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(), PSpec(),
+                  PSpec(None, axis), PSpec(None, axis), PSpec(None, axis)),
+        out_specs=PSpec(None, axis))
+
+
+def icws_estimate_many_sharded(fq, vq, nq, fpb, vb, nb, *, mesh, axis="data"):
+    """Sharded :func:`icws_estimate_many_stacked`: Q queries vs an F=1 store
+    whose corpus rows are split over mesh axis ``axis``.
+
+    Queries replicate; corpus buffers shard along their row dim (padded with
+    inert rows to a multiple of the axis size).  Returns ``[Q, cap]`` f32,
+    bitwise identical to the single-device launch.
+    """
+    d = mesh.shape[axis]
+    cap = fpb.shape[1]
+    pad = (-cap) % d
+    fpb = _pad_corpus_rows(fpb, pad, 1, CORPUS_PAD_FP)
+    vb = _pad_corpus_rows(vb, pad, 1)
+    nb = _pad_corpus_rows(nb, pad, 1)
+    f = _many_sharded_fn(mesh, axis)
+    return f(fq, vq, nq, fpb, vb, nb)[:, :cap]
+
+
+@functools.lru_cache(maxsize=None)
+def _fields_sharded_fn(mesh, axis: str, qmap, cmap):
+    def body(fq, vq, nq, fpc, vc, nc):
+        return icws_estimate_fields(fq, vq, nq, fpc, vc, nc,
+                                    qmap=qmap, cmap=cmap)
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(), PSpec(),
+                  PSpec(None, axis), PSpec(None, axis), PSpec(None, axis)),
+        out_specs=PSpec(None, None, axis))
+
+
+def icws_estimate_fields_sharded(fq, vq, nq, fpc, vc, nc, *, qmap, cmap,
+                                 mesh, axis="data"):
+    """Sharded :func:`icws_estimate_fields`: the fused multi-field launch
+    runs per shard over corpus rows split along mesh axis ``axis``.
+
+    Args as :func:`icws_estimate_fields` (corpus ``[C, P, m]`` may be
+    full-capacity store buffers).  Returns ``[G, Q, P]`` f32, bitwise
+    identical to the single-device launch.
+    """
+    d = mesh.shape[axis]
+    cap = fpc.shape[1]
+    pad = (-cap) % d
+    fpc = _pad_corpus_rows(fpc, pad, 1, CORPUS_PAD_FP)
+    vc = _pad_corpus_rows(vc, pad, 1)
+    nc = _pad_corpus_rows(nc, pad, 1)
+    f = _fields_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
+    return f(fq, vq, nq, fpc, vc, nc)[:, :, :cap]
+
+
+def sharded_top_k(score, k: int, *, mesh, axis="data"):
+    """Per-shard top-k over the last dim of ``score``, merged globally.
+
+    Bitwise identical -- values AND indices -- to ``jax.lax.top_k(score,
+    k)``: ``top_k`` breaks score ties by ascending index, each shard's
+    candidate list keeps ascending global indices within equal scores, and
+    the merge concatenates shards in index order, so the global re-``top_k``
+    resolves ties exactly as the unsharded call does.  Any global top-k row
+    must be in its own shard's top-k (rows ranked above it locally are
+    ranked above it globally), so per-shard k candidates always suffice.
+    """
+    d = mesh.shape[axis]
+    n = score.shape[-1]
+    pad = (-n) % d
+    # pad below every real score (the ranking floor is -1), never selected
+    score = _pad_corpus_rows(score, pad, score.ndim - 1, -jnp.inf)
+    shard = score.shape[-1] // d
+    kl = min(k, shard)
+    f = _sharded_topk_fn(mesh, axis, kl, shard, score.ndim)
+    vals, idx = f(score)
+    v, pos = jax.lax.top_k(vals, k)
+    return v, jnp.take_along_axis(idx, pos, axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_topk_fn(mesh, axis: str, kl: int, shard: int, ndim: int):
+    def body(s):
+        v, i = jax.lax.top_k(s, kl)
+        return v, i + jax.lax.axis_index(axis) * shard
+
+    spec = PSpec(*([None] * (ndim - 1) + [axis]))
+    return compat.shard_map(body, mesh=mesh, in_specs=(spec,),
+                            out_specs=(spec, spec))

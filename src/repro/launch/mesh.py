@@ -17,6 +17,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)))
 
 
+def make_corpus_mesh(data: int = 0):
+    """1-D ``("data",)`` mesh for sharded corpus-query execution.
+
+    The dataset-search store shards its corpus rows over this axis (logical
+    axis ``"corpus"`` in ``distributed.sharding.DEFAULT_RULES``).  ``data=0``
+    uses every visible device -- e.g. the forced host devices under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU.
+    """
+    n = data or len(jax.devices())
+    return make_mesh((n,), ("data",), axis_types=auto_axis_types(1))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples on CPU)."""
     n = len(jax.devices())

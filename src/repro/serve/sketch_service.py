@@ -2,12 +2,16 @@
 
 Wraps :class:`repro.data.DatasetSearchIndex` in the shape a query service
 needs: named-table ingestion, ``search`` / ``search_batch`` endpoints, and
-request accounting.  The hot loop is the device path -- the corpus lives as
-pre-stacked device arrays.  A single ``search`` is one ICWS sketch launch
-plus six one-vs-many estimate launches; ``search_batch`` collapses a whole
-micro-batch of queries into one ``[3Q, N]`` sketch launch plus ONE fused
-multi-field many-vs-many estimate launch, which is why batched serving is
-the high-traffic endpoint.  Both are independent of how the corpus was
+request accounting.  The hot loop is the device path -- the corpus lives in
+the index's canonical field-stacked :class:`repro.data.CorpusStore` (one
+device-resident copy, amortized in-place append), and every query, single
+or batched, is one ``[3Q, N]`` ICWS sketch launch plus ONE fused
+multi-field many-vs-many estimate launch off those buffers (``search`` is
+the Q=1 case; ``search_batch`` amortizes launches across a micro-batch,
+which is why batched serving is the high-traffic endpoint).  Pass a
+``mesh`` with a multi-device corpus axis to serve the estimate launch
+sharded over corpus rows -- rankings are bitwise identical to the
+single-device path.  All of it is independent of how the corpus was
 ingested.
 """
 from __future__ import annotations
@@ -53,9 +57,11 @@ class SketchSearchService:
     queries against the whole corpus from sketches alone."""
 
     def __init__(self, m: int = 256, seed: int = 0,
-                 backend: str = "device", keep_host_oracle: bool = True):
+                 backend: str = "device", keep_host_oracle: bool = True,
+                 mesh=None):
         self.index = DatasetSearchIndex(m=m, seed=seed, backend=backend,
-                                        keep_host_oracle=keep_host_oracle)
+                                        keep_host_oracle=keep_host_oracle,
+                                        mesh=mesh)
         self.stats = ServiceStats()
 
     # -- ingestion ----------------------------------------------------------
@@ -124,9 +130,13 @@ class SketchSearchService:
         return results
 
     def describe(self) -> Dict[str, float]:
+        store = self.index.store
         return {
             "tables": float(len(self.index.tables)),
             "storage_doubles": self.index.storage_doubles(),
+            "corpus_rows": float(store.size if store is not None else 0),
+            "corpus_capacity": float(
+                store.capacity if store is not None else 0),
             "queries_served": float(self.stats.queries_served),
             "mean_query_ms": self.stats.mean_query_ms,
             "batches_served": float(self.stats.batches_served),

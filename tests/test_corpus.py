@@ -99,10 +99,13 @@ def test_corpus_chunked_append_matches_one_shot():
     assert np.array_equal(np.asarray(fp1), np.asarray(fp2))
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
     np.testing.assert_allclose(np.asarray(n1), np.asarray(n2))
-    # consolidation is cached: same buffers returned until the next append
-    assert chunked.arrays()[0] is fp2
+    # appends land in the canonical store: rows already written are stable
+    # across later appends (and capacity growth), no chunk re-consolidation
+    assert chunked.capacity >= len(chunked)
     chunked.add_batch(vecs[:1])
     assert len(chunked) == 8
+    fp3, _, _ = chunked.arrays()
+    assert np.array_equal(np.asarray(fp3)[:7], np.asarray(fp2))
 
 
 def test_corpus_device_query_matches_host_estimator_on_identical_sketches():
@@ -150,6 +153,26 @@ def test_corpus_empty_raises():
     corpus = SketchCorpus(m=64)
     with pytest.raises(ValueError):
         corpus.arrays()
+
+
+def test_corpus_add_sketches_validates_all_components():
+    """Regression: a mismatched ``val`` (or ``norm``) must fail at ingest.
+
+    Pre-fix, ``add_sketches`` checked only fp-vs-norm row counts and a
+    wrong-sized ``val`` sailed in, deferring the failure to query time."""
+    rng = np.random.default_rng(3)
+    m = 64
+    corpus = SketchCorpus(m=m)
+    fp = rng.integers(0, 50, size=(4, m)).astype(np.int32)
+    val = rng.normal(size=(4, m)).astype(np.float32)
+    norm = np.ones(4, np.float32)
+    with pytest.raises(ValueError):
+        corpus.add_sketches(fp, val[:3], norm)          # short val
+    with pytest.raises(ValueError):
+        corpus.add_sketches(fp, val, norm[:3])          # short norm
+    assert len(corpus) == 0                             # nothing ingested
+    corpus.add_sketches(fp, val, norm)                  # matched: fine
+    assert len(corpus) == 4
 
 
 # ---------------------------------------------------------------------------
