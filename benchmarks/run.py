@@ -33,7 +33,17 @@ def main() -> None:
         "theory": theory_check.run,
         "perf": perf_sketch.run,
     }
-    only = args.only.split(",") if args.only else list(suites)
+    only = ([s.strip() for s in args.only.split(",") if s.strip()]
+            if args.only is not None else list(suites))
+    # validate up front: a typo'd suite name must fail with a clear error
+    # before any suite runs, not as a bare KeyError mid-run after the
+    # header row is printed
+    unknown = [s for s in only if s not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s) for --only: {', '.join(unknown)} "
+                 f"(choose from: {', '.join(suites)})")
+    if not only:
+        ap.error(f"--only selected no suites (choose from: {', '.join(suites)})")
     print("name,us_per_call,derived")
     t0 = time.time()
     durations = {}

@@ -16,8 +16,15 @@ it, and then re-serve the same query *sharded*: corpus rows split over a
 2-device ``data`` mesh axis (forced host devices below), per-shard top-k +
 global merge, rankings bitwise identical to the single-device path.
 
-Run:  PYTHONPATH=src python examples/dataset_search.py
+``--family {icws,cs,jl,all}`` picks the serving sketch family: the same
+lake is sketched into a CountSketch / JL corpus (dense device tables, MXU
+estimate matmuls, storage-matched to the ICWS budget) instead of ICWS
+fingerprints; ``all`` serves the identical query under every family side
+by side -- the paper's comparison, live on the serving path.
+
+Run:  PYTHONPATH=src python examples/dataset_search.py [--family all]
 """
+import argparse
 import os
 
 # force 2 CPU "devices" so the sharded serving path is demonstrable on a
@@ -48,14 +55,42 @@ def lake_tables(rng, days, rain):
     ]
 
 
-def build_index(tables, mesh=None):
-    index = DatasetSearchIndex(m=384, seed=7, mesh=mesh)
+def build_index(tables, mesh=None, family="icws"):
+    index = DatasetSearchIndex(m=384, seed=7, mesh=mesh, family=family,
+                               keep_host_oracle=(family == "icws"))
     for name, keys, values in tables:
         index.add_table(name, keys, values)
     return index
 
 
+def print_results(results):
+    print(f"{'table':<26}{'join_size':>10}{'joinability':>12}{'corr':>8}")
+    for r in results:
+        print(f"{r.name:<26}{r.join_size:>10.0f}"
+              f"{r.joinability:>12.2f}{r.corr:>8.3f}")
+
+
+def family_comparison(tables, days, ridership, families):
+    """Serve the identical lake + query under several sketch families.
+
+    Every index is storage-matched (one ICWS budget sizes the CS width /
+    JL dimension via the registry accounting), so differences in the
+    rankings and join-size estimates are the sketches' doing -- the
+    paper's §1.3 comparison, answered by the device corpora."""
+    for family in families:
+        index = build_index(tables, family=family)
+        print(f"\n--- family={family} "
+              f"({index.storage_doubles():.0f} doubles of sketch storage) ---")
+        print_results(index.query(days, ridership, top_k=5, min_join=30))
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="icws",
+                    choices=("icws", "cs", "jl", "all"),
+                    help="serving sketch family; 'all' serves the same "
+                         "corpus under icws, cs, and jl side by side")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
     days = np.arange(0, 730)                     # two years of dates
     # latent weather drives ridership down on rainy days
@@ -63,6 +98,14 @@ def main():
     ridership = 120_000 - 6_000 * rain + rng.normal(0, 4_000, 730)
 
     tables = lake_tables(rng, days, rain)
+    if args.family != "icws":
+        # the same corpus served under other sketch families (or all of
+        # them): the paper's comparison live on the device serving path
+        families = (("icws", "cs", "jl") if args.family == "all"
+                    else (args.family,))
+        family_comparison(tables, days, ridership, families)
+        return
+
     index = build_index(tables)                  # backend="device" by default
     store = index.store
     print(f"lake indexed: {len(index.tables)} tables in one canonical "
@@ -71,9 +114,7 @@ def main():
 
     # the analyst's query (served from the device-resident corpus) ----------
     results = index.query(days, ridership, top_k=5, min_join=30)
-    print(f"{'table':<26}{'join_size':>10}{'joinability':>12}{'corr':>8}")
-    for r in results:
-        print(f"{r.name:<26}{r.join_size:>10.0f}{r.joinability:>12.2f}{r.corr:>8.3f}")
+    print_results(results)
 
     true_corr = np.corrcoef(rain, ridership)[0, 1]
     est = next(r for r in results if r.name == "weather_precipitation")

@@ -14,7 +14,8 @@ from .wmh import (DEFAULT_L, WeightedMinHash, WMHSketch, compensated_sum,
                   sketch_bruteforce, stack_wmh)
 from .minhash import MinHash, MHSketch, stack_mh
 from .kmv import KMV, KMVSketch
-from .linear import CountSketch, CSSketch, JL, JLSketch
+from .linear import (CountSketch, CountSketchU32, CSSketch, JL, JLSketch,
+                     JLU32)
 from .icws import ICWS, ICWSSketch, stack_icws
 from .registry import FACTORIES, PAPER_METHODS, make
 
@@ -27,6 +28,7 @@ __all__ = [
     "DEFAULT_L", "WeightedMinHash", "WMHSketch", "compensated_sum",
     "sketch_bruteforce",
     "stack_wmh", "MinHash", "MHSketch", "stack_mh", "KMV", "KMVSketch",
-    "CountSketch", "CSSketch", "JL", "JLSketch", "ICWS", "ICWSSketch",
+    "CountSketch", "CountSketchU32", "CSSketch", "JL", "JLSketch", "JLU32",
+    "ICWS", "ICWSSketch",
     "stack_icws", "FACTORIES", "PAPER_METHODS", "make",
 ]

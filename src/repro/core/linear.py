@@ -5,6 +5,18 @@ S(a) = Pi a, hence mergeable under addition -- the property
 :mod:`repro.optim.compression` exploits to all-reduce gradients in sketch
 space.  Signs/buckets come from 4-wise independent polynomial hashes so the
 classic AMS/CountSketch variance analysis applies.
+
+Two hash contracts live here:
+
+  * :class:`JL` / :class:`CountSketch` -- the paper-faithful baselines,
+    4-wise independent polynomial hashes over Z_p (host only).
+  * :class:`JLU32` / :class:`CountSketchU32` -- the *device-contract*
+    variants: signs and buckets drawn from the uint32 mixing RNG the Pallas
+    kernels use (:mod:`repro.core.u32` mirrors ``repro.kernels.common``),
+    exactly as :class:`repro.core.icws.ICWS` mirrors the ICWS kernel.  A
+    host-U32-sketched vector and a device-sketched vector carry the same
+    table up to f32 summation order, so these are the cross-checked host
+    oracles for the device CS/JL serving path.
 """
 from __future__ import annotations
 
@@ -12,8 +24,25 @@ import dataclasses
 
 import numpy as np
 
+from . import u32
 from .hashing import MERSENNE_P, _mix_to_zp, _rng
 from .types import SparseVec
+
+# u32 salt streams shared with the kernels: host twins of the identically
+# named constants in repro.kernels.common (kept in sync the same way
+# repro.core.u32 twins the mixers; this package stays numpy-only, so it
+# never imports the kernels).  CountSketch buckets/signs reuse the dense
+# gradient-compression kernel's streams so a sparse vector sketched by key
+# and a dense vector sketched by position interoperate when keys ==
+# positions; JL signs get their own stream.
+CS_BUCKET_STREAM = 21
+CS_SIGN_STREAM = 22
+JL_SIGN_STREAM = 31
+
+
+def _keys_u32(indices: np.ndarray) -> np.ndarray:
+    """Fold int64 indices into the kernels' uint32 key domain."""
+    return (np.asarray(indices, np.int64) & np.int64(0xFFFFFFFF)).astype(np.uint32)
 
 
 def _poly_hash(coeffs: np.ndarray, x: np.ndarray) -> np.ndarray:
@@ -118,4 +147,91 @@ class CountSketch:
         buckets = _poly_hash(self._bucket_coeffs, indices) % self.width
         signs = 1.0 - 2.0 * (_poly_hash(self._sign_coeffs, indices) & 1)
         est = np.stack([s.table[r, buckets[r]] * signs[r] for r in range(self.reps)])
+        return np.median(est, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Device-contract variants: u32 mixing RNG shared with the Pallas kernels
+# ---------------------------------------------------------------------------
+class JLU32:
+    """JL projection drawing signs from the kernel u32 RNG.
+
+    Host oracle for the device JL family: ``sigma_t(i)`` is the parity of
+    ``hash_u32(key_i, salt(seed, JL_SIGN_STREAM, t))`` -- the same variates
+    the Pallas JL sketch kernel draws, so host and device sketches of one
+    vector agree up to f32 vs f64 summation order.
+    """
+
+    name = "jl_u32"
+
+    def __init__(self, m: int, seed: int = 0):
+        self.m = int(m)
+        self.seed = int(seed)
+
+    def sketch(self, v: SparseVec) -> JLSketch:
+        if v.nnz == 0:
+            return JLSketch(proj=np.zeros(self.m))
+        salt = u32.salt_for(self.seed, JL_SIGN_STREAM, np.arange(self.m))
+        h = u32.hash_u32(_keys_u32(v.indices)[None, :], salt[:, None])  # [m, nnz]
+        signs = 1.0 - 2.0 * (h & np.uint32(1)).astype(np.float64)
+        return JLSketch(proj=(signs @ v.values) / np.sqrt(self.m))
+
+    def sketch_dense(self, a: np.ndarray) -> JLSketch:
+        return self.sketch(SparseVec.from_dense(a))
+
+    def estimate(self, sa: JLSketch, sb: JLSketch) -> float:
+        return float(np.dot(sa.proj, sb.proj))
+
+    def merge(self, sa: JLSketch, sb: JLSketch) -> JLSketch:
+        return JLSketch(proj=sa.proj + sb.proj)
+
+
+class CountSketchU32:
+    """CountSketch drawing buckets/signs from the kernel u32 RNG.
+
+    Host oracle for the device CS family.  Streams match the dense
+    gradient-compression kernel (:mod:`repro.kernels.countsketch`), so a
+    sparse vector sketched by key here equals the dense kernel's sketch of
+    the densified vector (keys == positions), up to f32 summation order.
+    """
+
+    name = "cs_u32"
+
+    def __init__(self, width: int, seed: int = 0, reps: int = REPS):
+        self.width = int(width)
+        self.reps = int(reps)
+        self.seed = int(seed)
+
+    def _hashes(self, indices: np.ndarray):
+        r = np.arange(self.reps)
+        keys = _keys_u32(indices)[None, :]
+        hb = u32.hash_u32(keys, u32.salt_for(self.seed, CS_BUCKET_STREAM, r)[:, None])
+        buckets = (hb % np.uint32(self.width)).astype(np.int64)       # [R, nnz]
+        hs = u32.hash_u32(keys, u32.salt_for(self.seed, CS_SIGN_STREAM, r)[:, None])
+        signs = 1.0 - 2.0 * (hs & np.uint32(1)).astype(np.float64)
+        return buckets, signs
+
+    def sketch(self, v: SparseVec) -> CSSketch:
+        table = np.zeros((self.reps, self.width), dtype=np.float64)
+        if v.nnz == 0:
+            return CSSketch(table=table)
+        buckets, signs = self._hashes(v.indices)
+        for r in range(self.reps):
+            np.add.at(table[r], buckets[r], signs[r] * v.values)
+        return CSSketch(table=table)
+
+    def sketch_dense(self, a: np.ndarray) -> CSSketch:
+        return self.sketch(SparseVec.from_dense(a))
+
+    def estimate(self, sa: CSSketch, sb: CSSketch) -> float:
+        per_rep = np.sum(sa.table * sb.table, axis=1)
+        return float(np.median(per_rep))
+
+    def merge(self, sa: CSSketch, sb: CSSketch) -> CSSketch:
+        return CSSketch(table=sa.table + sb.table)
+
+    def decode(self, s: CSSketch, indices: np.ndarray) -> np.ndarray:
+        buckets, signs = self._hashes(indices)
+        est = np.stack([s.table[r, buckets[r]] * signs[r]
+                        for r in range(self.reps)])
         return np.median(est, axis=0)

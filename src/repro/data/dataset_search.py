@@ -57,7 +57,7 @@ from repro.core.kmv import KMVSketch
 from repro.core.wmh import StackedWMH, WMHSketch
 from repro.kernels import ops
 
-from .corpus import sketch_batch
+from .families import FAMILY_NAMES, make_family, wmh_storage
 from .store import CorpusStore
 
 FIELDS = ("key_indicator", "values", "values_sq")
@@ -122,17 +122,33 @@ class DatasetSearchIndex:
 
     def __init__(self, m: int = 256, seed: int = 0, key_space: int = 2 ** 31,
                  backend: str = "device", keep_host_oracle: bool = True,
-                 mesh=None):
+                 mesh=None, family: str = "icws"):
         if backend not in ("device", "host"):
             raise ValueError(f"unknown backend {backend!r}")
+        if family not in FAMILY_NAMES:
+            raise ValueError(
+                f"unknown sketch family {family!r}; choose from {FAMILY_NAMES}")
+        if family != "icws" and backend == "host":
+            raise ValueError(
+                "backend='host' is the WMH/ICWS oracle path; linear families "
+                "(cs, jl) serve on the device path only")
         self.m = m
         self.seed = seed
         self.key_space = key_space
         self.backend = backend
+        # the device serving family, sized to the storage budget an
+        # m-sample WMH/ICWS sketch occupies (registry accounting), so
+        # icws/cs/jl indexes built with one m are storage-matched and the
+        # paper's comparison is fair by construction.  family="icws"
+        # resolves to exactly m samples -- the original path, bit for bit.
+        self.family = make_family(family, storage=wmh_storage(m), seed=seed)
         # host oracle sketches are required to serve backend="host" queries;
         # symmetrically, the device corpus is only built when the index
-        # serves (or may serve) device queries
-        self.keep_host_oracle = keep_host_oracle or backend == "host"
+        # serves (or may serve) device queries.  Linear families can never
+        # serve the (WMH) host path, so they never pay the per-table host
+        # sketching cost, whatever the flag says.
+        self.keep_host_oracle = ((keep_host_oracle or backend == "host")
+                                 and family == "icws")
         self.keep_device_corpus = backend == "device"
         self.mesh = mesh
         self.sketcher = WeightedMinHash(m=m, seed=seed)
@@ -142,7 +158,7 @@ class DatasetSearchIndex:
         # store resolves the corpus axis, shards its buffers over it, and
         # keeps capacity divisible by the shard count
         self.store: Optional[CorpusStore] = (
-            CorpusStore(m=m, fields=len(FIELDS), mesh=mesh)
+            CorpusStore(family=self.family, fields=len(FIELDS), mesh=mesh)
             if self.keep_device_corpus else None)
         self._corpus_axis = (self.store.corpus_axis
                              if self.store is not None else None)
@@ -181,8 +197,8 @@ class DatasetSearchIndex:
         if self.store is not None:
             # device path: one [3, N] kernel launch sketches all three
             # fields; the rows append in place into the canonical store
-            fp, v, nrm = sketch_batch([ind, val, sq], m=self.m, seed=self.seed)
-            self.store.append(fp[:, None, :], v[:, None, :], nrm[:, None])
+            comps = self.family.sketch_rows([ind, val, sq])
+            self.store.append(*(c[:, None] for c in comps))
         host = {}
         if self.keep_host_oracle:
             host = {"key_indicator": self.sketcher.sketch(ind),
@@ -266,23 +282,23 @@ class DatasetSearchIndex:
             ind, val, sq = self.vectorize(keys, values)
             field_vecs.extend((ind, val, sq))
             samples.append(self.kmv.sketch(val))
-        # one kernel launch sketches all 3Q query field vectors
-        fq, vq, nq = sketch_batch(field_vecs, m=self.m, seed=self.seed)
-        fq3 = fq.reshape(Q, 3, self.m).transpose(1, 0, 2)      # [3, Q, m]
-        vq3 = vq.reshape(Q, 3, self.m).transpose(1, 0, 2)
-        nq3 = nq.reshape(Q, 3).T                               # [3, Q]
+        # one kernel launch sketches all 3Q query field vectors; each
+        # component reshapes [3Q, ...] -> [3, Q, ...] for the fields launch
+        qcomps = tuple(
+            jnp.swapaxes(c.reshape((Q, 3) + c.shape[1:]), 0, 1)
+            for c in self.family.sketch_rows(field_vecs))
 
         # one fused launch (per corpus shard): all six field-pair estimates
         # for every query, straight off the canonical store buffers (unused
         # capacity rows are inert and sliced out of the estimates below)
-        fc3, vc3, nc3 = self.store.buffers()
+        cbufs = self.store.buffers()
         if self._corpus_axis is not None:
-            est = ops.icws_estimate_fields_sharded(
-                fq3, vq3, nq3, fc3, vc3, nc3, qmap=QFIELD, cmap=CFIELD,
+            est = self.family.estimate_fields_sharded(
+                qcomps, cbufs, qmap=QFIELD, cmap=CFIELD,
                 mesh=self.mesh, axis=self._corpus_axis)        # [6, Q, cap]
         else:
-            est = ops.icws_estimate_fields(fq3, vq3, nq3, fc3, vc3, nc3,
-                                           qmap=QFIELD, cmap=CFIELD)
+            est = self.family.estimate_fields(qcomps, cbufs,
+                                              qmap=QFIELD, cmap=CFIELD)
         P = len(self.tables)
         est = est[:, :, :P]
 
@@ -308,6 +324,14 @@ class DatasetSearchIndex:
 
     def _query_host(self, keys, values, top_k: int, min_join: float
                     ) -> List[SearchResult]:
+        # guard per-query backend overrides too: a linear-family index must
+        # never silently answer from the WMH oracle instead of its own
+        # sketch method (the constructor enforces the same rule up front)
+        if self.family.name != "icws":
+            raise ValueError(
+                "backend='host' is the WMH/ICWS oracle path; this index "
+                f"serves the {self.family.name!r} family on the device path "
+                "only")
         if not self.keep_host_oracle or self.tables[0].key_indicator is None:
             raise ValueError("host oracle sketches were not kept at ingest "
                              "(keep_host_oracle=False)")
@@ -367,4 +391,5 @@ class DatasetSearchIndex:
         if self.store is not None:
             return self.store.storage_doubles()
         # host-only index: same accounting, counted from the oracle sketches
-        return len(self.tables) * len(FIELDS) * (1.5 * self.m + 1.0)
+        return (len(self.tables) * len(FIELDS)
+                * self.family.storage_doubles_per_row())

@@ -1,0 +1,225 @@
+"""The ``SketchFamily`` contract: device-resident serving for any sketch.
+
+The paper's headline result is a head-to-head -- weighted MinWise hashing
+vs the linear sketches (CountSketch, JL) -- and this module is what lets
+the *serving stack* run that comparison live instead of only in host-numpy
+benchmarks.  A family bundles everything the corpus store and the query
+engine need to know about one sketch method:
+
+  * **Buffer layout** (``components``): the per-row device buffers a
+    :class:`repro.data.store.CorpusStore` preallocates.  ICWS rows are
+    ``(fp [m] int32, val [m] f32, norm [] f32)``; linear rows are a single
+    dense ``[R, W]`` f32 table (JL is the R = 1, W = m case).
+  * **Inert-spare-row rule** (``ComponentSpec.fill``): the fill value that
+    makes unused capacity rows estimate to exactly zero, so query launches
+    run on full-capacity buffers and stay bitwise identical to exact-size
+    arrays.  ICWS fingerprints fill with the corpus pad sentinel and norms
+    with zero; linear tables fill with zero (a zero table dots to zero) --
+    no sentinel machinery at all.
+  * **Sketch launch** (``sketch_rows``): one padded-batch Pallas launch
+    turning B sparse vectors into B buffer rows.
+  * **Fused estimate launch** (``estimate_fields`` and its mesh-sharded
+    twin): all (query-field, corpus-field) pairs of a Q-query batch in ONE
+    kernel launch -- the ICWS collision kernel, or MXU matmuls with a
+    median-of-reps epilogue for the linear families.
+  * **Storage accounting** (``storage_doubles_per_row``) and storage-matched
+    construction (:func:`make_family`), using the same per-method sizing as
+    :mod:`repro.core.registry` so cross-family comparisons are
+    storage-fair by construction.
+  * **Host oracle** (``host_oracle``): the numpy sketcher sharing the
+    kernel RNG contract (:class:`repro.core.ICWS`,
+    :class:`repro.core.linear.CountSketchU32`,
+    :class:`repro.core.linear.JLU32`) that device estimates are
+    cross-checked against.
+
+``DatasetSearchIndex(family="cs")`` / ``SketchSearchService(family="jl")``
+thread one of these through the whole stack; ``family="icws"`` reproduces
+the original ICWS path bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.icws import ICWS
+from repro.core.linear import REPS, CountSketchU32, JLU32
+from repro.core.types import SparseVec
+from repro.kernels import ops
+from repro.kernels.estimate import CORPUS_PAD_FP
+
+from .ingest import pad_linear_batch, sketch_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class ComponentSpec:
+    """One per-row buffer of a family's corpus layout.
+
+    A store allocates each component as ``[fields, capacity, *trailing]``
+    with every element set to ``fill`` -- the value that keeps unallocated
+    rows inert under the family's estimate launch.
+    """
+
+    name: str
+    trailing: Tuple[int, ...]
+    dtype: jnp.dtype
+    fill: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ICWSFamily:
+    """ICWS (weighted MinWise) serving family -- the paper's method.
+
+    Rows are (fingerprints, sampled values, norm); estimation is the fused
+    collision kernel.  This family IS the pre-refactor serving path: it
+    calls the same jitted launches with the same arguments, so rankings
+    are bitwise unchanged.
+    """
+
+    m: int
+    seed: int = 0
+    name: str = dataclasses.field(default="icws", init=False)
+
+    @property
+    def components(self) -> Tuple[ComponentSpec, ...]:
+        return (ComponentSpec("fingerprints", (self.m,), jnp.int32,
+                              CORPUS_PAD_FP),
+                ComponentSpec("values", (self.m,), jnp.float32, 0.0),
+                ComponentSpec("norms", (), jnp.float32, 0.0))
+
+    def storage_doubles_per_row(self) -> float:
+        """Paper accounting: 1.5 doubles per sample + 1 norm."""
+        return 1.5 * self.m + 1.0
+
+    def sketch_rows(self, vecs: Sequence[SparseVec], *, bucket: int = 256):
+        """One ICWS kernel launch: B sparse vectors -> (fp, val, norm) rows."""
+        return sketch_batch(vecs, m=self.m, seed=self.seed, bucket=bucket)
+
+    def estimate_fields(self, q, c, *, qmap, cmap):
+        fq, vq, nq = q
+        fpc, vc, nc = c
+        return ops.icws_estimate_fields(fq, vq, nq, fpc, vc, nc,
+                                        qmap=qmap, cmap=cmap)
+
+    def estimate_fields_sharded(self, q, c, *, qmap, cmap, mesh, axis):
+        fq, vq, nq = q
+        fpc, vc, nc = c
+        return ops.icws_estimate_fields_sharded(fq, vq, nq, fpc, vc, nc,
+                                                qmap=qmap, cmap=cmap,
+                                                mesh=mesh, axis=axis)
+
+    def host_oracle(self) -> ICWS:
+        return ICWS(m=self.m, seed=self.seed)
+
+
+class _LinearFamily:
+    """Shared serving plumbing of the linear families (S(a) = Pi a).
+
+    Rows are one dense ``[R, W]`` f32 table; estimation is per-rep MXU
+    dots + a median-of-reps epilogue (R = 1 for JL, where the median is
+    the dot itself).  Everything is zero-fill inert: empty sketches, spare
+    capacity, and padding all estimate to exactly zero.
+    """
+
+    reps: int
+    width: int
+    seed: int
+
+    @property
+    def components(self) -> Tuple[ComponentSpec, ...]:
+        return (ComponentSpec("tables", (self.reps, self.width),
+                              jnp.float32, 0.0),)
+
+    def storage_doubles_per_row(self) -> float:
+        """Paper accounting: every table cell is one double equivalent."""
+        return float(self.reps * self.width)
+
+    def _sketch_tables(self, keys, vals):
+        raise NotImplementedError
+
+    def sketch_rows(self, vecs: Sequence[SparseVec], *, bucket: int = 256):
+        """One linear-sketch kernel launch: B sparse vectors -> [B, R, W]."""
+        keys, vals = pad_linear_batch(vecs, bucket=bucket)
+        return (self._sketch_tables(jnp.asarray(keys), jnp.asarray(vals)),)
+
+    def estimate_fields(self, q, c, *, qmap, cmap):
+        return ops.linear_estimate_fields(q[0], c[0], qmap=qmap, cmap=cmap)
+
+    def estimate_fields_sharded(self, q, c, *, qmap, cmap, mesh, axis):
+        return ops.linear_estimate_fields_sharded(q[0], c[0], qmap=qmap,
+                                                  cmap=cmap, mesh=mesh,
+                                                  axis=axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class CSFamily(_LinearFamily):
+    """CountSketch serving family (median of ``reps`` repetitions)."""
+
+    width: int
+    reps: int = REPS
+    seed: int = 0
+    name: str = dataclasses.field(default="cs", init=False)
+
+    def _sketch_tables(self, keys, vals):
+        return ops.countsketch_sparse(keys, vals, width=self.width,
+                                      reps=self.reps, seed=self.seed)
+
+    def host_oracle(self) -> CountSketchU32:
+        return CountSketchU32(width=self.width, seed=self.seed,
+                              reps=self.reps)
+
+
+@dataclasses.dataclass(frozen=True)
+class JLFamily(_LinearFamily):
+    """JL / AMS projection serving family (a single ``[1, m]`` table row)."""
+
+    m: int
+    seed: int = 0
+    name: str = dataclasses.field(default="jl", init=False)
+
+    @property
+    def reps(self) -> int:
+        return 1
+
+    @property
+    def width(self) -> int:
+        return self.m
+
+    def _sketch_tables(self, keys, vals):
+        return ops.jl_sketch(keys, vals, m=self.m, seed=self.seed)[:, None, :]
+
+    def host_oracle(self) -> JLU32:
+        return JLU32(m=self.m, seed=self.seed)
+
+
+FAMILY_NAMES = ("icws", "cs", "jl")
+
+
+def make_family(name: str, *, storage: float, seed: int = 0):
+    """Construct a serving family sized to a total storage budget.
+
+    ``storage`` is the paper's x-axis -- total 64-bit-double equivalents
+    per sketch -- and the per-method sizing is delegated to
+    :mod:`repro.core.registry` (icws: ``m = (storage - 1) / 1.5``; cs:
+    ``width = storage / reps``; jl: ``m = storage``), so families built
+    from one budget are storage-matched and comparisons are fair.
+    """
+    if name == "icws":
+        return ICWSFamily(m=registry.make_icws(storage).m, seed=seed)
+    if name == "cs":
+        host = registry.make_cs(storage)
+        return CSFamily(width=host.width, reps=host.reps, seed=seed)
+    if name == "jl":
+        return JLFamily(m=registry.make_jl(storage).m, seed=seed)
+    raise ValueError(
+        f"unknown sketch family {name!r}; choose from {FAMILY_NAMES}")
+
+
+def wmh_storage(m: int) -> float:
+    """The storage budget an m-sample WMH/ICWS sketch occupies -- the
+    anchor :class:`repro.data.dataset_search.DatasetSearchIndex` uses to
+    size every family from its ``m`` parameter.  Delegates to the family's
+    own accounting so the formula lives in exactly one place."""
+    return ICWSFamily(m=m).storage_doubles_per_row()

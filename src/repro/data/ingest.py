@@ -1,0 +1,110 @@
+"""Batch ingest helpers: pad sparse vectors into kernel layouts, sketch them.
+
+The sketch kernels consume ``[B, N]`` padded batches.  Two padding
+conventions exist, one per sketch-family class:
+
+  * :func:`pad_sparse_batch` -- the ICWS layout: *normalized* squared
+    weights + signed values + per-vector norms (the kernel masks ``w == 0``
+    lanes as padding).
+  * :func:`pad_linear_batch` -- the linear (CS/JL) layout: raw signed
+    values, zero-valued padding (a zero value contributes sign * 0 = 0 to a
+    linear sketch, so padding is inert with no mask at all).
+
+Both fill with one flat numpy scatter over the concatenated indices/values
+of the whole batch -- no per-vector Python loop -- and round ``N`` up to a
+``bucket`` multiple so repeated ingests reuse one jit cache entry.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import SparseVec
+from repro.kernels import ops
+
+
+def _flat_scatter(vecs: Sequence[SparseVec], active: np.ndarray,
+                  nnz: np.ndarray):
+    """Row/col scatter coordinates + concatenated indices/values of the
+    active vectors (the shared inner loop of both padding layouts)."""
+    counts = nnz[active]
+    idx_cat = np.concatenate([v.indices for v, a in zip(vecs, active) if a])
+    val_cat = np.concatenate([v.values for v, a in zip(vecs, active) if a])
+    rows = np.repeat(np.nonzero(active)[0], counts)
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    cols = np.arange(idx_cat.size) - np.repeat(starts, counts)
+    return rows, cols, idx_cat, val_cat, counts
+
+
+def _keys_i32(idx_cat: np.ndarray) -> np.ndarray:
+    """Fold int64 indices into the kernels' uint32 key domain (as int32)."""
+    return (idx_cat & np.int64(0xFFFFFFFF)).astype(np.uint32).astype(np.int32)
+
+
+def pad_sparse_batch(vecs: Sequence[SparseVec], *, bucket: int = 256
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pad sparse vectors into the ICWS kernel's ``[B, N]`` layout.
+
+    Returns host arrays ``(w, keys, vals, norms)``: f32 normalized squared
+    weights, int32 keys (mod 2^32, the kernel's key domain), f32 normalized
+    signed values, and f64 norms.  ``N`` is the max nnz rounded up to a
+    multiple of ``bucket`` so repeated ingests reuse the same jit cache entry.
+
+    The fill is one flat numpy scatter over the concatenated indices/values
+    of the whole batch -- no per-vector Python loop.  Norms stay per-vector
+    ``SparseVec.norm()`` calls so the normalized values are bitwise
+    identical to the host sketcher's (``np.sum`` pairwise summation).
+    """
+    B = len(vecs)
+    nnz = np.fromiter((v.nnz for v in vecs), np.int64, count=B)
+    max_nnz = int(nnz.max()) if B else 0
+    N = max(bucket, -(-max_nnz // bucket) * bucket)
+    w = np.zeros((B, N), np.float32)
+    keys = np.zeros((B, N), np.int32)
+    vals = np.zeros((B, N), np.float32)
+    norms = np.array([v.norm() for v in vecs], np.float64)
+    active = (nnz > 0) & (norms > 0.0) if B else np.zeros(0, bool)
+    if np.any(active):
+        rows, cols, idx_cat, val_cat, counts = _flat_scatter(vecs, active, nnz)
+        z32 = (val_cat / np.repeat(norms[active], counts)).astype(np.float32)
+        w[rows, cols] = z32 * z32
+        keys[rows, cols] = _keys_i32(idx_cat)
+        vals[rows, cols] = z32
+    return w, keys, vals, norms
+
+
+def pad_linear_batch(vecs: Sequence[SparseVec], *, bucket: int = 256
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad sparse vectors into the linear kernels' ``[B, N]`` layout.
+
+    Returns host arrays ``(keys, vals)``: int32 keys (mod 2^32) and f32 RAW
+    signed values (linear sketches are applied to the un-normalized vector;
+    there is no norm side-channel).  Padding lanes hold value 0, which
+    contributes nothing to any linear sketch.
+    """
+    B = len(vecs)
+    nnz = np.fromiter((v.nnz for v in vecs), np.int64, count=B)
+    max_nnz = int(nnz.max()) if B else 0
+    N = max(bucket, -(-max_nnz // bucket) * bucket)
+    keys = np.zeros((B, N), np.int32)
+    vals = np.zeros((B, N), np.float32)
+    active = nnz > 0 if B else np.zeros(0, bool)
+    if np.any(active):
+        rows, cols, idx_cat, val_cat, _ = _flat_scatter(vecs, active, nnz)
+        keys[rows, cols] = _keys_i32(idx_cat)
+        vals[rows, cols] = val_cat.astype(np.float32)
+    return keys, vals
+
+
+def sketch_batch(vecs: Sequence[SparseVec], *, m: int, seed: int = 0,
+                 bucket: int = 256):
+    """Device-sketch a batch of sparse vectors through the Pallas ICWS kernel.
+
+    Returns device arrays ``(fp [B, m] int32, val [B, m] f32, norm [B] f32)``.
+    """
+    w, keys, vals, norms = pad_sparse_batch(vecs, bucket=bucket)
+    fp, val, _ = ops.icws_sketch(jnp.asarray(w), jnp.asarray(keys),
+                                 jnp.asarray(vals), m=m, seed=seed)
+    return fp, val, jnp.asarray(norms, jnp.float32)

@@ -1,12 +1,13 @@
 """Canonical field-stacked sketch store with amortized device-side append.
 
-This is the single device-resident copy of a sketch corpus.  All F field
-corpora of a dataset-search index (F = 3 for the §1.3 fields) live in one
-set of preallocated buffers:
+This is the single device-resident copy of a sketch corpus, for ANY serving
+family (:mod:`repro.data.families`).  All F field corpora of a
+dataset-search index (F = 3 for the §1.3 fields) live in one set of
+preallocated per-component buffers ``[F, capacity, *trailing]``:
 
-    fingerprints  [F, capacity, m]  int32
-    values        [F, capacity, m]  float32
-    norms         [F, capacity]     float32
+    icws      fingerprints [F, cap, m] i32 + values [F, cap, m] f32
+              + norms [F, cap] f32
+    cs / jl   tables [F, cap, R, W] f32          (JL: R = 1, W = m)
 
 ``append`` writes new rows into the buffers with
 ``jax.lax.dynamic_update_slice`` under a jit whose buffer arguments are
@@ -16,10 +17,10 @@ double (classic amortized growth: total copy work over any append sequence
 is O(final size)).  This replaces the old chunk-list scheme whose first
 query after an append re-concatenated every row ever ingested.
 
-Unused capacity rows are *inert* under the estimate kernels: their
-fingerprints hold the corpus pad sentinel (``-2``, the same value the
-kernels pad with, which never equals a query fingerprint) and their norms
-are zero (the estimate epilogue zeroes any pair with a zero norm).  Query
+Unused capacity rows are *inert* under the family's estimate launch: each
+component fills with its family's ``ComponentSpec.fill`` -- the ICWS corpus
+pad sentinel (``-2``, which never equals a query fingerprint) with zero
+norms, or plain zeros for linear tables (a zero table dots to zero).  Query
 paths therefore run directly on the full-capacity buffers -- no exact-size
 slice of the corpus is ever materialized on the hot path -- and slice the
 *estimates* (cheap, ``O(capacity)`` per query row) down to the live row
@@ -44,6 +45,8 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.distributed.sharding import corpus_axis
 from repro.kernels.estimate import CORPUS_PAD_FP
 
+from .families import ICWSFamily
+
 
 @contextlib.contextmanager
 def _quiet_cpu_donation():
@@ -56,32 +59,38 @@ def _quiet_cpu_donation():
         yield
 
 # Corpus pad sentinel: the estimate kernels' own corpus padding fill
-# (single definition in repro.kernels.estimate), so unused capacity rows
-# never collide with any query fingerprint (queries pad with -1; live
-# fingerprints are >= 0).
+# (single definition in repro.kernels.estimate), so unused ICWS capacity
+# rows never collide with any query fingerprint (queries pad with -1; live
+# fingerprints are >= 0).  Linear families need no sentinel: their fill is
+# plain zero.
 PAD_FP = CORPUS_PAD_FP
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-def _write_rows(fpb, vb, nb, fp, val, norm, off):
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_rows(bufs, rows, off):
     zero = jnp.int32(0)
-    return (jax.lax.dynamic_update_slice(fpb, fp, (zero, off, zero)),
-            jax.lax.dynamic_update_slice(vb, val, (zero, off, zero)),
-            jax.lax.dynamic_update_slice(nb, norm, (zero, off)))
+    return tuple(
+        jax.lax.dynamic_update_slice(b, r, (zero, off) + (zero,) * (b.ndim - 2))
+        for b, r in zip(bufs, rows))
 
 
-@functools.partial(jax.jit, static_argnames=("cap",), donate_argnums=(0, 1, 2))
-def _grow_buffers(fpb, vb, nb, *, cap: int):
-    F, old, m = fpb.shape
-    ext = cap - old
-    return (jnp.concatenate([fpb, jnp.full((F, ext, m), PAD_FP, jnp.int32)],
-                            axis=1),
-            jnp.concatenate([vb, jnp.zeros((F, ext, m), jnp.float32)], axis=1),
-            jnp.concatenate([nb, jnp.zeros((F, ext), jnp.float32)], axis=1))
+@functools.partial(jax.jit, static_argnames=("cap", "fills"),
+                   donate_argnums=(0,))
+def _grow_buffers(bufs, *, cap: int, fills):
+    return tuple(
+        jnp.concatenate(
+            [b, jnp.full((b.shape[0], cap - b.shape[1]) + b.shape[2:],
+                         fill, b.dtype)], axis=1)
+        for b, fill in zip(bufs, fills))
 
 
 class CorpusStore:
-    """Growable field-stacked device store of ICWS sketch rows.
+    """Growable field-stacked device store of sketch rows.
+
+    The buffer layout, inert-row fills, and storage accounting come from a
+    :mod:`repro.data.families` ``SketchFamily``; the default (``family=None``
+    with ``m`` given) is the ICWS family, preserving the original
+    ``(fingerprints, values, norms)`` three-buffer contract bit for bit.
 
     ``fields=1`` is the generic single-corpus case (see
     :class:`repro.data.corpus.SketchCorpus`, a thin view over this class);
@@ -89,13 +98,25 @@ class CorpusStore:
     with all three §1.3 field corpora in one canonical stack.
     """
 
-    def __init__(self, m: int, fields: int = 1, min_capacity: int = 64,
-                 mesh=None, row_multiple: int = 0):
+    def __init__(self, m: "int | None" = None, fields: int = 1,
+                 min_capacity: int = 64, mesh=None, row_multiple: int = 0,
+                 family=None):
+        if family is None:
+            if m is None:
+                raise ValueError("provide a family or an ICWS sample count m")
+            family = ICWSFamily(m=int(m))
+        elif m is not None:
+            raise ValueError(
+                "m and family are mutually exclusive: the family defines its "
+                "own sketch size")
         if fields < 1:
             raise ValueError("fields must be >= 1")
         if min_capacity < 1:
             raise ValueError("min_capacity must be >= 1")
-        self.m = int(m)
+        self.family = family
+        self._specs = tuple(family.components)
+        self._fills = tuple(s.fill for s in self._specs)
+        self.m = getattr(family, "m", None)
         self.fields = int(fields)
         # a mesh with a multi-device corpus axis (see
         # repro.distributed.sharding.corpus_axis) shards the buffers over
@@ -105,12 +126,12 @@ class CorpusStore:
         self.mesh = mesh
         self.corpus_axis = corpus_axis(mesh) if mesh is not None else None
         if self.corpus_axis is not None:
-            self._buf_sharding = NamedSharding(
-                mesh, PartitionSpec(None, self.corpus_axis, None))
-            self._norm_sharding = NamedSharding(
-                mesh, PartitionSpec(None, self.corpus_axis))
+            self._shardings = tuple(
+                NamedSharding(mesh, PartitionSpec(
+                    None, self.corpus_axis, *(None,) * len(s.trailing)))
+                for s in self._specs)
         else:
-            self._buf_sharding = self._norm_sharding = None
+            self._shardings = None
         # round the capacity floor up to a multiple of row_multiple (the
         # corpus-axis size unless overridden): doubling preserves
         # divisibility, so every capacity this store ever allocates splits
@@ -121,9 +142,7 @@ class CorpusStore:
         self.row_multiple = int(row_multiple)
         self.min_capacity = (-(-int(min_capacity) // self.row_multiple)
                              * self.row_multiple)
-        self._fp = None
-        self._val = None
-        self._norm = None
+        self._bufs = None
         self._size = 0
         self._cap = 0
 
@@ -141,38 +160,43 @@ class CorpusStore:
         return self._cap
 
     # -- ingestion -----------------------------------------------------------
-    def append(self, fp, val, norm) -> None:
-        """Append sketch rows: ``fp``/``val`` ``[F, b, m]``, ``norm [F, b]``
-        (``[b, m]`` / ``[b]`` accepted when ``fields == 1``).
+    def append(self, *rows) -> None:
+        """Append sketch rows, one array per family component, each
+        ``[F, b, *trailing]`` (the leading F axis may be omitted when
+        ``fields == 1`` -- e.g. ICWS ``[b, m]`` / ``[b]``).
 
-        All three components are validated against each other up front --
-        a row-count mismatch raises here, at ingest, never at query time.
+        All components are validated against each other up front -- a
+        row-count mismatch raises here, at ingest, never at query time.
         """
-        fp = jnp.asarray(fp, jnp.int32)
-        val = jnp.asarray(val, jnp.float32)
-        norm = jnp.asarray(norm, jnp.float32)
-        if self.fields == 1 and fp.ndim == 2:
-            fp, val, norm = fp[None], val[None], norm.reshape(1, -1)
-        if fp.ndim != 3 or fp.shape[0] != self.fields or fp.shape[2] != self.m:
+        if len(rows) != len(self._specs):
             raise ValueError(
-                f"fingerprints must be [{self.fields}, b, {self.m}]; "
-                f"got {tuple(fp.shape)}")
-        if val.shape != fp.shape:
+                f"{self.family.name} rows have {len(self._specs)} components "
+                f"({', '.join(s.name for s in self._specs)}); got {len(rows)}")
+        rows = [jnp.asarray(r, s.dtype) for r, s in zip(rows, self._specs)]
+        if self.fields == 1:
+            rows = [r[None] if r.ndim == 1 + len(s.trailing) else r
+                    for r, s in zip(rows, self._specs)]
+        lead = self._specs[0]
+        if (rows[0].ndim != 2 + len(lead.trailing)
+                or rows[0].shape[0] != self.fields
+                or rows[0].shape[2:] != lead.trailing):
             raise ValueError(
-                f"value rows {tuple(val.shape)} do not match fingerprint "
-                f"rows {tuple(fp.shape)}")
-        b = int(fp.shape[1])
-        if norm.shape != (self.fields, b):
-            raise ValueError(
-                f"norm rows {tuple(norm.shape)} do not match fingerprint "
-                f"rows ({self.fields}, {b})")
+                f"{lead.name} rows must be [{self.fields}, b, "
+                f"{', '.join(map(str, lead.trailing))}]; "
+                f"got {tuple(rows[0].shape)}")
+        b = int(rows[0].shape[1])
+        for r, s in zip(rows[1:], self._specs[1:]):
+            if r.shape != (self.fields, b) + s.trailing:
+                raise ValueError(
+                    f"{s.name} rows {tuple(r.shape)} do not match "
+                    f"{lead.name} rows "
+                    f"{(self.fields, b) + s.trailing}")
         if b == 0:
             return
         self._reserve(self._size + b)
         with _quiet_cpu_donation():
-            self._fp, self._val, self._norm = _write_rows(
-                self._fp, self._val, self._norm, fp, val, norm,
-                jnp.int32(self._size))
+            self._bufs = _write_rows(self._bufs, tuple(rows),
+                                     jnp.int32(self._size))
         self._place()
         self._size += b
 
@@ -182,15 +206,15 @@ class CorpusStore:
         cap = max(self._cap, self.min_capacity)
         while cap < n:
             cap *= 2
-        if self._fp is None:
-            F, m = self.fields, self.m
-            self._fp = jnp.full((F, cap, m), PAD_FP, jnp.int32)
-            self._val = jnp.zeros((F, cap, m), jnp.float32)
-            self._norm = jnp.zeros((F, cap), jnp.float32)
+        if self._bufs is None:
+            F = self.fields
+            self._bufs = tuple(
+                jnp.full((F, cap) + s.trailing, s.fill, s.dtype)
+                for s in self._specs)
         else:
             with _quiet_cpu_donation():
-                self._fp, self._val, self._norm = _grow_buffers(
-                    self._fp, self._val, self._norm, cap=cap)
+                self._bufs = _grow_buffers(self._bufs, cap=cap,
+                                           fills=self._fills)
         self._cap = cap
         self._place()
 
@@ -200,22 +224,22 @@ class CorpusStore:
         ``device_put`` onto an array's existing sharding is a no-op, so
         this only moves data when an allocation / growth / update changed
         the placement; single-device stores skip it entirely."""
-        if self._buf_sharding is None:
+        if self._shardings is None:
             return
-        self._fp = jax.device_put(self._fp, self._buf_sharding)
-        self._val = jax.device_put(self._val, self._buf_sharding)
-        self._norm = jax.device_put(self._norm, self._norm_sharding)
+        self._bufs = tuple(jax.device_put(b, s)
+                           for b, s in zip(self._bufs, self._shardings))
 
     # -- views ---------------------------------------------------------------
-    def buffers(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """The canonical full-capacity device buffers
-        ``(fp [F, cap, m], val [F, cap, m], norm [F, cap])``.
+    def buffers(self) -> Tuple[jnp.ndarray, ...]:
+        """The canonical full-capacity device buffers, one per family
+        component: ICWS ``(fp [F, cap, m], val [F, cap, m], norm [F, cap])``,
+        linear families ``(tables [F, cap, R, W],)``.
 
         This is what query paths consume: unused capacity rows are inert
-        under the estimate kernels (pad-sentinel fingerprints, zero norms),
-        so estimates over the buffers match estimates over exact-size
-        arrays row for row -- callers slice the *estimates* to
-        ``[..., :len(store)]``, never the corpus.
+        under the family's estimate launch (pad-sentinel fingerprints and
+        zero norms, or all-zero tables), so estimates over the buffers
+        match estimates over exact-size arrays row for row -- callers slice
+        the *estimates* to ``[..., :len(store)]``, never the corpus.
 
         .. warning:: the next :meth:`append` DONATES these exact arrays
            back to XLA for the in-place update, which invalidates them on
@@ -225,24 +249,23 @@ class CorpusStore:
         """
         if self._size == 0:
             raise ValueError("empty corpus")
-        return self._fp, self._val, self._norm
+        return self._bufs
 
-    def arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """Exact-size ``(fp [F, P, m], val [F, P, m], norm [F, P])`` slices
-        (``[P, m]`` / ``[P]`` when ``fields == 1``).
+    def arrays(self) -> Tuple[jnp.ndarray, ...]:
+        """Exact-size ``[F, P, *trailing]`` component slices (the leading F
+        axis is dropped when ``fields == 1``).
 
         A transient copy when ``size < capacity`` -- intended for host-side
         cross-checks and tests; hot query paths use :meth:`buffers`.
         """
         if self._size == 0:
             raise ValueError("empty corpus")
-        fp = self._fp[:, :self._size]
-        val = self._val[:, :self._size]
-        norm = self._norm[:, :self._size]
+        out = tuple(b[:, :self._size] for b in self._bufs)
         if self.fields == 1:
-            return fp[0], val[0], norm[0]
-        return fp, val, norm
+            return tuple(o[0] for o in out)
+        return out
 
     def storage_doubles(self) -> float:
-        """Paper accounting: 1.5 doubles per sample + 1 norm, per sketch."""
-        return self._size * self.fields * (1.5 * self.m + 1.0)
+        """Paper accounting, per family (icws: 1.5 doubles per sample + 1
+        norm per sketch; linear: one double equivalent per table cell)."""
+        return self._size * self.fields * self.family.storage_doubles_per_row()

@@ -2,15 +2,22 @@
 
 Kernels (each = pallas_call + explicit BlockSpec VMEM tiling):
   * icws_sketch  -- batched weighted-MinHash (ICWS) sketching
-  * countsketch  -- MXU-formulated CountSketch (gradient compression)
-  * estimate     -- fused Algorithm-5 estimator partials
+  * countsketch  -- MXU-formulated CountSketch (dense gradients + padded
+                    sparse batches for the CS serving family)
+  * jl_sketch    -- MXU-formulated JL/AMS projection of padded sparse batches
+  * estimate     -- fused Algorithm-5 estimator partials + per-rep MXU dot
+                    estimation for the linear families
 
 ``ops`` holds the jit'd wrappers; ``ref`` the oracles used for validation.
 """
 from . import ops, ref
-from .countsketch import countsketch_pallas
-from .estimate import estimate_one_vs_many_pallas, estimate_partials_pallas
+from .countsketch import countsketch_pallas, countsketch_sparse_pallas
+from .estimate import (estimate_one_vs_many_pallas, estimate_partials_pallas,
+                       linear_estimate_fields_pallas)
 from .icws_sketch import icws_sketch_pallas
+from .jl_sketch import jl_sketch_pallas
 
 __all__ = ["ops", "ref", "icws_sketch_pallas", "countsketch_pallas",
-           "estimate_partials_pallas", "estimate_one_vs_many_pallas"]
+           "countsketch_sparse_pallas", "jl_sketch_pallas",
+           "estimate_partials_pallas", "estimate_one_vs_many_pallas",
+           "linear_estimate_fields_pallas"]

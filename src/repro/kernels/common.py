@@ -15,6 +15,14 @@ _M1 = 0x85EBCA6B
 _M2 = 0xC2B2AE35
 _GOLDEN = 0x9E3779B9
 
+# u32 salt streams for the linear-sketch kernels (one per independent hash
+# draw; the ICWS kernel's streams 1-5/9 stay literals next to its math).
+# The host twins in repro.core.linear mirror these values -- keep in sync,
+# exactly as repro.core.u32 mirrors the mixers above.
+CS_BUCKET_STREAM = 21
+CS_SIGN_STREAM = 22
+JL_SIGN_STREAM = 31
+
 
 def mix32(x: jnp.ndarray) -> jnp.ndarray:
     """Murmur3 fmix32: high-quality 32-bit mixer (bijective)."""

@@ -1,11 +1,21 @@
-"""Pallas TPU kernel: CountSketch of a dense vector (gradient compression).
+"""Pallas TPU kernels: CountSketch of dense vectors and padded sparse batches.
 
-Formulated MXU-style: instead of a scatter (which TPUs hate), each
-``(rep, t_tile, w_tile)`` grid step builds the one-hot bucket-membership tile
-``eq [BT, BW]`` with an iota compare and contracts it against the signed
-values with a ``[1, BT] @ [BT, BW]`` matmul -- turning the scatter into dense
-MXU work.  The table accumulates across the (sequential, innermost) t
-dimension.
+Formulated MXU-style: instead of a scatter (which TPUs hate), each grid step
+builds the one-hot bucket-membership tile ``eq [BT, BW]`` with an iota
+compare and contracts it against the signed values with a ``[1, BT] @
+[BT, BW]`` matmul -- turning the scatter into dense MXU work.  The table
+accumulates across the (sequential, innermost) non-zero dimension.
+
+Two entry points share that formulation:
+
+  * :func:`countsketch_pallas` -- dense vector (gradient compression);
+    buckets/signs are hashed from the element's *position*.
+  * :func:`countsketch_sparse_pallas` -- a ``[B, N]`` padded sparse batch
+    (corpus/query ingest for the CS serving family); buckets/signs are
+    hashed from the element's *key*, with the same salt streams, so a
+    sparse vector sketched by key equals the dense kernel's sketch of its
+    densification.  Zero-valued padding lanes contribute sign * 0 = 0 --
+    padding is inert with no sentinel machinery.
 
 VMEM per step: ``BT`` values + ``BT x BW`` one-hot (f32) ~= 0.5 MiB at
 BT=1024, BW=128.  BW=128 matches the lane width; BT=1024 keeps the matmul
@@ -19,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import hash_u32, salt_for
+from .common import (CS_BUCKET_STREAM, CS_SIGN_STREAM, hash_u32, salt_for)
 
 
 def _cs_kernel(x_ref, out_ref, *, width: int, seed: int, bt: int, bw: int,
@@ -32,9 +42,9 @@ def _cs_kernel(x_ref, out_ref, *, width: int, seed: int, bt: int, bw: int,
     idx = (jnp.uint32(offset) + (t_idx * bt + jax.lax.iota(jnp.int32, bt))
            .astype(jnp.uint32))
     r = r_idx * jnp.ones((), jnp.int32)
-    hb = hash_u32(idx, salt_for(seed, 21, r))
+    hb = hash_u32(idx, salt_for(seed, CS_BUCKET_STREAM, r))
     bucket = (hb % jnp.uint32(width)).astype(jnp.int32)       # [BT]
-    hs = hash_u32(idx, salt_for(seed, 22, r))
+    hs = hash_u32(idx, salt_for(seed, CS_SIGN_STREAM, r))
     sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0).astype(jnp.float32)
 
     w0 = w_idx * bw
@@ -76,3 +86,66 @@ def countsketch_pallas(x, *, width: int, reps: int = 5, seed: int = 0,
         interpret=interpret,
     )(x)
     return table[:, :width]
+
+
+def _cs_sparse_kernel(key_ref, val_ref, out_ref, *, width: int, seed: int,
+                      bw: int):
+    r_idx = pl.program_id(1)
+    w_idx = pl.program_id(2)
+    n_idx = pl.program_id(3)
+
+    keys = key_ref[0, :].astype(jnp.uint32)                   # [BN]
+    vals = val_ref[0, :]                                      # [BN]
+    r = r_idx * jnp.ones((), jnp.int32)
+    hb = hash_u32(keys, salt_for(seed, CS_BUCKET_STREAM, r))
+    bucket = (hb % jnp.uint32(width)).astype(jnp.int32)       # [BN]
+    hs = hash_u32(keys, salt_for(seed, CS_SIGN_STREAM, r))
+    sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0).astype(jnp.float32)
+
+    lanes = w_idx * bw + jax.lax.iota(jnp.int32, bw)          # [BW]
+    eq = (bucket[:, None] == lanes[None, :]).astype(jnp.float32)  # [BN, BW]
+    contrib = (sign * vals.astype(jnp.float32))[None, :]      # [1, BN]
+    tile = jnp.dot(contrib, eq, preferred_element_type=jnp.float32)[0]  # [BW]
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[0, 0, :] = tile
+
+    @pl.when(n_idx != 0)
+    def _acc():
+        out_ref[0, 0, :] = out_ref[0, 0, :] + tile
+
+
+@functools.partial(jax.jit, static_argnames=("width", "reps", "seed",
+                                             "bn", "bw", "interpret"))
+def countsketch_sparse_pallas(keys, vals, *, width: int, reps: int = 5,
+                              seed: int = 0, bn: int = 256, bw: int = 128,
+                              interpret: bool = True):
+    """CountSketch tables [B, reps, width] of a padded sparse batch.
+
+    Args: keys [B, N] int32 vector indices (mod 2^32, the kernel key
+    domain); vals [B, N] f32 signed values, 0 marking padding.  Matches
+    :func:`repro.kernels.ref.countsketch_sparse_ref` and the host
+    :class:`repro.core.linear.CountSketchU32` contract.
+    """
+    B, N = keys.shape
+    n_pad = (-N) % bn
+    if n_pad:
+        keys = jnp.pad(keys, ((0, 0), (0, n_pad)))
+        vals = jnp.pad(vals, ((0, 0), (0, n_pad)))    # zero values: inert
+    w_padded = width + ((-width) % bw)
+    grid = (B, reps, w_padded // bw, (N + n_pad) // bn)
+    kernel = functools.partial(_cs_sparse_kernel, width=width, seed=seed,
+                               bw=bw)
+    table = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda b, r, wi, ni: (b, ni)),
+            pl.BlockSpec((1, bn), lambda b, r, wi, ni: (b, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bw), lambda b, r, wi, ni: (b, r, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, reps, w_padded), jnp.float32),
+        interpret=interpret,
+    )(keys.astype(jnp.int32), vals.astype(jnp.float32))
+    return table[:, :, :width]

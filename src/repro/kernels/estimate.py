@@ -299,3 +299,99 @@ def estimate_fields_pallas(fq, vq, fpc, vc, *, qmap, cmap, bq: int = 8,
     )(fq.astype(jnp.int32), vq.astype(jnp.float32),
       fpc.astype(jnp.int32), vc.astype(jnp.float32))
     return cnt[:, :Q, :P], sw[:, :Q, :P]
+
+
+# ---------------------------------------------------------------------------
+# Linear-family estimation: per-rep sketch dots as MXU matmuls
+# ---------------------------------------------------------------------------
+def _linear_fields_kernel(tq_ref, tc_ref, out_ref):
+    w_idx = pl.program_id(3)
+    a = tq_ref[0, :, 0, :]                                    # [BQ, BW]
+    b = tc_ref[0, :, 0, :]                                    # [BP, BW]
+    tile = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # [BQ, BP]
+
+    @pl.when(w_idx == 0)
+    def _init():
+        out_ref[0, 0, :, :] = tile
+
+    @pl.when(w_idx != 0)
+    def _acc():
+        out_ref[0, 0, :, :] = out_ref[0, 0, :, :] + tile
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap", "bq", "bp", "bw",
+                                             "interpret"))
+def linear_estimate_fields_pallas(tq, tc, *, qmap, cmap, bq: int = 8,
+                                  bp: int = 128, bw: int = 128,
+                                  interpret: bool = True):
+    """Fused multi-field per-rep linear-sketch dots in ONE kernel launch;
+    matches :func:`repro.kernels.ref.linear_estimate_fields_ref`.
+
+    Args:
+      tq: [F, Q, R, W] per-field query tables (JL: R = 1, W = m).
+      tc: [C, P, R, W] per-field corpus tables.
+      qmap/cmap: static same-length tuples of field indices, exactly as
+        :func:`estimate_fields_pallas`.
+    Returns [G, R, Q, P] f32 per-rep inner products: each ``[BQ, BW] @
+    [BW, BP]`` tile is MXU work, accumulated over the (innermost) W grid
+    dimension.  The (pair, rep) axes fold into the leading grid dimension
+    the same way the ICWS fields kernel folds its pair list, so all G * R
+    dot matrices of a dataset-search batch run as a single launch.  The
+    median-of-reps (CS) / squeeze (JL) epilogue belongs to the caller.
+
+    Zero padding is inert everywhere: padded W lanes add 0 to every dot,
+    and padded Q/P rows only produce extra output rows that are sliced off
+    -- per-(q, p) results are bitwise independent of Q, P, and row padding.
+    """
+    qmap = tuple(int(i) for i in qmap)
+    cmap = tuple(int(i) for i in cmap)
+    if len(qmap) != len(cmap):
+        raise ValueError("qmap/cmap length mismatch")
+    if not qmap:
+        raise ValueError("qmap/cmap must name at least one field pair")
+    G = len(qmap)
+    F, Q, R, W = tq.shape
+    C, P, Rc, Wc = tc.shape
+    if (R, W) != (Rc, Wc):
+        raise ValueError(f"query tables {(R, W)} do not match corpus "
+                         f"tables {(Rc, Wc)}")
+    if min(qmap) < 0 or max(qmap) >= F or min(cmap) < 0 or max(cmap) >= C:
+        raise ValueError("field map index out of range")
+    q_pad = (-Q) % bq
+    p_pad = (-P) % bp
+    w_pad = (-W) % bw
+    if q_pad or w_pad:
+        tq = jnp.pad(tq, ((0, 0), (0, q_pad), (0, 0), (0, w_pad)))
+    if p_pad or w_pad:
+        tc = jnp.pad(tc, ((0, 0), (0, p_pad), (0, 0), (0, w_pad)))
+    Qp, Pp, Wp = Q + q_pad, P + p_pad, W + w_pad
+
+    def _lut(table):
+        # static lookup via select arithmetic, as estimate_fields_pallas
+        def sel(g):
+            idx = table[0]
+            for i, v in enumerate(table[1:], start=1):
+                idx = jnp.where(g == i, v, idx)
+            return idx
+        return sel
+
+    qsel, csel = _lut(qmap), _lut(cmap)
+    # (pair g, rep r) fold into the leading grid dim: gr = g * R + r
+    grid = (G * R, Qp // bq, Pp // bp, Wp // bw)
+    out = pl.pallas_call(
+        _linear_fields_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, bw),
+                         lambda gr, q, p, wi: (qsel(gr // R), q, gr % R, wi)),
+            pl.BlockSpec((1, bp, 1, bw),
+                         lambda gr, q, p, wi: (csel(gr // R), p, gr % R, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, bp),
+                               lambda gr, q, p, wi: (gr // R, gr % R, q, p)),
+        out_shape=jax.ShapeDtypeStruct((G, R, Qp, Pp), jnp.float32),
+        interpret=interpret,
+    )(tq.astype(jnp.float32), tc.astype(jnp.float32))
+    return out[:, :, :Q, :P]

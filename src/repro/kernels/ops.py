@@ -16,11 +16,13 @@ from jax.sharding import PartitionSpec as PSpec
 from repro import compat
 
 from . import ref
-from .countsketch import countsketch_pallas
+from .countsketch import countsketch_pallas, countsketch_sparse_pallas
 from .estimate import (CORPUS_PAD_FP, estimate_fields_pallas,
                        estimate_many_vs_many_pallas,
-                       estimate_one_vs_many_pallas, estimate_partials_pallas)
+                       estimate_one_vs_many_pallas, estimate_partials_pallas,
+                       linear_estimate_fields_pallas)
 from .icws_sketch import icws_sketch_pallas
+from .jl_sketch import jl_sketch_pallas
 
 
 def _interpret() -> bool:
@@ -50,6 +52,19 @@ def countsketch(x, *, width: int, reps: int = 5, seed: int = 0, offset: int = 0)
 def countsketch_decode(table, indices, *, seed: int = 0):
     """Unbiased median-of-reps point query (pure jnp: gather-bound, no kernel)."""
     return ref.countsketch_decode_ref(table, indices, seed)
+
+
+def countsketch_sparse(keys, vals, *, width: int, reps: int = 5,
+                       seed: int = 0):
+    """Device CountSketch of a padded sparse batch.  [B, N] -> [B, reps, width]."""
+    return countsketch_sparse_pallas(keys, vals, width=width, reps=reps,
+                                     seed=seed, interpret=_interpret())
+
+
+def jl_sketch(keys, vals, *, m: int, seed: int = 0):
+    """Device JL projection of a padded sparse batch.  [B, N] -> [B, m]."""
+    return jl_sketch_pallas(keys, vals, m=m, seed=seed,
+                            interpret=_interpret())
 
 
 def estimate_partials(fpa, va, fpb, vb):
@@ -136,6 +151,23 @@ def icws_estimate_corpus_stacked(fq, vq, nq, fpb, vb, nb):
 def icws_estimate_many_stacked(fq, vq, nq, fpb, vb, nb):
     """Q queries vs field 0 of stacked ``[1, cap, m]`` store buffers."""
     return icws_estimate_many(fq, vq, nq, fpb[0], vb[0], nb[0])
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
+def linear_estimate_fields(tq, tc, *, qmap, cmap):
+    """Fused multi-field linear-sketch estimates: all field pairs, ONE launch.
+
+    Args: tq [F, Q, R, W] per-field query tables, tc [C, P, R, W] per-field
+    corpus tables (JL: R = 1, W = m); qmap/cmap static length-G field-pair
+    maps.  Returns [G, Q, P] f32 estimates: per-rep MXU dot products from
+    :func:`linear_estimate_fields_pallas`, then the unbiasing epilogue --
+    the median over repetitions (for R = 1 the median IS the single dot, so
+    JL and CS share this one wrapper).  Zero rows (empty sketches, spare
+    store capacity, padding) estimate to zero with no sentinel machinery.
+    """
+    dots = linear_estimate_fields_pallas(tq, tc, qmap=qmap, cmap=cmap,
+                                         interpret=_interpret())
+    return jnp.median(dots, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
@@ -240,6 +272,34 @@ def icws_estimate_fields_sharded(fq, vq, nq, fpc, vc, nc, *, qmap, cmap,
     nc = _pad_corpus_rows(nc, pad, 1)
     f = _fields_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
     return f(fq, vq, nq, fpc, vc, nc)[:, :, :cap]
+
+
+@functools.lru_cache(maxsize=None)
+def _linear_fields_sharded_fn(mesh, axis: str, qmap, cmap):
+    def body(tq, tc):
+        return linear_estimate_fields(tq, tc, qmap=qmap, cmap=cmap)
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(None, axis, None, None)),
+        out_specs=PSpec(None, None, axis))
+
+
+def linear_estimate_fields_sharded(tq, tc, *, qmap, cmap, mesh, axis="data"):
+    """Sharded :func:`linear_estimate_fields`: per-shard launches over
+    corpus rows split along mesh axis ``axis``, queries replicated.
+
+    Returns ``[G, Q, P]`` f32, bitwise identical to the single-device
+    launch: each (q, p) dot depends only on row p's table, rows pad with
+    zeros (inert for linear sketches), and the median epilogue is
+    elementwise over the rep axis inside each shard.
+    """
+    d = mesh.shape[axis]
+    cap = tc.shape[1]
+    pad = (-cap) % d
+    tc = _pad_corpus_rows(tc, pad, 1)
+    f = _linear_fields_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
+    return f(tq, tc)[:, :, :cap]
 
 
 def sharded_top_k(score, k: int, *, mesh, axis="data"):

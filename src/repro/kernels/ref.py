@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import hash_u32, salt_for, uniform01
+from .common import (CS_BUCKET_STREAM, CS_SIGN_STREAM,
+                     JL_SIGN_STREAM, hash_u32, salt_for, uniform01)
 
 BIG = 3.0e38  # python float: safe to close over in kernel bodies
 
@@ -85,13 +86,49 @@ def countsketch_ref(x, width: int, reps: int, seed: int, offset: int = 0):
     (T,) = x.shape
     idx = (jnp.arange(T, dtype=jnp.uint32) + jnp.uint32(offset))
     r = jnp.arange(reps, dtype=jnp.int32)
-    hb = hash_u32(idx[None, :], salt_for(seed, 21, r)[:, None])      # [R, T]
+    hb = hash_u32(idx[None, :], salt_for(seed, CS_BUCKET_STREAM, r)[:, None])      # [R, T]
     bucket = (hb % jnp.uint32(width)).astype(jnp.int32)
-    hs = hash_u32(idx[None, :], salt_for(seed, 22, r)[:, None])
+    hs = hash_u32(idx[None, :], salt_for(seed, CS_SIGN_STREAM, r)[:, None])
     sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0).astype(x.dtype)
     contrib = sign * x[None, :]                                      # [R, T]
     onehot = jax.nn.one_hot(bucket, width, dtype=x.dtype)            # [R, T, W]
     return jnp.einsum("rt,rtw->rw", contrib, onehot).astype(jnp.float32)
+
+
+def countsketch_sparse_ref(keys, vals, width: int, reps: int, seed: int):
+    """Reference CountSketch of a padded sparse batch.
+
+    Args:
+      keys: [B, N] int32 vector indices (kernel key domain, mod 2^32).
+      vals: [B, N] f32 signed values; 0 => padding (zero contribution, so
+        padding is inert without any sentinel).
+    Returns: [B, R, W] f32 tables.  Streams match :func:`countsketch_ref`,
+    so sketching a densified vector by position gives the same table.
+    """
+    idx = keys.astype(jnp.uint32)                                    # [B, N]
+    r = jnp.arange(reps, dtype=jnp.int32)
+    hb = hash_u32(idx[:, None, :], salt_for(seed, CS_BUCKET_STREAM, r)[None, :, None])
+    bucket = (hb % jnp.uint32(width)).astype(jnp.int32)              # [B, R, N]
+    hs = hash_u32(idx[:, None, :], salt_for(seed, CS_SIGN_STREAM, r)[None, :, None])
+    sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0).astype(jnp.float32)
+    contrib = sign * vals.astype(jnp.float32)[:, None, :]            # [B, R, N]
+    onehot = jax.nn.one_hot(bucket, width, dtype=jnp.float32)        # [B, R, N, W]
+    return jnp.einsum("brn,brnw->brw", contrib, onehot)
+
+
+def jl_sketch_ref(keys, vals, m: int, seed: int):
+    """Reference JL projection of a padded sparse batch.
+
+    Args as :func:`countsketch_sparse_ref`; returns [B, m] f32 projections
+    ``proj[t] = (1/sqrt(m)) * sum_i sign(t, key_i) * val_i`` with signs from
+    u32 stream 31 (the :class:`repro.core.linear.JLU32` contract).
+    """
+    t = jnp.arange(m, dtype=jnp.int32)
+    hs = hash_u32(keys.astype(jnp.uint32)[:, None, :],
+                  salt_for(seed, JL_SIGN_STREAM, t)[None, :, None])              # [B, m, N]
+    sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0).astype(jnp.float32)
+    proj = jnp.einsum("bmn,bn->bm", sign, vals.astype(jnp.float32))
+    return proj / jnp.sqrt(jnp.float32(m))
 
 
 def countsketch_decode_ref(table, indices, seed: int):
@@ -99,9 +136,9 @@ def countsketch_decode_ref(table, indices, seed: int):
     reps, width = table.shape
     r = jnp.arange(reps, dtype=jnp.int32)
     idx = indices.astype(jnp.uint32)
-    hb = hash_u32(idx[None, :], salt_for(seed, 21, r)[:, None])
+    hb = hash_u32(idx[None, :], salt_for(seed, CS_BUCKET_STREAM, r)[:, None])
     bucket = (hb % jnp.uint32(width)).astype(jnp.int32)
-    hs = hash_u32(idx[None, :], salt_for(seed, 22, r)[:, None])
+    hs = hash_u32(idx[None, :], salt_for(seed, CS_SIGN_STREAM, r)[:, None])
     sign = jnp.where((hs & jnp.uint32(1)) == 0, 1.0, -1.0)
     est = jnp.take_along_axis(table, bucket, axis=1) * sign          # [R, n]
     return jnp.median(est, axis=0)
@@ -165,3 +202,22 @@ def estimate_fields_ref(fq, vq, fpc, vc, *, qmap, cmap):
         cnts.append(cnt)
         sws.append(sw)
     return jnp.stack(cnts), jnp.stack(sws)
+
+
+# ---------------------------------------------------------------------------
+# Linear-family estimation: per-rep sketch dot products (MXU work on device)
+# ---------------------------------------------------------------------------
+def linear_estimate_fields_ref(tq, tc, *, qmap, cmap):
+    """Fused multi-field per-rep dot products for linear sketches.
+
+    Args:  tq [F, Q, R, W] per-field query tables; tc [C, P, R, W] per-field
+    corpus tables; qmap/cmap length-G field-index tuples (as the ICWS
+    fields kernel).  JL is the R = 1, W = m case.
+    Returns [G, R, Q, P] f32 per-rep inner products
+    ``out[g, r, q, p] = <tq[qmap[g], q, r], tc[cmap[g], p, r]>`` -- the
+    median-of-reps (CS) or squeeze (JL) epilogue happens in the ops layer.
+    """
+    return jnp.stack([
+        jnp.einsum("qrw,prw->rqp", tq[qf].astype(jnp.float32),
+                   tc[cf].astype(jnp.float32))
+        for qf, cf in zip(qmap, cmap)])

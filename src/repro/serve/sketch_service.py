@@ -58,10 +58,14 @@ class SketchSearchService:
 
     def __init__(self, m: int = 256, seed: int = 0,
                  backend: str = "device", keep_host_oracle: bool = True,
-                 mesh=None):
+                 mesh=None, family: str = "icws"):
+        # family picks the device serving sketch (icws | cs | jl), sized
+        # storage-matched from m (see repro.data.families) -- the same
+        # corpus can be served under any family for an apples-to-apples
+        # error/throughput comparison
         self.index = DatasetSearchIndex(m=m, seed=seed, backend=backend,
                                         keep_host_oracle=keep_host_oracle,
-                                        mesh=mesh)
+                                        mesh=mesh, family=family)
         self.stats = ServiceStats()
 
     # -- ingestion ----------------------------------------------------------
@@ -129,9 +133,10 @@ class SketchSearchService:
             self.stats.total_batch_ms += ms
         return results
 
-    def describe(self) -> Dict[str, float]:
+    def describe(self) -> Dict[str, object]:
         store = self.index.store
         return {
+            "family": self.index.family.name,
             "tables": float(len(self.index.tables)),
             "storage_doubles": self.index.storage_doubles(),
             "corpus_rows": float(store.size if store is not None else 0),

@@ -1,0 +1,328 @@
+"""Family-generic serving stack: CS/JL device corpora beside ICWS.
+
+Covers: the new linear sketch/estimate kernels vs their jnp oracles
+(property-tested sweeps are ``slow``; fixed-shape smokes run in the fast
+lane); storage-matched family construction; the store's inert-spare-row
+invariant head-on, for every family layout at several fill fractions;
+device CS/JL corpus estimates vs the ``core/linear.py`` u32 host oracles
+(<= 1e-5 rel on real sketches); and end-to-end batched-vs-sequential
+ranking bitwise identity for every family.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ICWS, stack_icws
+from repro.core.linear import CountSketchU32, JLU32
+from repro.data import (FAMILY_NAMES, DatasetSearchIndex, make_family,
+                        wmh_storage)
+from repro.data.store import CorpusStore
+from repro.data.synthetic import sparse_pair
+from repro.kernels import ref
+from repro.kernels.countsketch import countsketch_pallas, countsketch_sparse_pallas
+from repro.kernels.estimate import linear_estimate_fields_pallas
+from repro.kernels.jl_sketch import jl_sketch_pallas
+from repro.serve import SketchSearchService
+
+STORAGE = wmh_storage(256)
+
+
+def _families(seed=0):
+    return [make_family(name, storage=STORAGE, seed=seed)
+            for name in FAMILY_NAMES]
+
+
+def _padded_batch(rng, B, N, pad_from=None):
+    keys = rng.integers(0, 2 ** 31 - 1, (B, N)).astype(np.int32)
+    vals = rng.normal(size=(B, N)).astype(np.float32)
+    if pad_from is not None:
+        vals[:, pad_from:] = 0.0
+    return jnp.asarray(keys), jnp.asarray(vals)
+
+
+# ---------------------------------------------------------------------------
+# new kernels vs ref oracles
+# ---------------------------------------------------------------------------
+def test_cs_sparse_kernel_matches_ref_smoke():
+    rng = np.random.default_rng(0)
+    keys, vals = _padded_batch(rng, 3, 300, pad_from=250)
+    tk = countsketch_sparse_pallas(keys, vals, width=77, reps=5, seed=3,
+                                   interpret=True)
+    tr = ref.countsketch_sparse_ref(keys, vals, 77, 5, 3)
+    assert tk.shape == (3, 5, 77)
+    np.testing.assert_allclose(np.asarray(tk), np.asarray(tr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cs_sparse_kernel_matches_dense_kernel_on_positions():
+    """Sparse-by-key == dense-by-position when keys are the positions --
+    the contract that lets gradient tables and corpus tables interoperate."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=130).astype(np.float32)
+    dense = countsketch_pallas(jnp.asarray(x), width=33, reps=5, seed=1,
+                               interpret=True)
+    keys = jnp.asarray(np.arange(130, dtype=np.int32)[None, :])
+    sparse = countsketch_sparse_pallas(keys, jnp.asarray(x[None, :]),
+                                       width=33, reps=5, seed=1,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(sparse)[0])
+
+
+def test_jl_kernel_matches_ref_smoke():
+    rng = np.random.default_rng(2)
+    keys, vals = _padded_batch(rng, 3, 300, pad_from=250)
+    pk = jl_sketch_pallas(keys, vals, m=200, seed=7, interpret=True)
+    pr = ref.jl_sketch_ref(keys, vals, 200, 7)
+    assert pk.shape == (3, 200)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_linear_estimate_kernel_matches_ref_smoke():
+    rng = np.random.default_rng(3)
+    F, C, Q, P, R, W = 3, 3, 5, 9, 5, 77
+    tq = jnp.asarray(rng.normal(size=(F, Q, R, W)).astype(np.float32))
+    tc = jnp.asarray(rng.normal(size=(C, P, R, W)).astype(np.float32))
+    qmap, cmap = (0, 1, 0, 2, 0, 1), (0, 0, 1, 0, 2, 1)
+    ek = linear_estimate_fields_pallas(tq, tc, qmap=qmap, cmap=cmap,
+                                       interpret=True)
+    er = ref.linear_estimate_fields_ref(tq, tc, qmap=qmap, cmap=cmap)
+    assert ek.shape == (6, 5, 5, 9)
+    er = np.asarray(er)
+    scale = max(1.0, float(np.max(np.abs(er))))
+    np.testing.assert_allclose(np.asarray(ek), er, rtol=1e-4,
+                               atol=1e-4 * scale)
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 6), n=st.integers(1, 600), width=st.integers(1, 200),
+       reps=st.integers(1, 6), seed=st.integers(0, 2 ** 31 - 1))
+def test_cs_sparse_kernel_matches_ref(b, n, width, reps, seed):
+    rng = np.random.default_rng(seed)
+    keys, vals = _padded_batch(rng, b, n)
+    tk = countsketch_sparse_pallas(keys, vals, width=width, reps=reps,
+                                   seed=seed, interpret=True)
+    tr = np.asarray(ref.countsketch_sparse_ref(keys, vals, width, reps, seed))
+    scale = max(1.0, float(np.max(np.abs(tr))))
+    np.testing.assert_allclose(np.asarray(tk), tr, rtol=1e-4,
+                               atol=1e-4 * scale)
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 6), n=st.integers(1, 600), m=st.integers(1, 300),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_jl_kernel_matches_ref(b, n, m, seed):
+    rng = np.random.default_rng(seed)
+    keys, vals = _padded_batch(rng, b, n)
+    pk = jl_sketch_pallas(keys, vals, m=m, seed=seed, interpret=True)
+    pr = np.asarray(ref.jl_sketch_ref(keys, vals, m, seed))
+    scale = max(1.0, float(np.max(np.abs(pr))))
+    np.testing.assert_allclose(np.asarray(pk), pr, rtol=1e-4,
+                               atol=1e-4 * scale)
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_linear_estimate_kernel_matches_ref(data):
+    seed = data.draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    F = data.draw(st.integers(1, 3))
+    C = data.draw(st.integers(1, 3))
+    G = data.draw(st.integers(1, 7))
+    qmap = tuple(data.draw(st.integers(0, F - 1)) for _ in range(G))
+    cmap = tuple(data.draw(st.integers(0, C - 1)) for _ in range(G))
+    Q, P = data.draw(st.integers(1, 10)), data.draw(st.integers(1, 14))
+    R, W = data.draw(st.integers(1, 6)), data.draw(st.integers(1, 160))
+    tq = jnp.asarray(rng.normal(size=(F, Q, R, W)).astype(np.float32))
+    tc = jnp.asarray(rng.normal(size=(C, P, R, W)).astype(np.float32))
+    ek = linear_estimate_fields_pallas(tq, tc, qmap=qmap, cmap=cmap,
+                                       interpret=True)
+    er = np.asarray(ref.linear_estimate_fields_ref(tq, tc, qmap=qmap,
+                                                   cmap=cmap))
+    assert ek.shape == (G, R, Q, P)
+    scale = max(1.0, float(np.max(np.abs(er))))
+    np.testing.assert_allclose(np.asarray(ek), er, rtol=1e-4,
+                               atol=1e-4 * scale)
+
+
+# ---------------------------------------------------------------------------
+# storage-matched family construction
+# ---------------------------------------------------------------------------
+def test_host_kernel_stream_constants_in_sync():
+    """The host u32 twins must name the same salt streams as the kernels --
+    drifting either side silently breaks the CS/JL interop contract."""
+    from repro.core import linear as host
+    from repro.kernels import common as dev
+    assert (host.CS_BUCKET_STREAM, host.CS_SIGN_STREAM, host.JL_SIGN_STREAM) \
+        == (dev.CS_BUCKET_STREAM, dev.CS_SIGN_STREAM, dev.JL_SIGN_STREAM)
+
+
+def test_make_family_is_storage_matched():
+    for fam in _families():
+        # each family sizes itself within one row-granule of the budget
+        # (registry integer sizing), never above it
+        per_row = fam.storage_doubles_per_row()
+        assert per_row <= STORAGE
+        assert per_row > 0.5 * STORAGE, (fam.name, per_row, STORAGE)
+    # the icws anchor round-trips exactly: index m == family m
+    assert make_family("icws", storage=wmh_storage(256)).m == 256
+    assert make_family("icws", storage=wmh_storage(123)).m == 123
+    with pytest.raises(ValueError):
+        make_family("bogus", storage=STORAGE)
+
+
+def test_index_rejects_bad_family_combinations():
+    with pytest.raises(ValueError):
+        DatasetSearchIndex(m=64, family="bogus")
+    with pytest.raises(ValueError):
+        DatasetSearchIndex(m=64, family="cs", backend="host")
+    # the per-query backend override is guarded too: a linear-family index
+    # must never silently answer from the WMH host oracle
+    idx = DatasetSearchIndex(m=64, family="jl")
+    idx.add_table("t", np.arange(20), np.ones(20))
+    with pytest.raises(ValueError):
+        idx.query(np.arange(20), np.ones(20), backend="host")
+    with pytest.raises(ValueError):
+        idx.query_batch([(np.arange(20), np.ones(20))], backend="host")
+    # linear families never build (or pay for) host oracle sketches
+    assert not idx.keep_host_oracle
+    assert idx.tables[0].key_indicator is None
+
+
+# ---------------------------------------------------------------------------
+# inert-spare-row invariant, head-on, for every family layout
+# ---------------------------------------------------------------------------
+QMAP = (0, 1, 0, 2, 0, 1)
+CMAP = (0, 0, 1, 0, 2, 1)
+
+
+def _field_rows(fam, rng, P, F=3):
+    vecs = [sparse_pair(rng, n=400, nnz=80, overlap=0.3)[0]
+            for _ in range(F * P)]
+    comps = fam.sketch_rows(vecs)
+    return tuple(jnp.swapaxes(c.reshape((P, F) + c.shape[1:]), 0, 1)
+                 for c in comps)
+
+
+@pytest.mark.parametrize("name", FAMILY_NAMES)
+@pytest.mark.parametrize("fill", [3, 8, 13, 16])
+def test_spare_capacity_bitwise_inert_per_family(name, fill):
+    """Estimates off full-capacity buffers == estimates off exact-size
+    buffers, bitwise, at several fill fractions (3/16 .. 16/16) -- the
+    invariant that lets every family's query path skip materializing an
+    exact-size corpus copy.  Spare rows must estimate to exactly zero."""
+    fam = make_family(name, storage=wmh_storage(64), seed=5)
+    rng = np.random.default_rng(100 + fill)
+    rows = _field_rows(fam, rng, fill)
+
+    store = CorpusStore(family=fam, fields=3, min_capacity=16)
+    store.append(*rows)
+    assert store.capacity == 16 and len(store) == fill
+
+    # an exact-size store: min_capacity == fill, so capacity == rows
+    exact = CorpusStore(family=fam, fields=3, min_capacity=fill)
+    exact.append(*rows)
+    assert exact.capacity == fill
+
+    qrng = np.random.default_rng(7)
+    qcomps = _field_rows(fam, qrng, 2)
+
+    est_full = np.asarray(fam.estimate_fields(qcomps, store.buffers(),
+                                              qmap=QMAP, cmap=CMAP))
+    est_exact = np.asarray(fam.estimate_fields(qcomps, exact.buffers(),
+                                               qmap=QMAP, cmap=CMAP))
+    assert est_full.shape == (6, 2, 16)
+    assert np.all(est_full[:, :, fill:] == 0.0)         # spare rows: zero
+    np.testing.assert_array_equal(est_full[:, :, :fill], est_exact)
+
+
+# ---------------------------------------------------------------------------
+# device estimates vs the host u32 oracles (real sketches, <= 1e-5 rel)
+# ---------------------------------------------------------------------------
+def _f1(comps):
+    """Stack F=1: [B, ...] components -> [1, B, ...]."""
+    return tuple(c[None] for c in comps)
+
+
+@pytest.mark.parametrize("name", ["cs", "jl"])
+def test_linear_device_estimates_match_host_oracle(name):
+    """Device CS/JL corpus estimates == core.linear u32 host-oracle
+    estimates to 1e-5 relative, with sketches computed independently on
+    each side (host f64 numpy vs device f32 Pallas)."""
+    fam = make_family(name, storage=wmh_storage(256), seed=9)
+    oracle = fam.host_oracle()
+    rng = np.random.default_rng(11)
+    corpus = [sparse_pair(rng, n=2000, nnz=300, overlap=0.2)[0]
+              for _ in range(7)]
+    queries = [sparse_pair(rng, n=2000, nnz=300, overlap=0.2)[0]
+               for _ in range(4)]
+
+    dev = np.asarray(fam.estimate_fields(
+        _f1(fam.sketch_rows(queries)), _f1(fam.sketch_rows(corpus)),
+        qmap=(0,), cmap=(0,))[0], np.float64)           # [Q, P]
+    host = np.array([[oracle.estimate(oracle.sketch(q), oracle.sketch(c))
+                      for c in corpus] for q in queries])
+    scale = float(np.max(np.abs(host)))
+    assert scale > 0
+    np.testing.assert_allclose(dev, host, rtol=1e-5, atol=1e-5 * scale)
+
+
+def test_icws_device_estimates_match_host_oracle():
+    """The ICWS family keeps its host-oracle contract: the host estimator
+    over device-produced sketches equals the device launch to 1e-5 rel
+    (sketch-level host/device interop is pinned by test_icws_contract)."""
+    fam = make_family("icws", storage=wmh_storage(256), seed=9)
+    oracle = fam.host_oracle()
+    rng = np.random.default_rng(13)
+    corpus = [sparse_pair(rng, n=2000, nnz=300, overlap=0.2)[0]
+              for _ in range(6)]
+    queries = [sparse_pair(rng, n=2000, nnz=300, overlap=0.2)[0]
+               for _ in range(3)]
+    qc = fam.sketch_rows(queries)
+    cc = fam.sketch_rows(corpus)
+    dev = np.asarray(fam.estimate_fields(_f1(qc), _f1(cc),
+                                         qmap=(0,), cmap=(0,))[0], np.float64)
+
+    from repro.core.icws import StackedICWS
+    fq, vq, nq = (np.asarray(a) for a in qc)
+    fc, vc, nc = (np.asarray(a) for a in cc)
+    host = np.stack([
+        oracle.estimate_batch(
+            StackedICWS(np.repeat(fq[i:i + 1], len(corpus), axis=0),
+                        np.repeat(vq[i:i + 1].astype(np.float64), len(corpus),
+                                  axis=0),
+                        np.full(len(corpus), float(nq[i]))),
+            StackedICWS(fc, vc.astype(np.float64), nc.astype(np.float64)))
+        for i in range(len(queries))])
+    scale = float(np.max(np.abs(host)))
+    np.testing.assert_allclose(dev, host, rtol=1e-5, atol=1e-5 * scale)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: every family serves batched == sequential, bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+def test_service_batched_equals_sequential_per_family(family):
+    rng = np.random.default_rng(17)
+    svc = SketchSearchService(m=256, seed=2, family=family,
+                              keep_host_oracle=False)
+    keys = np.arange(400)
+    signal = rng.normal(size=400)
+    svc.ingest("a_corr", keys, signal + 0.1 * rng.normal(size=400))
+    svc.ingest("b_noise", keys, rng.normal(size=400))
+    svc.ingest("c_disjoint", np.arange(9000, 9400), rng.normal(size=400))
+    svc.ingest("d_half", np.arange(200, 600), rng.normal(size=400))
+    queries = [(keys, signal + 0.05 * rng.normal(size=400))
+               for _ in range(5)] + [(np.arange(30), rng.normal(size=30))]
+    # micro_batch=4 forces a padded tail batch (6 = 4 + 2 padded to 4)
+    batch = svc.search_batch(queries, top_k=3, min_join=10, micro_batch=4)
+    seq = [svc.search(k, v, top_k=3, min_join=10) for k, v in queries]
+    assert batch == seq          # SearchResult dataclass equality: all stats
+    assert svc.describe()["family"] == family
+    # the winning table must be found by every family on this easy corpus
+    assert batch[0] and batch[0][0].name == "a_corr"

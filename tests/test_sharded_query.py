@@ -112,6 +112,21 @@ _SCRIPT = textwrap.dedent("""
         a.query_batch(qs, top_k=4, min_join=20)
     d = svc.describe()
     assert d["corpus_rows"] == 5.0 and d["corpus_capacity"] >= 5.0
+
+    # -- linear serving families: sharded == single-device, bitwise, and
+    #    the sharded store's dense table buffers spread over the mesh
+    for fam in ("cs", "jl"):
+        def buildf(m=None):
+            idx = DatasetSearchIndex(m=128, seed=1, mesh=m,
+                                     keep_host_oracle=False, family=fam)
+            for nm, k, v in tables:
+                idx.add_table(nm, k, v)
+            return idx
+        fa, fb = buildf(), buildf(mesh)
+        assert (fa.query_batch(qs, top_k=4, min_join=20)
+                == fb.query_batch(qs, top_k=4, min_join=20)), fam
+        (tb,) = fb.store.buffers()
+        assert len(tb.sharding.device_set) == 2, (fam, tb.sharding)
     print("SHARDED_OK")
 """)
 
