@@ -16,11 +16,13 @@ it, and then re-serve the same query *sharded*: corpus rows split over a
 2-device ``data`` mesh axis (forced host devices below), per-shard top-k +
 global merge, rankings bitwise identical to the single-device path.
 
-``--family {icws,cs,jl,all}`` picks the serving sketch family: the same
-lake is sketched into a CountSketch / JL corpus (dense device tables, MXU
-estimate matmuls, storage-matched to the ICWS budget) instead of ICWS
-fingerprints; ``all`` serves the identical query under every family side
-by side -- the paper's comparison, live on the serving path.
+``--family {icws,cs,jl,ts,ps,all}`` picks the serving sketch family: the
+same lake is sketched into a CountSketch / JL corpus (dense device tables,
+MXU estimate matmuls), or a Threshold / Priority Sampling corpus (fixed-
+slot coordinate samples, key-match estimate kernel), all storage-matched
+to the ICWS budget; ``all`` serves the identical query under every family
+side by side -- the paper's comparison plus its strongest competitor
+(Daliri et al., arXiv:2309.16157), live on the serving path.
 
 Run:  PYTHONPATH=src python examples/dataset_search.py [--family all]
 """
@@ -87,9 +89,9 @@ def family_comparison(tables, days, ridership, families):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--family", default="icws",
-                    choices=("icws", "cs", "jl", "all"),
+                    choices=("icws", "cs", "jl", "ts", "ps", "all"),
                     help="serving sketch family; 'all' serves the same "
-                         "corpus under icws, cs, and jl side by side")
+                         "corpus under every family side by side")
     args = ap.parse_args()
     rng = np.random.default_rng(0)
     days = np.arange(0, 730)                     # two years of dates
@@ -100,8 +102,9 @@ def main():
     tables = lake_tables(rng, days, rain)
     if args.family != "icws":
         # the same corpus served under other sketch families (or all of
-        # them): the paper's comparison live on the device serving path
-        families = (("icws", "cs", "jl") if args.family == "all"
+        # them): the paper's comparison live on the device serving path,
+        # now including the sampling sketches (ts/ps, arXiv:2309.16157)
+        families = (("icws", "cs", "jl", "ts", "ps") if args.family == "all"
                     else (args.family,))
         family_comparison(tables, days, ridership, families)
         return

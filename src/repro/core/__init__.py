@@ -16,6 +16,8 @@ from .minhash import MinHash, MHSketch, stack_mh
 from .kmv import KMV, KMVSketch
 from .linear import (CountSketch, CountSketchU32, CSSketch, JL, JLSketch,
                      JLU32)
+from .sampling import (PrioritySamplingU32, SampleSketch,
+                       ThresholdSamplingU32)
 from .icws import ICWS, ICWSSketch, stack_icws
 from .registry import FACTORIES, PAPER_METHODS, make
 
@@ -29,6 +31,7 @@ __all__ = [
     "sketch_bruteforce",
     "stack_wmh", "MinHash", "MHSketch", "stack_mh", "KMV", "KMVSketch",
     "CountSketch", "CountSketchU32", "CSSketch", "JL", "JLSketch", "JLU32",
+    "ThresholdSamplingU32", "PrioritySamplingU32", "SampleSketch",
     "ICWS", "ICWSSketch",
     "stack_icws", "FACTORIES", "PAPER_METHODS", "make",
 ]

@@ -11,6 +11,7 @@ Every method exposes: ``make(storage_doubles, seed) -> sketcher`` whose
   kmv   : 1.5 per sample                         -> k = storage / 1.5
   wmh   : 1.5 per sample + 1 (norm)              -> m = (storage - 1) / 1.5
   icws  : 1.5 per sample + 1 (norm)              -> m = (storage - 1) / 1.5
+  ts/ps : 1 per slot (i32 key + f32 val) + 1 (tau) -> slots = storage - 1
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ from .icws import ICWS
 from .kmv import KMV
 from .linear import REPS, CountSketch, JL
 from .minhash import MinHash
+from .sampling import PrioritySamplingU32, ThresholdSamplingU32
 from .wmh import DEFAULT_L, WeightedMinHash
 
 
@@ -47,6 +49,14 @@ def make_icws(storage: float, seed: int = 0):
     return ICWS(m=max(1, int((storage - 1) / 1.5)), seed=seed)
 
 
+def make_ts(storage: float, seed: int = 0):
+    return ThresholdSamplingU32(slots=max(1, int(storage - 1)), seed=seed)
+
+
+def make_ps(storage: float, seed: int = 0):
+    return PrioritySamplingU32(slots=max(1, int(storage - 1)), seed=seed)
+
+
 FACTORIES: Dict[str, Callable] = {
     "jl": make_jl,
     "cs": make_cs,
@@ -54,6 +64,8 @@ FACTORIES: Dict[str, Callable] = {
     "kmv": make_kmv,
     "wmh": make_wmh,
     "icws": make_icws,
+    "ts": make_ts,
+    "ps": make_ps,
 }
 
 PAPER_METHODS = ("jl", "cs", "mh", "kmv", "wmh")  # the five in the paper's plots

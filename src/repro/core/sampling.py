@@ -1,0 +1,248 @@
+"""Sampling sketches for inner products: Threshold and Priority Sampling.
+
+The strongest known competitor to weighted MinWise hashing on sparse data
+(Daliri, Freire, Musco, Santos -- *Sampling Methods for Inner Product
+Sketching*, arXiv:2309.16157): instead of hashing colliding samples, keep an
+explicit weighted sample of the vector's coordinates and reweight matches by
+inverse inclusion probability.  Both schemes share one *coordinated* uniform
+hash ``h(key) in (0, 1)`` (u32 stream ``SAMPLE_HASH_STREAM``, the same
+mixing RNG as the Pallas kernels -- :mod:`repro.core.u32` twins
+:mod:`repro.kernels.common`), so two independently built sketches sample the
+same coordinates consistently and the intersection of their key sets is a
+valid importance sample of the joint support:
+
+  * **Threshold Sampling** keeps every coordinate with
+    ``h(i) < p_i = min(1, target * v_i^2 / ||v||^2)`` -- expected sample
+    size ``<= target``, exactly unbiased estimates.
+  * **Priority Sampling** ranks coordinates by ``R_i = h(i) / v_i^2`` and
+    keeps the ``slots`` smallest -- a *fixed*-size sample, with the
+    (slots+1)-st rank acting as the data-dependent threshold.
+
+Both serialize to the same fixed-slot device layout (the contract of
+:mod:`repro.kernels.sample_estimate`):
+
+    ``(key [slots] i32, val [slots] f32, tau [] f32)``
+
+with inclusion probabilities reconstructed as ``p = min(1, slots * v^2 /
+tau)`` (``tau <= 0`` means "kept with probability 1").  The stored ``tau``
+absorbs each scheme's parameters -- TS stores ``||v||^2 * slots / target``,
+PS stores ``slots / R_(slots+1)`` -- so the estimate engine never needs to
+know which scheme built a row, and TS and PS corpora are served by one
+kernel.  Keys live in the 31-bit non-negative domain (raw indices folded by
+``& 0x7FFFFFFF``, duplicates aggregated), exactly as ICWS fingerprints keep
+31 bits, so the kernels' negative pad sentinels never collide with a live
+key.
+
+The estimator, for sketches of ``a`` and ``b`` with shared hash:
+
+    ``est = sum_{i in S_a ^ S_b} a_i * b_i / min(1, p_a(i), p_b(i))``
+
+which is unbiased because ``i`` lands in *both* samples iff
+``h(i) < min(p_a(i), p_b(i))``.
+
+Fixed-slot footnote: threshold samples have random size (mean <= target,
+std ~ sqrt(target)), so :func:`ts_target` backs the target off the slot
+count by two standard deviations; in the rare overflow the builder keeps
+the ``slots`` smallest ``h/p`` ranks (the entries whose inclusion was most
+forced), a truncation whose bias is O(overflow probability * dropped
+fraction) -- far below the estimator's sampling noise.  Priority samples
+never overflow by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from . import u32
+from .types import SparseVec
+
+# u32 salt stream for the coordinated sample hash h(key); host twin of the
+# identically named constant in repro.kernels.common (kept in sync the same
+# way the CS/JL streams are -- this package stays numpy-only).
+SAMPLE_HASH_STREAM = 41
+
+# Live keys occupy the 31-bit non-negative domain; the estimate kernel's
+# negative pad sentinels (query -1, corpus/spare -2) can never collide.
+SAMPLE_KEY_MASK = 0x7FFFFFFF
+
+
+def ts_target(slots: int) -> int:
+    """Default Threshold-Sampling target for a ``slots``-slot layout.
+
+    Sample size concentrates around the target with std <= sqrt(target);
+    two standard deviations of slack make overflow (and its truncation
+    fallback) a ~2% tail event with only the least-forced entries dropped.
+    """
+    return max(1, int(slots) - int(np.ceil(2.0 * np.sqrt(max(slots, 1)))))
+
+
+def _fold_aggregate(indices: np.ndarray, values: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold raw int64 indices into the 31-bit key domain and aggregate
+    duplicates (two indices that fold together ARE the same coordinate to
+    every u32-contract sketch).  Returns (sorted unique keys, summed values)
+    with exact zeros dropped -- a zero coordinate is absent by definition."""
+    k = np.asarray(indices, np.int64) & np.int64(SAMPLE_KEY_MASK)
+    v = np.asarray(values, np.float64)
+    uniq, inverse = np.unique(k, return_inverse=True)
+    agg = np.zeros(uniq.size, np.float64)
+    np.add.at(agg, inverse, v)
+    live = agg != 0.0
+    return uniq[live], agg[live]
+
+
+def _sample_hash(keys: np.ndarray, seed: int) -> np.ndarray:
+    """The coordinated uniform hash h(key) in (0, 1), as float64.
+
+    One draw per key (no per-slot stream): coordination across vectors is
+    the whole point -- matched keys were accepted/rejected by the SAME coin.
+    """
+    # length-1 salt array, not a 0-d scalar: numpy warns on (wrapping)
+    # scalar uint32 overflow inside the mixer, but not on array lanes
+    salt = u32.salt_for(seed, SAMPLE_HASH_STREAM, np.zeros(1, np.uint32))
+    return u32.uniform01(keys.astype(np.uint64).astype(np.uint32),
+                         salt).astype(np.float64)
+
+
+def threshold_sample(indices: np.ndarray, values: np.ndarray, *, slots: int,
+                     seed: int, target: "int | None" = None
+                     ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Threshold-sample one sparse vector into the fixed-slot contract.
+
+    Returns ``(keys, vals, tau)`` with ``keys`` sorted ascending (at most
+    ``slots`` of them) and ``tau`` such that ``p_i = min(1, slots * v_i^2 /
+    tau)`` reproduces the builder's inclusion probabilities.  ``target``
+    defaults to :func:`ts_target` (two-sigma overflow slack).
+    """
+    if target is None:
+        target = ts_target(slots)
+    keys, vals = _fold_aggregate(indices, values)
+    if keys.size == 0:
+        return keys.astype(np.int64), vals, 0.0
+    sq = vals * vals
+    norm2 = float(sq.sum())
+    p = np.minimum(1.0, float(target) * sq / norm2)
+    h = _sample_hash(keys, seed)
+    keep = h < p
+    if int(keep.sum()) > slots:
+        # rare by the target's slack: keep the `slots` most-forced entries
+        # (smallest h/p rank); ties broken by the sorted key order
+        rank = np.where(keep, h / p, np.inf)
+        keep = np.zeros_like(keep)
+        keep[np.argsort(rank, kind="stable")[:slots]] = True
+    tau = norm2 * float(slots) / float(target)
+    return keys[keep], vals[keep], tau
+
+
+def priority_sample(indices: np.ndarray, values: np.ndarray, *, slots: int,
+                    seed: int) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Priority-sample one sparse vector into the fixed-slot contract.
+
+    Keeps the ``slots`` smallest ranks ``R_i = h(i) / v_i^2``; ``tau =
+    slots / R_(slots+1)`` makes ``p_i = min(1, slots * v_i^2 / tau) =
+    min(1, v_i^2 * R_(slots+1))`` the conditional inclusion probability.
+    ``tau = 0`` (probability 1) when the whole support fits.
+    """
+    keys, vals = _fold_aggregate(indices, values)
+    if keys.size <= slots:
+        return keys, vals, 0.0
+    h = _sample_hash(keys, seed)
+    rank = h / (vals * vals)
+    order = np.argsort(rank, kind="stable")
+    tau = float(slots) / float(rank[order[slots]])
+    keep = np.sort(order[:slots])        # canonical ascending-key layout
+    return keys[keep], vals[keep], tau
+
+
+def sample_probs(vals: np.ndarray, tau: float, slots: int) -> np.ndarray:
+    """Inclusion probabilities from the stored layout (host/f64 form of the
+    kernel epilogue): ``min(1, slots * v^2 / tau)``, probability 1 when
+    ``tau <= 0``, probability 0 for empty (``v == 0``) slots."""
+    v = np.asarray(vals, np.float64)
+    if tau > 0:
+        p = np.minimum(1.0, float(slots) * v * v / float(tau))
+    else:
+        p = np.ones_like(v)
+    return np.where(v != 0.0, p, 0.0)
+
+
+@dataclasses.dataclass
+class SampleSketch:
+    """A weighted coordinate sample: up to ``slots`` (key, value) pairs plus
+    the probability scale ``tau`` (see module docstring for the contract)."""
+
+    keys: np.ndarray      # int64 ascending, 31-bit domain
+    values: np.ndarray    # float64 raw values
+    tau: float            # p = min(1, slots * v^2 / tau); tau <= 0 => 1
+    slots: int            # the fixed layout size the probabilities scale to
+
+    def storage_doubles(self) -> float:
+        """Fixed-layout accounting: a key (i32) + value (f32) pair per slot
+        is one 64-bit double equivalent, plus one double for tau."""
+        return float(self.slots) + 1.0
+
+
+class _SamplingU32:
+    """Shared host plumbing of the two sampling sketchers."""
+
+    def __init__(self, slots: int, seed: int = 0):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.slots = int(slots)
+        self.seed = int(seed)
+
+    def _select(self, indices, values):
+        raise NotImplementedError
+
+    def sketch(self, v: SparseVec) -> SampleSketch:
+        keys, vals, tau = self._select(v.indices, v.values)
+        return SampleSketch(keys=keys, values=vals, tau=tau, slots=self.slots)
+
+    def sketch_dense(self, a: np.ndarray) -> SampleSketch:
+        return self.sketch(SparseVec.from_dense(a))
+
+    def estimate(self, sa: SampleSketch, sb: SampleSketch) -> float:
+        """Inverse-inclusion-probability estimate of <a, b> from the matched
+        keys: ``sum va * vb / min(pa, pb)`` -- the coordinated hash makes
+        ``min(pa, pb)`` the exact probability a key lands in both samples."""
+        common, ia, ib = np.intersect1d(sa.keys, sb.keys, return_indices=True)
+        if common.size == 0:
+            return 0.0
+        va, vb = sa.values[ia], sb.values[ib]
+        pa = sample_probs(va, sa.tau, self.slots)
+        pb = sample_probs(vb, sb.tau, self.slots)
+        p = np.minimum(pa, pb)
+        return float(np.sum(va * vb / np.where(p > 0, p, 1.0) * (p > 0)))
+
+
+class ThresholdSamplingU32(_SamplingU32):
+    """Threshold Sampling host oracle (u32 kernel hash contract).
+
+    Variable-size-in-expectation sampling bounded to the fixed ``slots``
+    layout via the two-sigma target slack (see :func:`ts_target`); pass
+    ``target`` to override.
+    """
+
+    name = "ts"
+
+    def __init__(self, slots: int, seed: int = 0,
+                 target: "int | None" = None):
+        super().__init__(slots, seed)
+        self.target = ts_target(self.slots) if target is None else int(target)
+
+    def _select(self, indices, values):
+        return threshold_sample(indices, values, slots=self.slots,
+                                seed=self.seed, target=self.target)
+
+
+class PrioritySamplingU32(_SamplingU32):
+    """Priority Sampling host oracle (u32 kernel hash contract): exactly
+    ``min(nnz, slots)`` samples, threshold rank folded into ``tau``."""
+
+    name = "ps"
+
+    def _select(self, indices, values):
+        return priority_sample(indices, values, slots=self.slots,
+                               seed=self.seed)

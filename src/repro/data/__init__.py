@@ -4,8 +4,9 @@ paper's §1.3 application)."""
 from .corpus import SketchCorpus, pad_sparse_batch, sketch_batch
 from .dataset_search import DatasetSearchIndex, SearchResult, TableSketch
 from .families import (FAMILY_NAMES, ComponentSpec, CSFamily, ICWSFamily,
-                       JLFamily, make_family, wmh_storage)
-from .ingest import pad_linear_batch
+                       JLFamily, PSFamily, TSFamily, make_family,
+                       wmh_storage)
+from .ingest import pad_linear_batch, pad_sample_batch
 from .pipeline import TokenPipeline
 from .store import CorpusStore
 from .synthetic import (kurtosis, sparse_pair, tfidf_corpus, token_stream,
@@ -13,8 +14,8 @@ from .synthetic import (kurtosis, sparse_pair, tfidf_corpus, token_stream,
 
 __all__ = ["DatasetSearchIndex", "SearchResult", "TableSketch",
            "CorpusStore", "SketchCorpus", "sketch_batch", "pad_sparse_batch",
-           "pad_linear_batch",
+           "pad_linear_batch", "pad_sample_batch",
            "FAMILY_NAMES", "ComponentSpec", "ICWSFamily", "CSFamily",
-           "JLFamily", "make_family", "wmh_storage",
+           "JLFamily", "TSFamily", "PSFamily", "make_family", "wmh_storage",
            "TokenPipeline", "sparse_pair", "worldbank_like_pair", "kurtosis",
            "tfidf_corpus", "token_stream"]

@@ -130,8 +130,8 @@ class DatasetSearchIndex:
                 f"unknown sketch family {family!r}; choose from {FAMILY_NAMES}")
         if family != "icws" and backend == "host":
             raise ValueError(
-                "backend='host' is the WMH/ICWS oracle path; linear families "
-                "(cs, jl) serve on the device path only")
+                "backend='host' is the WMH/ICWS oracle path; the other "
+                "families (cs, jl, ts, ps) serve on the device path only")
         self.m = m
         self.seed = seed
         self.key_space = key_space
@@ -324,7 +324,7 @@ class DatasetSearchIndex:
 
     def _query_host(self, keys, values, top_k: int, min_join: float
                     ) -> List[SearchResult]:
-        # guard per-query backend overrides too: a linear-family index must
+        # guard per-query backend overrides too: a non-ICWS index must
         # never silently answer from the WMH oracle instead of its own
         # sketch method (the constructor enforces the same rule up front)
         if self.family.name != "icws":

@@ -34,7 +34,11 @@ engine need to know about one sketch method:
 
 ``DatasetSearchIndex(family="cs")`` / ``SketchSearchService(family="jl")``
 thread one of these through the whole stack; ``family="icws"`` reproduces
-the original ICWS path bit for bit.
+the original ICWS path bit for bit.  The sampling families (``"ts"`` /
+``"ps"``, arXiv:2309.16157) add a third estimator geometry: fixed-slot
+coordinate samples matched by *key equality* rather than slot position,
+served by the key-match contraction kernel in
+:mod:`repro.kernels.sample_estimate`.
 """
 from __future__ import annotations
 
@@ -46,11 +50,12 @@ import jax.numpy as jnp
 from repro.core import registry
 from repro.core.icws import ICWS
 from repro.core.linear import REPS, CountSketchU32, JLU32
+from repro.core.sampling import PrioritySamplingU32, ThresholdSamplingU32
 from repro.core.types import SparseVec
 from repro.kernels import ops
 from repro.kernels.estimate import CORPUS_PAD_FP
 
-from .ingest import pad_linear_batch, sketch_batch
+from .ingest import pad_linear_batch, pad_sample_batch, sketch_batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,7 +199,85 @@ class JLFamily(_LinearFamily):
         return JLU32(m=self.m, seed=self.seed)
 
 
-FAMILY_NAMES = ("icws", "cs", "jl")
+class _SamplingFamily:
+    """Shared serving plumbing of the sampling families (TS/PS).
+
+    Rows are fixed-slot coordinate samples ``(key [slots] i32, val [slots]
+    f32, tau [] f32)`` -- see :mod:`repro.core.sampling` for the contract.
+    Estimation is the unaligned key-match contraction
+    (:mod:`repro.kernels.sample_estimate`): slots are matched by key
+    equality, not position, and matches are reweighted by inverse inclusion
+    probability.  Inert spare rows are corpus-pad-sentinel keys with zero
+    values and zero tau (probability 0 on every slot), so they estimate to
+    exactly zero with the same guard that excludes slot padding.
+
+    Sketch *building* is host-side (:func:`repro.data.ingest.
+    pad_sample_batch`): weighted sampling is per-vector select/top-k work,
+    not a kernel-shaped reduction -- the device owns storage + estimation.
+    """
+
+    slots: int
+    seed: int
+
+    @property
+    def components(self) -> Tuple[ComponentSpec, ...]:
+        return (ComponentSpec("keys", (self.slots,), jnp.int32,
+                              CORPUS_PAD_FP),
+                ComponentSpec("values", (self.slots,), jnp.float32, 0.0),
+                ComponentSpec("taus", (), jnp.float32, 0.0))
+
+    def storage_doubles_per_row(self) -> float:
+        """A key (i32) + value (f32) pair per slot is one 64-bit double
+        equivalent, plus one double for the probability scale tau."""
+        return float(self.slots) + 1.0
+
+    def sketch_rows(self, vecs: Sequence[SparseVec], *, bucket: int = 256):
+        """Host-build B sample rows (``bucket`` is a padded-batch knob of
+        the kernel-ingest families; sampling rows are fixed-slot already)."""
+        del bucket
+        k, v, t = pad_sample_batch(vecs, slots=self.slots, method=self.name,
+                                   seed=self.seed)
+        return jnp.asarray(k), jnp.asarray(v), jnp.asarray(t)
+
+    def estimate_fields(self, q, c, *, qmap, cmap):
+        kq, vq, tq = q
+        kc, vc, tc = c
+        return ops.sample_estimate_fields(kq, vq, tq, kc, vc, tc,
+                                          qmap=qmap, cmap=cmap)
+
+    def estimate_fields_sharded(self, q, c, *, qmap, cmap, mesh, axis):
+        kq, vq, tq = q
+        kc, vc, tc = c
+        return ops.sample_estimate_fields_sharded(kq, vq, tq, kc, vc, tc,
+                                                  qmap=qmap, cmap=cmap,
+                                                  mesh=mesh, axis=axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class TSFamily(_SamplingFamily):
+    """Threshold Sampling serving family (expected-size-bounded sample)."""
+
+    slots: int
+    seed: int = 0
+    name: str = dataclasses.field(default="ts", init=False)
+
+    def host_oracle(self) -> ThresholdSamplingU32:
+        return ThresholdSamplingU32(slots=self.slots, seed=self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class PSFamily(_SamplingFamily):
+    """Priority Sampling serving family (exactly-full fixed-size sample)."""
+
+    slots: int
+    seed: int = 0
+    name: str = dataclasses.field(default="ps", init=False)
+
+    def host_oracle(self) -> PrioritySamplingU32:
+        return PrioritySamplingU32(slots=self.slots, seed=self.seed)
+
+
+FAMILY_NAMES = ("icws", "cs", "jl", "ts", "ps")
 
 
 def make_family(name: str, *, storage: float, seed: int = 0):
@@ -203,8 +286,9 @@ def make_family(name: str, *, storage: float, seed: int = 0):
     ``storage`` is the paper's x-axis -- total 64-bit-double equivalents
     per sketch -- and the per-method sizing is delegated to
     :mod:`repro.core.registry` (icws: ``m = (storage - 1) / 1.5``; cs:
-    ``width = storage / reps``; jl: ``m = storage``), so families built
-    from one budget are storage-matched and comparisons are fair.
+    ``width = storage / reps``; jl: ``m = storage``; ts/ps:
+    ``slots = storage - 1``), so families built from one budget are
+    storage-matched and comparisons are fair.
     """
     if name == "icws":
         return ICWSFamily(m=registry.make_icws(storage).m, seed=seed)
@@ -213,6 +297,10 @@ def make_family(name: str, *, storage: float, seed: int = 0):
         return CSFamily(width=host.width, reps=host.reps, seed=seed)
     if name == "jl":
         return JLFamily(m=registry.make_jl(storage).m, seed=seed)
+    if name == "ts":
+        return TSFamily(slots=registry.make_ts(storage).slots, seed=seed)
+    if name == "ps":
+        return PSFamily(slots=registry.make_ps(storage).slots, seed=seed)
     raise ValueError(
         f"unknown sketch family {name!r}; choose from {FAMILY_NAMES}")
 

@@ -13,6 +13,12 @@ conventions exist, one per sketch-family class:
 Both fill with one flat numpy scatter over the concatenated indices/values
 of the whole batch -- no per-vector Python loop -- and round ``N`` up to a
 ``bucket`` multiple so repeated ingests reuse one jit cache entry.
+
+The sampling families (TS/PS) ingest differently: :func:`pad_sample_batch`
+*builds the sketch itself* on the host (weighted sampling is a per-vector
+select/top-k, not a kernel-shaped reduction) and emits finished fixed-slot
+sample rows ``(key [B, slots], val [B, slots], tau [B])`` that the
+key-match estimate kernel consumes directly.
 """
 from __future__ import annotations
 
@@ -21,8 +27,10 @@ from typing import Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sampling import priority_sample, threshold_sample
 from repro.core.types import SparseVec
 from repro.kernels import ops
+from repro.kernels.sample_estimate import SAMPLE_QUERY_PAD_KEY
 
 
 def _flat_scatter(vecs: Sequence[SparseVec], active: np.ndarray,
@@ -96,6 +104,52 @@ def pad_linear_batch(vecs: Sequence[SparseVec], *, bucket: int = 256
         keys[rows, cols] = _keys_i32(idx_cat)
         vals[rows, cols] = val_cat.astype(np.float32)
     return keys, vals
+
+
+def pad_sample_batch(vecs: Sequence[SparseVec], *, slots: int,
+                     method: str = "ts", seed: int = 0,
+                     target: "int | None" = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build fixed-slot sampling-sketch rows for a batch of sparse vectors.
+
+    Returns host arrays ``(keys [B, slots] i32, vals [B, slots] f32,
+    tau [B] f32)`` in the :mod:`repro.kernels.sample_estimate` layout:
+    live (key, value) pairs ascending-key in the leading slots, empty slots
+    filled with the query-pad sentinel (-1) and value 0 (probability 0
+    under the kernel's epilogue, hence inert), and ``tau`` the per-row
+    probability scale.  ``method`` picks the scheme (``"ts"`` threshold /
+    ``"ps"`` priority); the row contents are byte-identical to what the
+    :mod:`repro.core.sampling` host oracles store, so host-oracle estimates
+    and device key-match estimates agree on the same vectors.
+
+    Unlike the ICWS/linear pads this is not a scatter into a kernel input
+    -- the sampling *is* the sketch, and it is selection-bound host work
+    (per-vector hash + sort/top-k), not a device reduction.
+    """
+    if method == "ts":
+        def select(v):
+            return threshold_sample(v.indices, v.values, slots=slots,
+                                    seed=seed, target=target)
+    elif method == "ps":
+        if target is not None:
+            raise ValueError("target is a threshold-sampling knob")
+
+        def select(v):
+            return priority_sample(v.indices, v.values, slots=slots,
+                                   seed=seed)
+    else:
+        raise ValueError(f"unknown sampling method {method!r}; "
+                         "choose 'ts' or 'ps'")
+    B = len(vecs)
+    keys = np.full((B, slots), SAMPLE_QUERY_PAD_KEY, np.int32)
+    vals = np.zeros((B, slots), np.float32)
+    taus = np.zeros(B, np.float32)
+    for b, v in enumerate(vecs):
+        k, vv, tau = select(v)
+        keys[b, :k.size] = k.astype(np.int32)
+        vals[b, :k.size] = vv.astype(np.float32)
+        taus[b] = tau
+    return keys, vals, taus
 
 
 def sketch_batch(vecs: Sequence[SparseVec], *, m: int, seed: int = 0,

@@ -22,6 +22,9 @@ _GOLDEN = 0x9E3779B9
 CS_BUCKET_STREAM = 21
 CS_SIGN_STREAM = 22
 JL_SIGN_STREAM = 31
+# coordinated sample hash h(key) of the TS/PS sampling sketches (one draw
+# per key, shared across vectors -- repro.core.sampling mirrors this)
+SAMPLE_HASH_STREAM = 41
 
 
 def mix32(x: jnp.ndarray) -> jnp.ndarray:

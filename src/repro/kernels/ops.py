@@ -23,6 +23,8 @@ from .estimate import (CORPUS_PAD_FP, estimate_fields_pallas,
                        linear_estimate_fields_pallas)
 from .icws_sketch import icws_sketch_pallas
 from .jl_sketch import jl_sketch_pallas
+from .sample_estimate import (sample_estimate_fields_pallas,
+                              sample_inclusion_probs)
 
 
 def _interpret() -> bool:
@@ -190,6 +192,24 @@ def icws_estimate_fields(fq, vq, nq, fpc, vc, nc, *, qmap, cmap):
     return jnp.where((nqg == 0) | (ncg == 0), 0.0, est)
 
 
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
+def sample_estimate_fields(kq, vq, tq, kc, vc, tc, *, qmap, cmap):
+    """Fused multi-field sampling-sketch (TS/PS) estimates, ONE launch.
+
+    Args: kq/vq [F, Q, m] per-field query sample keys/values, tq [F, Q]
+    probability scales; kc/vc [C, P, m] / tc [C, P] corpus samples;
+    qmap/cmap static length-G field-pair maps.  Returns [G, Q, P] f32
+    inverse-inclusion-probability estimates from the key-match kernel --
+    the probabilities ``min(1, m * v^2 / tau)`` are reconstructed here
+    (elementwise prologue) so the stored layout stays (key, val, tau).
+    """
+    aq = sample_inclusion_probs(vq, tq)
+    ac = sample_inclusion_probs(vc, tc)
+    return sample_estimate_fields_pallas(kq, vq, aq, kc, vc, ac,
+                                         qmap=qmap, cmap=cmap,
+                                         interpret=_interpret())
+
+
 # ---------------------------------------------------------------------------
 # sharded query execution: corpus rows spread over a mesh axis
 # ---------------------------------------------------------------------------
@@ -300,6 +320,39 @@ def linear_estimate_fields_sharded(tq, tc, *, qmap, cmap, mesh, axis="data"):
     tc = _pad_corpus_rows(tc, pad, 1)
     f = _linear_fields_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
     return f(tq, tc)[:, :, :cap]
+
+
+@functools.lru_cache(maxsize=None)
+def _sample_fields_sharded_fn(mesh, axis: str, qmap, cmap):
+    def body(kq, vq, tq, kc, vc, tc):
+        return sample_estimate_fields(kq, vq, tq, kc, vc, tc,
+                                      qmap=qmap, cmap=cmap)
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(), PSpec(),
+                  PSpec(None, axis), PSpec(None, axis), PSpec(None, axis)),
+        out_specs=PSpec(None, None, axis))
+
+
+def sample_estimate_fields_sharded(kq, vq, tq, kc, vc, tc, *, qmap, cmap,
+                                   mesh, axis="data"):
+    """Sharded :func:`sample_estimate_fields`: the fused key-match launch
+    runs per shard over corpus rows split along mesh axis ``axis``, queries
+    replicated.  Returns ``[G, Q, P]`` f32, bitwise identical to the
+    single-device launch: each (q, p) estimate reduces only over row p's
+    slot blocks, rows pad with corpus-pad-sentinel keys / zero values /
+    zero tau (inert under the kernel's guards), and the (bt, bu) block
+    reduction order is independent of the per-shard row count.
+    """
+    d = mesh.shape[axis]
+    cap = kc.shape[1]
+    pad = (-cap) % d
+    kc = _pad_corpus_rows(kc, pad, 1, CORPUS_PAD_FP)
+    vc = _pad_corpus_rows(vc, pad, 1)
+    tc = _pad_corpus_rows(tc, pad, 1)
+    f = _sample_fields_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
+    return f(kq, vq, tq, kc, vc, tc)[:, :, :cap]
 
 
 def sharded_top_k(score, k: int, *, mesh, axis="data"):

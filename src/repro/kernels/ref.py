@@ -205,6 +205,32 @@ def estimate_fields_ref(fq, vq, fpc, vc, *, qmap, cmap):
 
 
 # ---------------------------------------------------------------------------
+# Sampling-family estimation: unaligned key-match contraction (TS/PS)
+# ---------------------------------------------------------------------------
+def sample_estimate_fields_ref(kq, vq, aq, kc, vc, ac, *, qmap, cmap):
+    """Fused multi-field key-match estimates for sampling sketches.
+
+    Args:  kq/vq/aq [F, Q, m] per-field query sample keys / values /
+    inclusion probabilities (:func:`repro.kernels.sample_estimate.
+    sample_inclusion_probs`); kc/vc/ac [C, P, m] per-field corpus samples;
+    qmap/cmap length-G field-index tuples (as the ICWS fields kernel).
+    Returns [G, Q, P] f32 estimates.  The oracle may materialize the
+    [Q, P, m, m] key-equality cross; the kernel must not.
+    """
+    outs = []
+    for qf, cf in zip(qmap, cmap):
+        kqb, kcb = kq[qf][:, None, :, None], kc[cf][None, :, None, :]
+        p = jnp.minimum(aq[qf][:, None, :, None], ac[cf][None, :, None, :])
+        live = (kqb == kcb) & (kqb >= 0) & (p > 0)
+        term = jnp.where(
+            live,
+            vq[qf][:, None, :, None] * vc[cf][None, :, None, :]
+            / jnp.where(live, p, 1.0), 0.0)
+        outs.append(term.sum(axis=(2, 3)))
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
 # Linear-family estimation: per-rep sketch dot products (MXU work on device)
 # ---------------------------------------------------------------------------
 def linear_estimate_fields_ref(tq, tc, *, qmap, cmap):

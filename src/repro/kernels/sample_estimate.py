@@ -1,0 +1,191 @@
+"""Pallas TPU kernel: key-match estimation for sampling sketches (TS/PS).
+
+The sampling families (:mod:`repro.core.sampling`) store fixed-slot rows
+
+    ``(key [m] i32, val [m] f32, tau [] f32)``
+
+where the keys of a row are an importance *sample* of the vector's support.
+Unlike ICWS rows, slots are NOT aligned: query slot t and corpus slot u
+refer to the same coordinate iff their keys are equal, wherever they sit.
+The estimate for a (query, corpus-row) pair is therefore a full key-equality
+contraction over the ``m x m`` slot pairs,
+
+    ``est[q, p] = sum_{t,u} 1[kq[q,t] == kc[p,u]] * vq[q,t] * vc[p,u]
+                            / min(pq[q,t], pc[p,u])``
+
+with inverse-inclusion-probability weights ``p = min(1, m * v^2 / tau)``
+(``tau <= 0`` means probability 1; see the ops-layer epilogue
+:func:`sample_inclusion_probs`).  This is a third estimator geometry for
+the kernel layer: not slot-aligned collision counting (ICWS), not dense
+MXU dots (CS/JL), but an unaligned sparse join expressed as a blockwise
+``[bq*bt x bp*bu]`` equality contraction.
+
+``sample_estimate_fields_pallas`` is the fused multi-field form, mirroring
+:func:`repro.kernels.estimate.estimate_fields_pallas`: per-field stacks
+``[F, Q, m]`` / ``[C, P, m]`` plus static qmap/cmap field-pair tuples folded
+into the leading grid dimension, so all §1.3 field-pair estimates of a
+dataset-search batch run as ONE launch.  The grid is
+``(G, Q/bq, P/bp, m/bt, m/bu)`` with both *sample* axes tiled and innermost:
+the double sum decomposes over (t, u) blocks, so each output block
+accumulates across the two inner grid dims exactly as the ICWS kernels
+accumulate over m.  VMEM per step is dominated by the ``[bq, bt, bp, bu]``
+cross tensor -- 2 MiB f32 at the defaults (8, 64, 8, 128), comfortably
+inside the ~16 MiB budget with its where/min temporaries.
+
+Padding reuses the single estimate-kernel sentinel convention
+(:mod:`repro.kernels.estimate`): live keys are 31-bit non-negative, query
+padding is -1 (also the empty-slot fill of ingested rows), corpus padding
+and inert spare store rows are -2, and the ``kq >= 0`` guard keeps all of
+them out of the estimate.  Probability 0 marks empty slots (value 0), so
+spare rows (zero values, zero tau) estimate to exactly 0.0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .estimate import CORPUS_PAD_FP, QUERY_PAD_FP
+
+# Sampling rows reuse the estimate kernels' pad convention: empty / padded
+# query slots hold -1, corpus padding and spare store rows hold -2.
+SAMPLE_QUERY_PAD_KEY = QUERY_PAD_FP
+SAMPLE_CORPUS_PAD_KEY = CORPUS_PAD_FP
+
+
+def sample_inclusion_probs(vals: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot inclusion probabilities from the stored sample layout.
+
+    Args: vals ``[..., m]`` f32 sampled values (0 marks an empty slot);
+    tau ``[...]`` f32 probability scales.  Returns ``[..., m]`` f32
+    ``min(1, m * v^2 / tau)`` with ``tau <= 0`` meaning probability 1 and
+    empty slots pinned to probability 0 (the kernel's live-slot guard).
+    The f64 host twin is :func:`repro.core.sampling.sample_probs`.
+    """
+    m = vals.shape[-1]
+    v = vals.astype(jnp.float32)
+    t = tau.astype(jnp.float32)[..., None]
+    num = jnp.float32(m) * v * v
+    p = jnp.where(t > 0, jnp.minimum(1.0, num / jnp.where(t > 0, t, 1.0)),
+                  1.0)
+    return jnp.where(v != 0, p, 0.0)
+
+
+def _sample_fields_kernel(kq_ref, vq_ref, aq_ref, kc_ref, vc_ref, ac_ref,
+                          out_ref):
+    t_idx = pl.program_id(3)
+    u_idx = pl.program_id(4)
+
+    kq = kq_ref[0][:, :, None, None]          # [bq, bt, 1, 1]
+    vq = vq_ref[0][:, :, None, None]
+    aq = aq_ref[0][:, :, None, None]
+    kc = kc_ref[0][None, None, :, :]          # [1, 1, bp, bu]
+    vc = vc_ref[0][None, None, :, :]
+    ac = ac_ref[0][None, None, :, :]
+
+    # unaligned key match: the [bq, bt, bp, bu] cross tensor lives only in
+    # VMEM for this block; `kq >= 0` guards every pad sentinel and `p > 0`
+    # guards empty slots (either side), so pads never divide or match
+    p = jnp.minimum(aq, ac)
+    live = (kq == kc) & (kq >= 0) & (p > 0)
+    term = jnp.where(live, vq * vc / jnp.where(live, p, 1.0), 0.0)
+    tile = term.sum(axis=(1, 3))              # [bq, bp]
+
+    @pl.when((t_idx == 0) & (u_idx == 0))
+    def _init():
+        out_ref[0, :, :] = tile
+
+    @pl.when((t_idx != 0) | (u_idx != 0))
+    def _acc():
+        out_ref[0, :, :] = out_ref[0, :, :] + tile
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap", "bq", "bp",
+                                             "bt", "bu", "interpret"))
+def sample_estimate_fields_pallas(kq, vq, aq, kc, vc, ac, *, qmap, cmap,
+                                  bq: int = 8, bp: int = 8, bt: int = 64,
+                                  bu: int = 128, interpret: bool = True):
+    """Fused multi-field key-match estimates in ONE kernel launch; matches
+    :func:`repro.kernels.ref.sample_estimate_fields_ref`.
+
+    Args:
+      kq/vq/aq: [F, Q, m] per-field query sample keys / values / inclusion
+        probabilities (see :func:`sample_inclusion_probs`).
+      kc/vc/ac: [C, P, m] per-field corpus samples.
+      qmap/cmap: static same-length tuples of field indices, exactly as
+        :func:`repro.kernels.estimate.estimate_fields_pallas`.
+    Returns [G, Q, P] f32 inner-product estimates (no epilogue: the inverse-
+    probability weighting happens inside the contraction).
+
+    Per-(q, p) results are bitwise independent of Q/P row padding and of
+    the corpus row count: each output element reduces only over its own
+    rows' (t, u) slot blocks, in a fixed (bt, bu) grid order.
+    """
+    qmap = tuple(int(i) for i in qmap)
+    cmap = tuple(int(i) for i in cmap)
+    if len(qmap) != len(cmap):
+        raise ValueError("qmap/cmap length mismatch")
+    if not qmap:
+        raise ValueError("qmap/cmap must name at least one field pair")
+    G = len(qmap)
+    F, Q, m = kq.shape
+    C, P, mc = kc.shape
+    if m != mc:
+        raise ValueError(f"query slots {m} do not match corpus slots {mc}")
+    if min(qmap) < 0 or max(qmap) >= F or min(cmap) < 0 or max(cmap) >= C:
+        raise ValueError("field map index out of range")
+    q_pad = (-Q) % bq
+    p_pad = (-P) % bp
+    t_pad = (-m) % bt
+    u_pad = (-m) % bu
+    if q_pad or t_pad:
+        kq = jnp.pad(kq, ((0, 0), (0, q_pad), (0, t_pad)),
+                     constant_values=SAMPLE_QUERY_PAD_KEY)
+        vq = jnp.pad(vq, ((0, 0), (0, q_pad), (0, t_pad)))
+        aq = jnp.pad(aq, ((0, 0), (0, q_pad), (0, t_pad)))
+    if p_pad or u_pad:
+        kc = jnp.pad(kc, ((0, 0), (0, p_pad), (0, u_pad)),
+                     constant_values=SAMPLE_CORPUS_PAD_KEY)
+        vc = jnp.pad(vc, ((0, 0), (0, p_pad), (0, u_pad)))
+        ac = jnp.pad(ac, ((0, 0), (0, p_pad), (0, u_pad)))
+    Qp, mt = kq.shape[1:]
+    Pp, mu = kc.shape[1:]
+
+    def _lut(table):
+        # static python-int lookup via select arithmetic, exactly as
+        # estimate_fields_pallas: index maps may not capture traced values
+        def sel(g):
+            idx = table[0]
+            for i, v in enumerate(table[1:], start=1):
+                idx = jnp.where(g == i, v, idx)
+            return idx
+        return sel
+
+    qsel, csel = _lut(qmap), _lut(cmap)
+    grid = (G, Qp // bq, Pp // bp, mt // bt, mu // bu)
+    out = pl.pallas_call(
+        _sample_fields_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, bt),
+                         lambda g, q, p, t, u: (qsel(g), q, t)),
+            pl.BlockSpec((1, bq, bt),
+                         lambda g, q, p, t, u: (qsel(g), q, t)),
+            pl.BlockSpec((1, bq, bt),
+                         lambda g, q, p, t, u: (qsel(g), q, t)),
+            pl.BlockSpec((1, bp, bu),
+                         lambda g, q, p, t, u: (csel(g), p, u)),
+            pl.BlockSpec((1, bp, bu),
+                         lambda g, q, p, t, u: (csel(g), p, u)),
+            pl.BlockSpec((1, bp, bu),
+                         lambda g, q, p, t, u: (csel(g), p, u)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, bp),
+                               lambda g, q, p, t, u: (g, q, p)),
+        out_shape=jax.ShapeDtypeStruct((G, Qp, Pp), jnp.float32),
+        interpret=interpret,
+    )(kq.astype(jnp.int32), vq.astype(jnp.float32), aq.astype(jnp.float32),
+      kc.astype(jnp.int32), vc.astype(jnp.float32), ac.astype(jnp.float32))
+    return out[:, :Q, :P]

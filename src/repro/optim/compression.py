@@ -27,8 +27,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.kernels import ref as kref
-from repro.kernels.countsketch import countsketch_pallas
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,16 +43,33 @@ class CompressionConfig:
 
 
 def compress(flat_grad: jnp.ndarray, cfg: CompressionConfig) -> jnp.ndarray:
-    """[T] -> [reps, width] CountSketch table."""
+    """[T] -> [reps, width] CountSketch table.
+
+    The table follows the u32 kernel contract
+    (:class:`repro.core.linear.CountSketchU32` is the host oracle, sharing
+    the bucket/sign streams), so a compressed gradient is the same sketch a
+    served CountSketch corpus row carries and can be estimated against one
+    directly.  ``use_kernel=True`` routes through :func:`repro.kernels.ops.
+    countsketch` -- compiled Pallas on TPU, interpreter elsewhere; the
+    backend dispatch lives in the ops layer, not a hardcoded flag here --
+    while ``False`` keeps the pure-jnp reference path.
+    """
     if cfg.use_kernel:
-        return countsketch_pallas(flat_grad, width=cfg.width, reps=cfg.reps,
-                                  seed=cfg.seed, interpret=True)
+        return ops.countsketch(flat_grad, width=cfg.width, reps=cfg.reps,
+                               seed=cfg.seed)
     return kref.countsketch_ref(flat_grad, width=cfg.width, reps=cfg.reps,
                                 seed=cfg.seed)
 
 
 def decompress(table: jnp.ndarray, n: int, cfg: CompressionConfig) -> jnp.ndarray:
-    """[reps, width] -> [n] median-of-reps estimates."""
+    """[reps, width] -> [n] median-of-reps estimates.
+
+    ``use_kernel`` picks the ops-layer decode (today a gather-bound jnp
+    path on every backend -- there is no decode kernel to dispatch to)
+    versus the reference decode, mirroring :func:`compress`.
+    """
+    if cfg.use_kernel:
+        return ops.countsketch_decode(table, jnp.arange(n), seed=cfg.seed)
     return kref.countsketch_decode_ref(table, jnp.arange(n), cfg.seed)
 
 

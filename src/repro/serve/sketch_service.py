@@ -135,13 +135,21 @@ class SketchSearchService:
 
     def describe(self) -> Dict[str, object]:
         store = self.index.store
+        # a host-only index (backend="host") has no device store, but its
+        # corpus is just as real -- one row per ingested table per field.
+        # Report the table-derived row count rather than a misleading 0;
+        # host corpora are exact-size, so capacity == rows there.
+        rows = float(store.size if store is not None
+                     else len(self.index.tables))
+        cap = float(store.capacity if store is not None
+                    else len(self.index.tables))
         return {
             "family": self.index.family.name,
+            "backend": self.index.backend,
             "tables": float(len(self.index.tables)),
             "storage_doubles": self.index.storage_doubles(),
-            "corpus_rows": float(store.size if store is not None else 0),
-            "corpus_capacity": float(
-                store.capacity if store is not None else 0),
+            "corpus_rows": rows,
+            "corpus_capacity": cap,
             "queries_served": float(self.stats.queries_served),
             "mean_query_ms": self.stats.mean_query_ms,
             "batches_served": float(self.stats.batches_served),

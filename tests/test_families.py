@@ -155,11 +155,13 @@ def test_linear_estimate_kernel_matches_ref(data):
 # ---------------------------------------------------------------------------
 def test_host_kernel_stream_constants_in_sync():
     """The host u32 twins must name the same salt streams as the kernels --
-    drifting either side silently breaks the CS/JL interop contract."""
+    drifting either side silently breaks the CS/JL/TS/PS interop contract."""
     from repro.core import linear as host
+    from repro.core import sampling as samp
     from repro.kernels import common as dev
     assert (host.CS_BUCKET_STREAM, host.CS_SIGN_STREAM, host.JL_SIGN_STREAM) \
         == (dev.CS_BUCKET_STREAM, dev.CS_SIGN_STREAM, dev.JL_SIGN_STREAM)
+    assert samp.SAMPLE_HASH_STREAM == dev.SAMPLE_HASH_STREAM
 
 
 def test_make_family_is_storage_matched():

@@ -113,9 +113,10 @@ _SCRIPT = textwrap.dedent("""
     d = svc.describe()
     assert d["corpus_rows"] == 5.0 and d["corpus_capacity"] >= 5.0
 
-    # -- linear serving families: sharded == single-device, bitwise, and
-    #    the sharded store's dense table buffers spread over the mesh
-    for fam in ("cs", "jl"):
+    # -- linear + sampling serving families: sharded == single-device,
+    #    bitwise, and every sharded store buffer (dense tables, or sample
+    #    key/value/tau rows) spreads over the mesh
+    for fam in ("cs", "jl", "ts", "ps"):
         def buildf(m=None):
             idx = DatasetSearchIndex(m=128, seed=1, mesh=m,
                                      keep_host_oracle=False, family=fam)
@@ -125,8 +126,8 @@ _SCRIPT = textwrap.dedent("""
         fa, fb = buildf(), buildf(mesh)
         assert (fa.query_batch(qs, top_k=4, min_join=20)
                 == fb.query_batch(qs, top_k=4, min_join=20)), fam
-        (tb,) = fb.store.buffers()
-        assert len(tb.sharding.device_set) == 2, (fam, tb.sharding)
+        for tb in fb.store.buffers():
+            assert len(tb.sharding.device_set) == 2, (fam, tb.sharding)
     print("SHARDED_OK")
 """)
 

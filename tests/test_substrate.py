@@ -196,6 +196,29 @@ def test_compression_unbiased_and_ratio():
     assert compression_ratio(4096, cfg) == pytest.approx(4096 / (512 * 5))
 
 
+def test_compress_matches_countsketch_u32_oracle():
+    """Compressed gradients share the u32 contract with served CountSketch
+    corpora: compress() (both paths) equals the core.linear.CountSketchU32
+    host oracle's table of the same dense vector, so a gradient table can
+    be estimated against a CS corpus row directly."""
+    from repro.core.linear import CountSketchU32
+    rng = np.random.default_rng(7)
+    g = rng.normal(size=600).astype(np.float32)
+    oracle = CountSketchU32(width=64, seed=11).sketch_dense(
+        g.astype(np.float64))
+    for use_kernel in (False, True):
+        cfg = CompressionConfig(width=64, reps=5, seed=11,
+                                use_kernel=use_kernel)
+        tab = np.asarray(compress(jnp.asarray(g), cfg), np.float64)
+        np.testing.assert_allclose(tab, oracle.table, rtol=1e-5, atol=1e-5)
+        # decode agrees between the two paths as well
+        d0 = decompress(jnp.asarray(tab, jnp.float32), 600, cfg)
+        d1 = decompress(jnp.asarray(tab, jnp.float32), 600,
+                        CompressionConfig(width=64, reps=5, seed=11,
+                                          use_kernel=not use_kernel))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
 def test_error_feedback_converges_on_quadratic_sparse():
     """EF-compressed SGD reaches the optimum of a quadratic with a heavy-
     tailed sparse target (the regime sketch compression targets)."""
