@@ -14,10 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ICWS, inner_fast, make, stack_wmh
+from repro.core import ICWS, SparseVec, inner_fast, make, stack_wmh
 from repro.core.icws import StackedICWS
 from repro.data import FAMILY_NAMES, make_family
 from repro.data.corpus import SketchCorpus, pad_sparse_batch
+from repro.data.families import TSFamily
+from repro.data.merge import merge_stores, partition_by_key
 from repro.data.store import CorpusStore
 from repro.data.synthetic import sparse_pair
 from repro.kernels import ops
@@ -58,7 +60,7 @@ def run(fast: bool = False):
                                              interpret=True)[0].block_until_ready())
     emit("perf/kernel/icws_sketch", us / B_, f"B={B_} N={N} m={m} interpret=True")
 
-    fp, val, _ = out
+    fp, val, _, _ = out
     na = jnp.ones((B_,), jnp.float32)
     _, us = timed(lambda: ops.icws_estimate(fp, val, na, fp, val, na)
                   .block_until_ready())
@@ -75,7 +77,7 @@ def run(fast: bool = False):
     emit("perf/corpus/ingest", us / P, f"tables={P} m={mc} interpret=True")
 
     query = sparse_pair(rng, n=600, nnz=120, overlap=0.2)[0]
-    fq, vq, nq = corpus.sketch_query(query)
+    fq, vq, nq, _ = corpus.sketch_query(query)
     corpus.estimate(fq, vq, nq[0]).block_until_ready()      # warm the jit
     dev, us = timed(lambda: corpus.estimate(fq, vq, nq[0]).block_until_ready(),
                     repeat=3)
@@ -83,7 +85,7 @@ def run(fast: bool = False):
 
     # cross-check: device one-vs-many vs host ICWS estimator on *identical*
     # sketches (the host path is the oracle, and may restack freely)
-    fpc, vc, nc = (np.asarray(a) for a in corpus.arrays())
+    fpc, vc, nc = (np.asarray(a) for a in corpus.arrays()[:3])
     A = StackedICWS(fingerprints=np.repeat(np.asarray(fq), P, axis=0),
                     values=np.repeat(np.asarray(vq, np.float64), P, axis=0),
                     norm=np.full(P, float(nq[0]), np.float64))
@@ -118,10 +120,12 @@ def run(fast: bool = False):
         st = CorpusStore(m=m_s, fields=1, min_capacity=2 * prefill + 16)
         st.append(rngl.integers(0, 100, (prefill, m_s)).astype(np.int32),
                   rngl.normal(size=(prefill, m_s)).astype(np.float32),
-                  np.ones(prefill, np.float32))
+                  np.ones(prefill, np.float32),
+                  rngl.integers(0, 100, (prefill, m_s)).astype(np.int32))
         row = (rngl.integers(0, 100, (1, m_s)).astype(np.int32),
                rngl.normal(size=(1, m_s)).astype(np.float32),
-               np.ones(1, np.float32))
+               np.ones(1, np.float32),
+               rngl.integers(0, 100, (1, m_s)).astype(np.int32))
 
         def append_and_sync():
             # block on the written buffers: append dispatches async, and an
@@ -262,3 +266,140 @@ def run(fast: bool = False):
         emit(f"perf/family/qps/{name}", best / f_Q * 1e6,
              f"batched qps={f_Q / best:.2f} tables={f_tables} m={f_m} "
              f"storage-matched interpret=True")
+
+    # parallel lake build: shard-and-merge vs single-stream.  The deployment
+    # this simulates: the lake lives key-partitioned across k producer
+    # hosts (events routed to owners by folded key at write time -- the
+    # standard log/stream partition layout, paid once when the data lands,
+    # not per sketch build), each host sketches its own partition, and the
+    # shard corpora compact through the pairwise merge tree.  The per-build
+    # critical path is therefore the SLOWEST shard sketch + the merge
+    # tree; the one-pass coordinated partition (partition_by_key -- what a
+    # producer runs at routing time) is timed and reported for reference
+    # but is data layout, not per-build work.  The gate: sketching 1/k of
+    # the coordinates per worker + merging beats sketching everything in
+    # one stream, i.e. the merge tree is cheap enough that parallel builds
+    # actually pay off.
+    k_shards = 4
+    n_lake, lake_nnz = (96, 400) if fast else (4096, 8000)
+    lk_rng = np.random.default_rng(47)
+    lake_dom = 2 ** 31
+    lake_vecs = []
+    for _ in range(n_lake):
+        li = np.unique(lk_rng.integers(0, lake_dom, size=lake_nnz))
+        lake_vecs.append(SparseVec.from_pairs(
+            li, lk_rng.normal(size=li.size), lake_dom))
+    ts_fam = TSFamily(slots=64, seed=7)
+
+    def single_stream_build():
+        st = CorpusStore(family=ts_fam, fields=1)
+        st.append(*ts_fam.sketch_rows(lake_vecs))
+        return st
+
+    single_stream_build()                       # warm append jit entries
+    t0 = time.perf_counter()
+    st_single = single_stream_build()
+    t_single = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    parts = [partition_by_key(v, k_shards) for v in lake_vecs]
+    t_part = time.perf_counter() - t0
+    shard_times, shard_stores = [], []
+    for s in range(k_shards):
+        t0 = time.perf_counter()
+        sst = CorpusStore(family=ts_fam, fields=1)
+        sst.append(*ts_fam.sketch_rows([p[s] for p in parts]))
+        shard_times.append(time.perf_counter() - t0)
+        shard_stores.append(sst)
+
+    def merge_tree(stores):
+        stores = list(stores)
+        while len(stores) > 1:
+            nxt = [merge_stores(stores[i], stores[i + 1])
+                   for i in range(0, len(stores) - 1, 2)]
+            if len(stores) % 2:
+                nxt.append(stores[-1])
+            stores = nxt
+        return stores[0]
+
+    merge_tree(shard_stores)        # warm the merged-append jit entries
+    t0 = time.perf_counter()
+    st_merged = merge_tree(shard_stores)
+    t_merge = time.perf_counter() - t0
+    # union re-subsampling reproduces the single-stream sample (keys and
+    # values bitwise; taus to f32 rounding) -- the speedup is not bought
+    # with a different corpus
+    k1, v1, _ = (np.asarray(c) for c in st_single.field_arrays())
+    k2, v2, _ = (np.asarray(c) for c in st_merged.field_arrays())
+    assert np.array_equal(k1, k2) and np.array_equal(v1, v2), (
+        "sharded lake build diverged from single-stream")
+    t_parallel = max(shard_times) + t_merge
+    lake_speedup = t_single / t_parallel
+    emit("perf/lake/single_stream_s", t_single,
+         f"tables={n_lake} nnz~{lake_nnz} ts slots=64")
+    emit("perf/lake/parallel_critical_path_s", t_parallel,
+         f"max-shard {max(shard_times):.3f}s + merge-tree {t_merge:.3f}s; "
+         f"k={k_shards} (producer-side one-pass partition: {t_part:.3f}s, "
+         f"data layout, not per-build work)")
+    emit("perf/lake/parallel_build_speedup", lake_speedup,
+         f"x; single-stream / critical path, k={k_shards} "
+         f"tables={n_lake}")
+    if not fast:
+        assert lake_speedup >= 1.5, (
+            f"{k_shards}-way parallel lake build must be >= 1.5x "
+            f"single-stream at {n_lake} tables; got {lake_speedup:.2f}x")
+
+    # multi-tenant isolation: a tenant-scoped query against the shared
+    # arena vs the same query against a dedicated single-tenant service.
+    # Contiguous tenants serve off a buffer slice, so per-query cost must
+    # track the TENANT's rows, not the arena -- co-residency is close to
+    # free.
+    tn_tables, tn_Q, tn_m = (24, 4, 64) if fast else (128, 8, 128)
+    tn_rows = 100 if fast else 150
+    tn_rng = np.random.default_rng(53)
+    tk = np.arange(tn_rows)
+    tsig = tn_rng.normal(size=tn_rows)
+    tn_tabs = {
+        t: [(f"{t}{i}", tk,
+             tsig + (0.1 + 0.2 * i) * tn_rng.normal(size=tn_rows))
+            for i in range(tn_tables)]
+        for t in ("a", "b")}
+    shared_svc = SketchSearchService(m=tn_m, seed=7, keep_host_oracle=False)
+    for t, tabs in tn_tabs.items():
+        shared_svc.ingest_many(tabs, tenant=t)          # contiguous ranges
+    dedicated_svc = SketchSearchService(m=tn_m, seed=7,
+                                        keep_host_oracle=False)
+    dedicated_svc.ingest_many(tn_tabs["a"])
+    tn_queries = [(tk, tsig + 0.1 * tn_rng.normal(size=tn_rows))
+                  for _ in range(tn_Q)]
+
+    def run_shared():
+        return shared_svc.search_batch(tn_queries, top_k=3, min_join=10,
+                                       micro_batch=tn_Q, tenant="a")
+
+    def run_dedicated():
+        return dedicated_svc.search_batch(tn_queries, top_k=3, min_join=10,
+                                          micro_batch=tn_Q)
+
+    assert run_shared() == run_dedicated(), (          # warms both caches
+        "tenant-scoped arena results diverged from the dedicated store")
+    t_sh, t_de = float("inf"), float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        run_shared()
+        t_sh = min(t_sh, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_dedicated()
+        t_de = min(t_de, time.perf_counter() - t0)
+    overhead_pct = (t_sh / t_de - 1.0) * 100.0
+    emit("perf/tenant/query_shared_arena", t_sh / tn_Q * 1e6,
+         f"tenant-scoped batch query; arena rows={2 * tn_tables} "
+         f"tenant rows={tn_tables} m={tn_m}")
+    emit("perf/tenant/query_dedicated", t_de / tn_Q * 1e6,
+         f"dedicated single-tenant store, rows={tn_tables} m={tn_m}")
+    emit("perf/tenant/isolation_overhead_pct", overhead_pct,
+         "%; (shared arena / dedicated - 1) * 100, min-of-5")
+    if not fast:
+        assert overhead_pct < 5.0, (
+            f"tenant isolation overhead must stay < 5%; "
+            f"got {overhead_pct:.2f}%")

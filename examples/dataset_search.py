@@ -24,7 +24,16 @@ to the ICWS budget; ``all`` serves the identical query under every family
 side by side -- the paper's comparison plus its strongest competitor
 (Daliri et al., arXiv:2309.16157), live on the serving path.
 
+``--shards N`` rebuilds the lake via the shard-and-merge parallel build
+path (``repro.data.merge``): every table is key-partitioned into N
+disjoint shards, each shard is sketched independently -- the part a
+parallel build distributes across hosts -- and the shard corpora compact
+through a pairwise merge tree before serving.  The demo re-answers the
+query off the sharded build and compares the ranking to the single-stream
+index.
+
 Run:  PYTHONPATH=src python examples/dataset_search.py [--family all]
+                                                       [--shards 4]
 """
 import argparse
 import os
@@ -92,6 +101,10 @@ def main():
                     choices=("icws", "cs", "jl", "ts", "ps", "all"),
                     help="serving sketch family; 'all' serves the same "
                          "corpus under every family side by side")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="also build the lake via an N-way shard-and-merge "
+                         "parallel build and compare its ranking to the "
+                         "single-stream index")
     args = ap.parse_args()
     rng = np.random.default_rng(0)
     days = np.arange(0, 730)                     # two years of dates
@@ -130,6 +143,16 @@ def main():
     print("\ndevice vs host-oracle ranking:",
           [r.name for r in results] == [r.name for r in oracle] and "MATCH"
           or f"device={[r.name for r in results]} host={[r.name for r in oracle]}")
+
+    # shard-and-merge parallel lake build (repro.data.merge) ----------------
+    if args.shards >= 2:
+        shd = DatasetSearchIndex(m=384, seed=7, keep_host_oracle=False)
+        shd.add_tables_sharded(tables, shards=args.shards)
+        res_shd = shd.query(days, ridership, top_k=5, min_join=30)
+        same = [r.name for r in res_shd] == [r.name for r in results]
+        print(f"\n{args.shards}-way shard-and-merge build vs single-stream "
+              f"ranking:", same and "MATCH"
+              or f"sharded={[r.name for r in res_shd]}")
 
     # sharded serving: corpus rows split over a 2-device data axis ----------
     mesh = make_corpus_mesh()

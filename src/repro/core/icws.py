@@ -54,6 +54,10 @@ class ICWSSketch:
     fingerprints: np.ndarray  # int32 [m]: 31-bit fp of (argmin index, level); -1 empty
     values: np.ndarray        # float64 [m]: normalized signed value at argmin
     norm: float
+    # int32 [m] winning key (index mod 2^32) per sample; 0 for empty samples.
+    # Sidecar for union-merge: levels must be recomputed under the merged
+    # norm, which needs the raw key, not the hashed (key, level) fingerprint.
+    argkeys: np.ndarray = None
 
     def storage_doubles(self) -> float:
         return 1.5 * self.fingerprints.shape[0] + 1.0
@@ -83,7 +87,8 @@ class ICWS:
         norm = v.norm()
         if v.nnz == 0 or norm == 0.0:
             return ICWSSketch(fingerprints=np.full(self.m, -1, np.int32),
-                              values=np.zeros(self.m), norm=0.0)
+                              values=np.zeros(self.m), norm=0.0,
+                              argkeys=np.zeros(self.m, np.int32))
         keys_u32 = (v.indices.astype(np.int64)
                     & np.int64(0xFFFFFFFF)).astype(np.uint32)
         z = v.values / norm
@@ -104,10 +109,73 @@ class ICWS:
             keys_u32[arg] ^ (lvl_sel.astype(np.uint32) * np.uint32(0x9E3779B9)),
             u32.salt_for(self.seed, 9, rows))
         fp = (fpbits & np.uint32(0x7FFFFFFF)).astype(np.int32)
-        return ICWSSketch(fingerprints=fp, values=z[arg], norm=norm)
+        return ICWSSketch(fingerprints=fp, values=z[arg], norm=norm,
+                          argkeys=keys_u32[arg].view(np.int32))
 
     def sketch_dense(self, a: np.ndarray) -> ICWSSketch:
         return self.sketch(SparseVec.from_dense(a))
+
+    def merge(self, sa: ICWSSketch, sb: ICWSSketch) -> ICWSSketch:
+        """Union-merge oracle: sketch of ``a + b`` from the two sketches.
+
+        Requires disjoint supports (the shard-and-merge partitioning
+        contract) and the ``argkeys`` sidecar.  Per sample, the two
+        per-shard winners are re-scored under the merged normalization
+        ``norm_c = sqrt(||a||^2 + ||b||^2)``: variates (r, c, beta) are
+        redrawn from (sample, key) -- bit-identical streams on both sides
+        of the merge -- levels re-derived from the rescaled weights, and
+        the smaller ICWS hash value wins (ties broken toward the smaller
+        key, making the merge commutative).  The result is *approximate*
+        relative to sketching the union from scratch: a shard's argmin
+        under its local normalization is usually, not always, the union
+        argmin restricted to that shard.  Collision-law error stays at the
+        O(1/sqrt(m)) sketch noise scale; see the merge-algebra tests.
+        """
+        if sa.norm == 0.0:
+            return dataclasses.replace(sb)
+        if sb.norm == 0.0:
+            return dataclasses.replace(sa)
+        if sa.argkeys is None or sb.argkeys is None:
+            raise ValueError("ICWS merge needs argkeys sidecars "
+                             "(pre-argkeys sketches cannot be merged)")
+        norm_c = float(np.sqrt(sa.norm ** 2 + sb.norm ** 2))
+        t = np.arange(self.m, dtype=np.int64)
+
+        def rescore(s: ICWSSketch):
+            keys = np.asarray(s.argkeys).view(np.uint32)
+            z = np.asarray(s.values, np.float64) * (s.norm / norm_c)
+            z32 = z.astype(np.float32)
+            w = z32 * z32
+
+            def u(stream: int) -> np.ndarray:
+                return u32.uniform01(keys, u32.salt_for(self.seed, stream, t))
+
+            r = -np.log(u(1) * u(2))
+            c = -np.log(u(3) * u(4))
+            beta = u(5)
+            logw = np.log(np.maximum(w, np.float32(1e-37)))
+            lvl = np.floor(logw / r + beta)
+            y = np.exp(r * (lvl - beta))
+            a = c / (y * np.exp(r))
+            a = np.where((s.fingerprints < 0) | (w <= 0), _BIG, a)
+            return keys, z, a.astype(np.float32), lvl.astype(np.int32)
+
+        ka, za, aa, la = rescore(sa)
+        kb, zb, ab, lb = rescore(sb)
+        pick_b = (ab < aa) | ((ab == aa) & (kb < ka))
+        key_c = np.where(pick_b, kb, ka)
+        lvl_c = np.where(pick_b, lb, la)
+        val_c = np.where(pick_b, zb, za)
+        fpbits = u32.hash_u32(
+            key_c ^ (lvl_c.astype(np.uint32) * np.uint32(0x9E3779B9)),
+            u32.salt_for(self.seed, 9, t))
+        fp = (fpbits & np.uint32(0x7FFFFFFF)).astype(np.int32)
+        dead = np.minimum(aa, ab) >= _BIG
+        return ICWSSketch(
+            fingerprints=np.where(dead, -1, fp).astype(np.int32),
+            values=np.where(dead, 0.0, val_c),
+            norm=norm_c,
+            argkeys=np.where(dead, 0, key_c.view(np.int32)).astype(np.int32))
 
     def estimate(self, sa: ICWSSketch, sb: ICWSSketch) -> float:
         return float(self.estimate_batch(_stack([sa]), _stack([sb]))[0])

@@ -216,6 +216,25 @@ class _SamplingU32:
         p = np.minimum(pa, pb)
         return float(np.sum(va * vb / np.where(p > 0, p, 1.0) * (p > 0)))
 
+    def _merge_candidates(self, sa: SampleSketch, sb: SampleSketch):
+        """Validate a union-merge and return the pooled candidate slots."""
+        for s in (sa, sb):
+            if s.slots != self.slots:
+                raise ValueError(f"slot mismatch: sketch has {s.slots}, "
+                                 f"sketcher has {self.slots}")
+        if np.intersect1d(sa.keys, sb.keys).size:
+            raise ValueError("union-merge requires disjoint supports "
+                             "(shared keys found in both samples)")
+        keys = np.concatenate([sa.keys, sb.keys])
+        vals = np.concatenate([sa.values, sb.values])
+        return keys, vals
+
+    @staticmethod
+    def _packed(keys, vals, keep, tau, slots) -> SampleSketch:
+        order = np.argsort(keys[keep], kind="stable")
+        return SampleSketch(keys=keys[keep][order], values=vals[keep][order],
+                            tau=float(tau), slots=slots)
+
 
 class ThresholdSamplingU32(_SamplingU32):
     """Threshold Sampling host oracle (u32 kernel hash contract).
@@ -236,6 +255,29 @@ class ThresholdSamplingU32(_SamplingU32):
         return threshold_sample(indices, values, slots=self.slots,
                                 seed=self.seed, target=self.target)
 
+    def merge(self, sa: SampleSketch, sb: SampleSketch) -> SampleSketch:
+        """Union-merge oracle: re-subsample the pooled slots under the merged
+        threshold.  ``tau`` is ``||v||^2 * slots / target``, so for disjoint
+        supports ``tau_c = tau_a + tau_b`` IS the union's tau; inclusion
+        probabilities only shrink (``p_c <= p_a``), so filtering the pooled
+        kept slots by the same coordinated coin ``h(key) < p_c`` reproduces
+        the build-once sample exactly (modulo the rare per-shard overflow
+        truncation, which drops low-force entries a build-once pass may
+        keep)."""
+        keys, vals = self._merge_candidates(sa, sb)
+        tau = float(sa.tau) + float(sb.tau)
+        if keys.size == 0:
+            return SampleSketch(keys=keys, values=vals, tau=tau,
+                                slots=self.slots)
+        p = sample_probs(vals, tau, self.slots)
+        h = _sample_hash(keys, self.seed)
+        keep = h < p
+        if int(keep.sum()) > self.slots:
+            rank = np.where(keep, h / p, np.inf)
+            keep = np.zeros_like(keep)
+            keep[np.argsort(rank, kind="stable")[:self.slots]] = True
+        return self._packed(keys, vals, keep, tau, self.slots)
+
 
 class PrioritySamplingU32(_SamplingU32):
     """Priority Sampling host oracle (u32 kernel hash contract): exactly
@@ -246,3 +288,32 @@ class PrioritySamplingU32(_SamplingU32):
     def _select(self, indices, values):
         return priority_sample(indices, values, slots=self.slots,
                                seed=self.seed)
+
+    def merge(self, sa: SampleSketch, sb: SampleSketch) -> SampleSketch:
+        """Union-merge oracle: *exactly* the build-once priority sample.
+
+        Each side's threshold rank is recovered as ``T = slots / tau``
+        (infinite for ``tau <= 0``); the union threshold is ``T_c =
+        min(T_a, T_b, T_cand)`` with ``T_cand`` the (slots+1)-th smallest
+        rank among the pooled kept slots.  Every union coordinate with rank
+        below ``T_c`` is in the pool (a side only discarded ranks >= its own
+        T >= T_c), so keeping pooled ranks < T_c and storing ``tau_c =
+        slots / T_c`` reproduces priority-sampling the union from scratch,
+        coordinate for coordinate."""
+        keys, vals = self._merge_candidates(sa, sb)
+        t_a = np.inf if sa.tau <= 0 else float(self.slots) / float(sa.tau)
+        t_b = np.inf if sb.tau <= 0 else float(self.slots) / float(sb.tau)
+        if keys.size == 0:
+            return SampleSketch(keys=keys, values=vals, tau=0.0,
+                                slots=self.slots)
+        rank = _sample_hash(keys, self.seed) / (vals * vals)
+        t_cand = (np.sort(rank)[self.slots] if keys.size > self.slots
+                  else np.inf)
+        t_c = min(t_a, t_b, t_cand)
+        if np.isinf(t_c):
+            keep = np.ones(keys.size, bool)
+            tau = 0.0
+        else:
+            keep = rank < t_c
+            tau = float(self.slots) / t_c
+        return self._packed(keys, vals, keep, tau, self.slots)

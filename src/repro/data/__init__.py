@@ -7,6 +7,8 @@ from .families import (FAMILY_NAMES, ComponentSpec, CSFamily, ICWSFamily,
                        JLFamily, PSFamily, TSFamily, make_family,
                        wmh_storage)
 from .ingest import pad_linear_batch, pad_sample_batch
+from .merge import (build_sharded, merge_stores, partition_by_key,
+                    split_by_key)
 from .pipeline import TokenPipeline
 from .store import CorpusStore
 from .synthetic import (kurtosis, sparse_pair, tfidf_corpus, token_stream,
@@ -17,5 +19,7 @@ __all__ = ["DatasetSearchIndex", "SearchResult", "TableSketch",
            "pad_linear_batch", "pad_sample_batch",
            "FAMILY_NAMES", "ComponentSpec", "ICWSFamily", "CSFamily",
            "JLFamily", "TSFamily", "PSFamily", "make_family", "wmh_storage",
+           "build_sharded", "merge_stores", "partition_by_key",
+           "split_by_key",
            "TokenPipeline", "sparse_pair", "worldbank_like_pair", "kurtosis",
            "tfidf_corpus", "token_stream"]

@@ -7,11 +7,11 @@ once, then answers every query by estimating the query sketch against the
   * ingestion pads sparse vectors into ``[B, N]`` batches with one flat
     numpy scatter (no per-vector Python loop) and sketches them with the
     Pallas ICWS kernel (one kernel launch per batch, all fields);
-  * fingerprints / values / norms live in a single canonical
+  * fingerprints / values / norms / argkeys live in a single canonical
     :class:`repro.data.store.CorpusStore` -- preallocated capacity-doubling
     device buffers, appended in place via ``jax.lax.dynamic_update_slice``
-    (amortized O(rows appended); the old chunk-list scheme re-concatenated
-    the whole corpus on the first query after every append);
+    in amortized O(rows appended), with all component shapes validated by
+    the store at ingest;
   * queries run through the one-vs-many / many-vs-many estimate kernels
     directly on the store buffers (unused capacity rows are inert), and a
     mesh with a multi-device corpus axis shards the many-vs-many launch
@@ -71,26 +71,30 @@ class SketchCorpus:
         """Sketch ``vecs`` on device (one kernel launch) and append them."""
         if not vecs:
             return
-        fp, val, norm = sketch_batch(vecs, m=self.m, seed=self.seed,
-                                     bucket=self.bucket)
-        self.add_sketches(fp, val, norm)
+        fp, val, norm, argkey = sketch_batch(vecs, m=self.m, seed=self.seed,
+                                             bucket=self.bucket)
+        self.add_sketches(fp, val, norm, argkey)
 
-    def add_sketches(self, fp, val, norm) -> None:
-        """Append pre-computed sketch rows (``[b, m]``, ``[b]``).
+    def add_sketches(self, fp, val, norm, argkeys) -> None:
+        """Append pre-computed sketch rows (``[b, m]``, ``[b]``, ``[b, m]``).
 
         Accepts device or host arrays; host ICWS sketches interoperate
-        because both paths share the fingerprint contract.  All three
-        components are validated against each other (a mismatched ``val``
-        or ``norm`` raises here, not at query time).
+        because both paths share the fingerprint contract (``argkeys`` is
+        :attr:`repro.core.icws.ICWSSketch.argkeys`, the merge sidecar).
+        Validation -- component count, row counts, trailing shapes -- is
+        the store's: everything is passed straight to
+        :meth:`repro.data.store.CorpusStore.append`, which raises
+        ``ValueError`` at ingest, not at query time.
         """
-        fp = jnp.asarray(fp, jnp.int32).reshape(-1, self.m)
-        val = jnp.asarray(val, jnp.float32).reshape(-1, self.m)
-        norm = jnp.asarray(norm, jnp.float32).reshape(-1)
-        self._store.append(fp, val, norm)
+        self._store.append(jnp.asarray(fp, jnp.int32),
+                           jnp.asarray(val, jnp.float32),
+                           jnp.asarray(norm, jnp.float32),
+                           jnp.asarray(argkeys, jnp.int32))
 
     # -- the device-resident view -------------------------------------------
-    def arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """Exact-size ``(fp [P, m], val [P, m], norm [P])`` device slices.
+    def arrays(self) -> Tuple[jnp.ndarray, ...]:
+        """Exact-size ``(fp [P, m], val [P, m], norm [P], argkey [P, m])``
+        device slices.
 
         A transient copy of the canonical store buffers when the corpus has
         spare capacity -- use for host cross-checks; query methods run on
@@ -100,7 +104,8 @@ class SketchCorpus:
 
     # -- queries ------------------------------------------------------------
     def sketch_query(self, v: SparseVec):
-        """Sketch one query vector on device: ``(fq [1, m], vq [1, m], nq [1])``."""
+        """Sketch one query vector on device:
+        ``(fq [1, m], vq [1, m], nq [1], kq [1, m])``."""
         return sketch_batch([v], m=self.m, seed=self.seed, bucket=self.bucket)
 
     def estimate(self, fq, vq, nq) -> jnp.ndarray:
@@ -109,7 +114,7 @@ class SketchCorpus:
         The query stays ``[1, m]`` end to end; the one-vs-many kernel
         broadcasts it across the corpus grid.  Returns ``[P]`` f32.
         """
-        fpb, vb, nb = self._store.buffers()
+        fpb, vb, nb = self._store.buffers()[:3]
         est = ops.icws_estimate_corpus_stacked(
             jnp.asarray(fq, jnp.int32).reshape(1, -1),
             jnp.asarray(vq, jnp.float32).reshape(1, -1),
@@ -125,7 +130,7 @@ class SketchCorpus:
         re-read across the corpus grid dimension, so no ``[Q, P, m]``
         intermediate ever exists.  Returns ``[Q, P]`` f32.
         """
-        fpb, vb, nb = self._store.buffers()
+        fpb, vb, nb = self._store.buffers()[:3]
         fq = jnp.asarray(fq, jnp.int32).reshape(-1, self.m)
         vq = jnp.asarray(vq, jnp.float32).reshape(-1, self.m)
         nq = jnp.asarray(nq, jnp.float32).reshape(-1)
@@ -139,14 +144,14 @@ class SketchCorpus:
 
     def estimate_vec(self, v: SparseVec) -> jnp.ndarray:
         """Sketch ``v`` and estimate it against the whole corpus."""
-        fq, vq, nq = self.sketch_query(v)
+        fq, vq, nq, _ = self.sketch_query(v)
         return self.estimate(fq, vq, nq[0])
 
     def estimate_vecs(self, vecs: Sequence[SparseVec]) -> jnp.ndarray:
         """Sketch a batch of queries (one launch) and estimate all of them
         against the whole corpus (one launch).  Returns ``[Q, P]`` f32."""
-        fq, vq, nq = sketch_batch(vecs, m=self.m, seed=self.seed,
-                                  bucket=self.bucket)
+        fq, vq, nq, _ = sketch_batch(vecs, m=self.m, seed=self.seed,
+                                     bucket=self.bucket)
         return self.estimate_batch(fq, vq, nq)
 
     def storage_doubles(self) -> float:

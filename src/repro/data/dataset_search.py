@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ from repro.core.wmh import StackedWMH, WMHSketch
 from repro.kernels import ops
 
 from .families import FAMILY_NAMES, make_family, wmh_storage
+from .merge import build_sharded
 from .store import CorpusStore
 
 FIELDS = ("key_indicator", "values", "values_sq")
@@ -154,6 +155,10 @@ class DatasetSearchIndex:
         self.sketcher = WeightedMinHash(m=m, seed=seed)
         self.kmv = KMV(k=m, seed=seed)
         self.tables: List[TableSketch] = []
+        # tenant id -> global table positions, ascending; device stores keep
+        # the same assignment as row ranges (table i IS store row i), this
+        # mirror serves the host path and the per-tenant TableSketch lookup
+        self._tenant_tables: Dict[str, List[int]] = {}
         # the single device-resident copy of all three field corpora: the
         # store resolves the corpus axis, shards its buffers over it, and
         # keeps capacity divisible by the shard count
@@ -192,18 +197,63 @@ class DatasetSearchIndex:
                                    self.key_space)
         return ind, val, sq
 
-    def add_table(self, name: str, keys: np.ndarray, values: np.ndarray):
+    def add_table(self, name: str, keys: np.ndarray, values: np.ndarray,
+                  tenant: Optional[str] = None):
+        """Sketch one table into the corpus; ``tenant`` scopes it to a
+        logical corpus inside the shared arena (see :meth:`query`)."""
         ind, val, sq = self.vectorize(keys, values)
         if self.store is not None:
             # device path: one [3, N] kernel launch sketches all three
             # fields; the rows append in place into the canonical store
             comps = self.family.sketch_rows([ind, val, sq])
-            self.store.append(*(c[:, None] for c in comps))
+            self.store.append(*(c[:, None] for c in comps), tenant=tenant)
+        self._register_table(name, keys, ind, val, sq, tenant=tenant)
+
+    def add_tables_sharded(self, tables: Sequence[Tuple[str, np.ndarray,
+                                                        np.ndarray]],
+                           *, shards: int, tenant: Optional[str] = None):
+        """Ingest many tables via a ``shards``-way parallel lake build.
+
+        Every table's three field vectors are key-partitioned across the
+        shards, each shard is sketched independently (the distributable
+        part of a parallel build), and the shard corpora compact through
+        the pairwise merge tree of :func:`repro.data.merge.build_sharded`
+        before appending into this index's arena.  Per-table host-side
+        metadata (the KMV correlation sample and, when kept, the host
+        oracle sketches) is built single-stream -- the oracle path does
+        not shard.
+
+        Rankings off a sharded build match the single-stream build:
+        bitwise for the linear families, exactly for the sampling families
+        (modulo f32 tau rounding), and to within re-leveling noise for
+        ICWS (top-k sets preserved on separated lakes).
+        """
+        if self.store is None:
+            raise ValueError("sharded builds target the device corpus "
+                             "(index constructed with backend='host')")
+        tables = list(tables)
+        if not tables:
+            return
+        rows, metas = [], []
+        for name, keys, values in tables:
+            ind, val, sq = self.vectorize(keys, values)
+            rows.append((ind, val, sq))
+            metas.append((name, keys, ind, val, sq))
+        merged = build_sharded(rows, family=self.family, shards=shards)
+        self.store.append(*merged.field_arrays(), tenant=tenant)
+        for name, keys, ind, val, sq in metas:
+            self._register_table(name, keys, ind, val, sq, tenant=tenant)
+
+    def _register_table(self, name, keys, ind, val, sq,
+                        tenant: Optional[str] = None):
         host = {}
         if self.keep_host_oracle:
             host = {"key_indicator": self.sketcher.sketch(ind),
                     "values": self.sketcher.sketch(val),
                     "values_sq": self.sketcher.sketch(sq)}
+        if tenant is not None:
+            self._tenant_tables.setdefault(str(tenant), []).append(
+                len(self.tables))
         self.tables.append(TableSketch(
             name=name,
             key_indicator=host.get("key_indicator"),
@@ -212,31 +262,60 @@ class DatasetSearchIndex:
             sample=self.kmv.sketch(val),
             n_rows=len(keys)))
 
+    # -- tenancy -------------------------------------------------------------
+    def tenants(self) -> Tuple[str, ...]:
+        return tuple(self._tenant_tables)
+
+    def _tenant_table_list(self, tenant: Optional[str]) -> List[TableSketch]:
+        if tenant is None:
+            return self.tables
+        try:
+            sel = self._tenant_tables[str(tenant)]
+        except KeyError:
+            raise KeyError(f"unknown tenant {tenant!r}; "
+                           f"have {list(self._tenant_tables)}") from None
+        return [self.tables[i] for i in sel]
+
     # -- queries ------------------------------------------------------------
     def query(self, keys: np.ndarray, values: np.ndarray,
               top_k: int = 10, min_join: float = 1.0,
-              backend: Optional[str] = None) -> List[SearchResult]:
-        """Rank corpus tables by |corr| among sufficiently-joinable tables."""
+              backend: Optional[str] = None,
+              tenant: Optional[str] = None) -> List[SearchResult]:
+        """Rank corpus tables by |corr| among sufficiently-joinable tables.
+
+        ``tenant`` restricts the search to one logical corpus of the shared
+        arena: only that tenant's tables are ranked, and -- because per-row
+        estimates are independent of the surrounding arena rows -- the
+        results are bitwise what a dedicated single-tenant index over the
+        same tables would return.
+        """
         if not self.tables:
             return []
         backend = backend or self.backend
         if backend == "host":
-            return self._query_host(keys, values, top_k, min_join)
+            return self._query_host(keys, values, top_k, min_join,
+                                    tenant=tenant)
         # the fused batch engine with Q=1: same kernels, same numerics --
         # single and batched queries are one code path by construction
         return self._query_batch_device(
-            [(np.asarray(keys), np.asarray(values))], top_k, min_join)[0]
+            [(np.asarray(keys), np.asarray(values))], top_k, min_join,
+            tenant=tenant)[0]
 
     def _assemble_results(self, scores, idx, join_h, sum_b_h, q_sample,
-                          n_q: int) -> List[SearchResult]:
+                          n_q: int, tables: Optional[List[TableSketch]] = None
+                          ) -> List[SearchResult]:
         """Host epilogue shared by all device paths: drop min_join failures,
         refine corr from the matched KMV samples, re-rank the k survivors
-        by refined |corr|."""
+        by refined |corr|.  ``tables`` is the candidate list the estimate
+        columns (and ``idx``) index into -- the full corpus by default, a
+        tenant's subset under tenant-scoped queries."""
+        if tables is None:
+            tables = self.tables
         results = []
         for score, i in zip(scores, idx):
             if score < 0:                    # failed the min_join filter
                 continue
-            t = self.tables[int(i)]
+            t = tables[int(i)]
             js = max(float(join_h[i]), 0.0)
             mean_b = float(sum_b_h[i]) / js if js > 0 else 0.0
             corr = self._sample_corr(q_sample, t.sample)
@@ -249,7 +328,8 @@ class DatasetSearchIndex:
     # -- batched queries -----------------------------------------------------
     def query_batch(self, queries: Sequence[Tuple[np.ndarray, np.ndarray]],
                     top_k: int = 10, min_join: float = 1.0,
-                    backend: Optional[str] = None) -> List[List[SearchResult]]:
+                    backend: Optional[str] = None,
+                    tenant: Optional[str] = None) -> List[List[SearchResult]]:
         """Answer Q ``(keys, values)`` queries in one shot.
 
         Device backend: ONE ``[3Q, N]`` ICWS sketch launch covers every field
@@ -267,10 +347,13 @@ class DatasetSearchIndex:
         backend = backend or self.backend
         if backend == "host":
             return [self._query_host(np.asarray(k), np.asarray(v),
-                                     top_k, min_join) for k, v in queries]
-        return self._query_batch_device(queries, top_k, min_join)
+                                     top_k, min_join, tenant=tenant)
+                    for k, v in queries]
+        return self._query_batch_device(queries, top_k, min_join,
+                                        tenant=tenant)
 
-    def _query_batch_device(self, queries, top_k: int, min_join: float
+    def _query_batch_device(self, queries, top_k: int, min_join: float,
+                            tenant: Optional[str] = None
                             ) -> List[List[SearchResult]]:
         if self.store is None:
             raise ValueError("device corpus was not built at ingest "
@@ -292,38 +375,74 @@ class DatasetSearchIndex:
         # for every query, straight off the canonical store buffers (unused
         # capacity rows are inert and sliced out of the estimates below)
         cbufs = self.store.buffers()
-        if self._corpus_axis is not None:
-            est = self.family.estimate_fields_sharded(
-                qcomps, cbufs, qmap=QFIELD, cmap=CFIELD,
-                mesh=self.mesh, axis=self._corpus_axis)        # [6, Q, cap]
-        else:
-            est = self.family.estimate_fields(qcomps, cbufs,
-                                              qmap=QFIELD, cmap=CFIELD)
-        P = len(self.tables)
-        est = est[:, :, :P]
-
-        k = min(top_k, P)
-        score = _corr_scores(est[0], est[1], est[2], est[3], est[4], est[5],
-                             jnp.float32(min_join))
-        if self._corpus_axis is not None:
-            scores, idx = ops.sharded_top_k(score, k, mesh=self.mesh,
-                                            axis=self._corpus_axis)
-        else:
+        tables = self.tables
+        if tenant is not None:
+            # tenant-scoped query against the shared arena.  Per-row
+            # estimates are independent of the surrounding rows, so both
+            # routes below are bitwise what a dedicated single-tenant store
+            # would produce.
+            ranges = self.store.tenant_ranges(tenant)
+            tables = self._tenant_table_list(tenant)
+            P = len(tables)
+            if len(ranges) == 1:
+                # contiguous tenant: slice the arena buffers before the
+                # launch -- per-query cost scales with THIS tenant's rows,
+                # not the arena (the performance-isolation fast path)
+                lo, hi = ranges[0]
+                est = self.family.estimate_fields(
+                    qcomps, tuple(c[:, lo:hi] for c in cbufs),
+                    qmap=QFIELD, cmap=CFIELD)
+            else:
+                # fragmented tenant: full-arena launch, gather the tenant's
+                # estimate columns (O(arena) compute, exact results)
+                if self._corpus_axis is not None:
+                    est = self.family.estimate_fields_sharded(
+                        qcomps, cbufs, qmap=QFIELD, cmap=CFIELD,
+                        mesh=self.mesh, axis=self._corpus_axis)
+                else:
+                    est = self.family.estimate_fields(qcomps, cbufs,
+                                                      qmap=QFIELD,
+                                                      cmap=CFIELD)
+                est = est[:, :, jnp.asarray(self.store.tenant_rows(tenant))]
+            est = est[:, :, :P]
+            k = min(top_k, P)
+            score = _corr_scores(est[0], est[1], est[2], est[3], est[4],
+                                 est[5], jnp.float32(min_join))
             scores, idx = _top_k(score, k)
+        else:
+            if self._corpus_axis is not None:
+                est = self.family.estimate_fields_sharded(
+                    qcomps, cbufs, qmap=QFIELD, cmap=CFIELD,
+                    mesh=self.mesh, axis=self._corpus_axis)    # [6, Q, cap]
+            else:
+                est = self.family.estimate_fields(qcomps, cbufs,
+                                                  qmap=QFIELD, cmap=CFIELD)
+            P = len(self.tables)
+            est = est[:, :, :P]
+
+            k = min(top_k, P)
+            score = _corr_scores(est[0], est[1], est[2], est[3], est[4],
+                                 est[5], jnp.float32(min_join))
+            if self._corpus_axis is not None:
+                scores, idx = ops.sharded_top_k(score, k, mesh=self.mesh,
+                                                axis=self._corpus_axis)
+            else:
+                scores, idx = _top_k(score, k)
         scores, idx = np.asarray(scores), np.asarray(idx)
         join_h, sum_b_h = np.asarray(est[0]), np.asarray(est[2])
         return [
             self._assemble_results(scores[qi], idx[qi], join_h[qi],
                                    sum_b_h[qi], samples[qi],
-                                   n_q=max(len(queries[qi][0]), 1))
+                                   n_q=max(len(queries[qi][0]), 1),
+                                   tables=tables)
             for qi in range(Q)]
 
     # -- host oracle (the original numpy implementation, cross-checked) -----
     def _stack(self, field: str) -> StackedWMH:
         return stack_wmh([getattr(t, field) for t in self.tables])
 
-    def _query_host(self, keys, values, top_k: int, min_join: float
-                    ) -> List[SearchResult]:
+    def _query_host(self, keys, values, top_k: int, min_join: float,
+                    tenant: Optional[str] = None) -> List[SearchResult]:
         # guard per-query backend overrides too: a non-ICWS index must
         # never silently answer from the WMH oracle instead of its own
         # sketch method (the constructor enforces the same rule up front)
@@ -338,17 +457,19 @@ class DatasetSearchIndex:
         ind, val, sq = self.vectorize(keys, values)
         q_ind = self.sketcher.sketch(ind)
         q_sample = self.kmv.sketch(val)
-        P = len(self.tables)
+        tables = self._tenant_table_list(tenant)
+        P = len(tables)
 
         def est(q: WMHSketch, field: str) -> np.ndarray:
             A = stack_wmh([q] * P)
-            return self.sketcher.estimate_batch(A, self._stack(field))
+            return self.sketcher.estimate_batch(
+                A, stack_wmh([getattr(t, field) for t in tables]))
 
         join = est(q_ind, "key_indicator")                  # <1A, 1B>
         sum_b = est(q_ind, "values")                        # <1A, VB>
 
         results = []
-        for i, t in enumerate(self.tables):
+        for i, t in enumerate(tables):
             js = max(join[i], 0.0)
             if js < min_join:
                 continue

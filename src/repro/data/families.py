@@ -46,14 +46,18 @@ import dataclasses
 from typing import Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import registry
+from repro.core import registry, u32
 from repro.core.icws import ICWS
 from repro.core.linear import REPS, CountSketchU32, JLU32
-from repro.core.sampling import PrioritySamplingU32, ThresholdSamplingU32
+from repro.core.sampling import (SAMPLE_HASH_STREAM, PrioritySamplingU32,
+                                 ThresholdSamplingU32)
 from repro.core.types import SparseVec
 from repro.kernels import ops
+from repro.kernels.common import hash_u32, salt_for, uniform01
 from repro.kernels.estimate import CORPUS_PAD_FP
+from repro.kernels.ref import BIG
 
 from .ingest import pad_linear_batch, pad_sample_batch, sketch_batch
 
@@ -89,31 +93,98 @@ class ICWSFamily:
 
     @property
     def components(self) -> Tuple[ComponentSpec, ...]:
+        # argkeys (the per-sample winning key) rides LAST so every consumer
+        # of the first three components -- estimate launches, host
+        # estimators, field maps -- is layout-compatible with pre-argkeys
+        # code.  It is only read by the merge path; spare rows fill with 0,
+        # which the estimate kernels never look at.
         return (ComponentSpec("fingerprints", (self.m,), jnp.int32,
                               CORPUS_PAD_FP),
                 ComponentSpec("values", (self.m,), jnp.float32, 0.0),
-                ComponentSpec("norms", (), jnp.float32, 0.0))
+                ComponentSpec("norms", (), jnp.float32, 0.0),
+                ComponentSpec("argkeys", (self.m,), jnp.int32, 0.0))
 
     def storage_doubles_per_row(self) -> float:
-        """Paper accounting: 1.5 doubles per sample + 1 norm."""
+        """Paper accounting: 1.5 doubles per sample + 1 norm.  The argkeys
+        merge sidecar is deliberately NOT charged: the paper's storage
+        x-axis prices the *estimation* state, and dropping argkeys (serving
+        a frozen, unmergeable corpus) loses nothing at query time."""
         return 1.5 * self.m + 1.0
 
     def sketch_rows(self, vecs: Sequence[SparseVec], *, bucket: int = 256):
-        """One ICWS kernel launch: B sparse vectors -> (fp, val, norm) rows."""
+        """One ICWS kernel launch: B sparse vectors -> (fp, val, norm,
+        argkey) rows."""
         return sketch_batch(vecs, m=self.m, seed=self.seed, bucket=bucket)
 
     def estimate_fields(self, q, c, *, qmap, cmap):
-        fq, vq, nq = q
-        fpc, vc, nc = c
+        fq, vq, nq = q[0], q[1], q[2]
+        fpc, vc, nc = c[0], c[1], c[2]
         return ops.icws_estimate_fields(fq, vq, nq, fpc, vc, nc,
                                         qmap=qmap, cmap=cmap)
 
     def estimate_fields_sharded(self, q, c, *, qmap, cmap, mesh, axis):
-        fq, vq, nq = q
-        fpc, vc, nc = c
+        fq, vq, nq = q[0], q[1], q[2]
+        fpc, vc, nc = c[0], c[1], c[2]
         return ops.icws_estimate_fields_sharded(fq, vq, nq, fpc, vc, nc,
                                                 qmap=qmap, cmap=cmap,
                                                 mesh=mesh, axis=axis)
+
+    def merge_rows(self, a, b):
+        """Coordinated per-slot min-merge of row-aligned ICWS components.
+
+        ``a`` and ``b`` are same-shape component tuples ``(fp [..., m], val
+        [..., m], norm [...], argkey [..., m])`` sketching *disjoint
+        partitions* of the same underlying vectors.  Device twin of
+        :meth:`repro.core.icws.ICWS.merge`: both shard winners are
+        re-scored under the merged norm (variates redrawn from (sample,
+        key) -- the shared u32 streams), the smaller ICWS hash wins, and
+        its fingerprint is re-derived at the re-leveled weight.  Ties break
+        toward the smaller key, so the merge commutes bitwise.
+        """
+        fpa, va, na, ka = (jnp.asarray(x) for x in a)
+        fpb, vb, nb, kb = (jnp.asarray(x) for x in b)
+        t = jnp.arange(self.m, dtype=jnp.int32)
+        # exact identity when one side is empty: sqrt(n^2) may round, so
+        # pass the live norm through untouched
+        norm_q = jnp.sqrt(na * na + nb * nb)
+        norm_c = jnp.where(na == 0, nb, jnp.where(nb == 0, na, norm_q))
+        safe_c = jnp.maximum(norm_c, jnp.float32(1e-37))[..., None]
+
+        def rescore(fp, val, norm, key):
+            z = val * (norm[..., None] / safe_c)
+            w = z * z
+            kk = key.astype(jnp.uint32)
+
+            def u(stream):
+                return uniform01(kk, salt_for(self.seed, stream, t))
+
+            r = -jnp.log(u(1) * u(2))
+            c = -jnp.log(u(3) * u(4))
+            beta = u(5)
+            logw = jnp.log(jnp.maximum(w, jnp.float32(1e-37)))
+            lvl = jnp.floor(logw / r + beta)
+            y = jnp.exp(r * (lvl - beta))
+            av = c / (y * jnp.exp(r))
+            av = jnp.where((fp < 0) | (w <= 0), jnp.float32(BIG), av)
+            return z, av, lvl.astype(jnp.int32)
+
+        za, aa, la = rescore(fpa, va, na, ka)
+        zb, ab, lb = rescore(fpb, vb, nb, kb)
+        pick_b = (ab < aa) | ((ab == aa)
+                             & (kb.astype(jnp.uint32) < ka.astype(jnp.uint32)))
+        key_c = jnp.where(pick_b, kb, ka)
+        lvl_c = jnp.where(pick_b, lb, la)
+        val_c = jnp.where(pick_b, zb, za)
+        fpbits = hash_u32(
+            key_c.astype(jnp.uint32)
+            ^ (lvl_c.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)),
+            salt_for(self.seed, 9, t))
+        fp_c = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+        dead = jnp.minimum(aa, ab) >= BIG
+        return (jnp.where(dead, -1, fp_c),
+                jnp.where(dead, 0.0, val_c).astype(jnp.float32),
+                norm_c.astype(jnp.float32),
+                jnp.where(dead, 0, key_c).astype(jnp.int32))
 
     def host_oracle(self) -> ICWS:
         return ICWS(m=self.m, seed=self.seed)
@@ -156,6 +227,12 @@ class _LinearFamily:
         return ops.linear_estimate_fields_sharded(q[0], c[0], qmap=qmap,
                                                   cmap=cmap, mesh=mesh,
                                                   axis=axis)
+
+    def merge_rows(self, a, b):
+        """Exact merge by linearity: ``S(x + y) = S(x) + S(y)`` -- the
+        row-aligned tables simply add.  Commutative and associative up to
+        f32 addition order (bitwise exact on integer-valued data)."""
+        return (jnp.asarray(a[0]) + jnp.asarray(b[0]),)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,6 +329,53 @@ class _SamplingFamily:
                                                   qmap=qmap, cmap=cmap,
                                                   mesh=mesh, axis=axis)
 
+    def _merge_keep(self, live, h, vals, ta, tb):
+        raise NotImplementedError
+
+    def merge_rows(self, a, b):
+        """Union re-subsampling of row-aligned sample components.
+
+        ``a`` and ``b`` are ``(key [..., S], val [..., S], tau [...])``
+        component tuples sampling *disjoint partitions* of the same
+        vectors.  The kept slot sets are pooled, the merged scheme
+        threshold is recomputed (TS: ``tau_c = tau_a + tau_b``; PS:
+        ``T_c = min(T_a, T_b, T_cand)``), the coordinated hash re-decides
+        every pooled slot, and survivors repack in the canonical
+        ascending-key layout.  Runs host-side in float64, mirroring the
+        builders in :mod:`repro.core.sampling` decision for decision --
+        sampling is select/sort-shaped work, and bit-agreement with the
+        host oracles matters more than device residency (the builders
+        themselves are host-side for the same reason).
+        """
+        ka, va, ta = (np.asarray(x) for x in a)
+        kb, vb, tb = (np.asarray(x) for x in b)
+        S = self.slots
+        keys = np.concatenate([ka, kb], axis=-1).astype(np.int64)
+        vals = np.concatenate([va, vb], axis=-1).astype(np.float64)
+        live = keys >= 0                       # slot pads are negative
+        vals = np.where(live, vals, 0.0)
+        lane = np.arange(2 * S, dtype=np.int64)
+        big = np.int64(1) << 33                # above any 31-bit key
+        srt = np.sort(np.where(live, keys, big + lane), axis=-1)
+        if np.any((srt[..., 1:] == srt[..., :-1]) & (srt[..., 1:] < big)):
+            raise ValueError("union-merge requires disjoint supports "
+                             "(shared keys found in both rows)")
+        salt = u32.salt_for(self.seed, SAMPLE_HASH_STREAM,
+                            np.zeros(1, np.uint32))
+        h = u32.uniform01(keys.astype(np.uint64).astype(np.uint32),
+                          salt).astype(np.float64)
+        keep, tau_c = self._merge_keep(live, h, vals,
+                                       ta.astype(np.float64),
+                                       tb.astype(np.float64))
+        order = np.argsort(np.where(keep, keys, big + lane), axis=-1,
+                           kind="stable")
+        k_s = np.take_along_axis(keys, order, -1)[..., :S]
+        v_s = np.take_along_axis(vals, order, -1)[..., :S]
+        kept = np.take_along_axis(keep, order, -1)[..., :S]
+        return (jnp.asarray(np.where(kept, k_s, -1).astype(np.int32)),
+                jnp.asarray(np.where(kept, v_s, 0.0).astype(np.float32)),
+                jnp.asarray(tau_c.astype(np.float32)))
+
 
 @dataclasses.dataclass(frozen=True)
 class TSFamily(_SamplingFamily):
@@ -260,6 +384,27 @@ class TSFamily(_SamplingFamily):
     slots: int
     seed: int = 0
     name: str = dataclasses.field(default="ts", init=False)
+
+    def _merge_keep(self, live, h, vals, ta, tb):
+        # tau = ||v||^2 * slots / target: disjoint-support norms add, so
+        # the merged tau is the sum and p_c = min(1, S v^2 / tau_c) only
+        # shrinks -- re-flipping the same coordinated coin on the pooled
+        # slots reproduces the build-once sample (see ThresholdSamplingU32
+        # .merge for the overflow caveat).
+        S = self.slots
+        tau_c = ta + tb
+        denom = np.where(tau_c > 0, tau_c, 1.0)[..., None]
+        p = np.where(tau_c[..., None] > 0,
+                     np.minimum(1.0, S * vals * vals / denom), 1.0)
+        p = np.where(live, p, 0.0)
+        keep = h < p
+        over = keep.sum(axis=-1) > S
+        if np.any(over):
+            rank = np.where(keep, h / np.where(p > 0, p, 1.0), np.inf)
+            pos = np.argsort(np.argsort(rank, axis=-1, kind="stable"),
+                             axis=-1)
+            keep = keep & (~over[..., None] | (pos < S))
+        return keep, tau_c
 
     def host_oracle(self) -> ThresholdSamplingU32:
         return ThresholdSamplingU32(slots=self.slots, seed=self.seed)
@@ -272,6 +417,23 @@ class PSFamily(_SamplingFamily):
     slots: int
     seed: int = 0
     name: str = dataclasses.field(default="ps", init=False)
+
+    def _merge_keep(self, live, h, vals, ta, tb):
+        # T = slots / tau is each side's threshold rank (infinite when the
+        # support fit); the union threshold is min(T_a, T_b, T_cand) with
+        # T_cand the (S+1)-th smallest pooled rank.  Exactly build-once:
+        # see PrioritySamplingU32.merge for the argument.
+        S = self.slots
+        t_a = np.where(ta > 0, S / np.where(ta > 0, ta, 1.0), np.inf)
+        t_b = np.where(tb > 0, S / np.where(tb > 0, tb, 1.0), np.inf)
+        sq = np.where(live, vals * vals, 1.0)
+        rank = np.where(live, h / sq, np.inf)
+        t_cand = np.sort(rank, axis=-1)[..., S]
+        t_c = np.minimum(np.minimum(t_a, t_b), t_cand)
+        keep = rank < t_c[..., None]
+        tau_c = np.where(np.isinf(t_c), 0.0,
+                         S / np.where(np.isinf(t_c), 1.0, t_c))
+        return keep, tau_c
 
     def host_oracle(self) -> PrioritySamplingU32:
         return PrioritySamplingU32(slots=self.slots, seed=self.seed)

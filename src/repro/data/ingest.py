@@ -156,9 +156,11 @@ def sketch_batch(vecs: Sequence[SparseVec], *, m: int, seed: int = 0,
                  bucket: int = 256):
     """Device-sketch a batch of sparse vectors through the Pallas ICWS kernel.
 
-    Returns device arrays ``(fp [B, m] int32, val [B, m] f32, norm [B] f32)``.
+    Returns device arrays ``(fp [B, m] int32, val [B, m] f32, norm [B] f32,
+    argkey [B, m] int32)`` -- the four ICWS family components; ``argkey``
+    is the merge sidecar (winning index per sample).
     """
     w, keys, vals, norms = pad_sparse_batch(vecs, bucket=bucket)
-    fp, val, _ = ops.icws_sketch(jnp.asarray(w), jnp.asarray(keys),
-                                 jnp.asarray(vals), m=m, seed=seed)
-    return fp, val, jnp.asarray(norms, jnp.float32)
+    fp, val, _, argkey = ops.icws_sketch(jnp.asarray(w), jnp.asarray(keys),
+                                         jnp.asarray(vals), m=m, seed=seed)
+    return fp, val, jnp.asarray(norms, jnp.float32), argkey

@@ -1,0 +1,191 @@
+"""Mergeable corpora: shard-and-merge parallel lake builds.
+
+A data lake is rarely sketched in one stream: ingest naturally arrives
+partitioned (per machine, per day, per source).  This module makes the
+corpus layer *mergeable* so those partitions can be sketched independently
+and combined afterwards, for every serving family:
+
+  * :func:`split_by_key` partitions a sparse vector by a hash of its 31-bit
+    folded key -- a disjoint, deterministic split of the coordinate domain
+    (every sketch in this codebase keys on the folded coordinate, so a
+    folded key lands wholly in exactly one shard, which is what the
+    sampling merges require).
+  * :func:`merge_stores` combines two row-aligned
+    :class:`repro.data.store.CorpusStore` arenas holding sketches of
+    disjoint partitions of the same vectors, delegating the per-row
+    semantics to the family's ``merge_rows``:
+
+      - **cs / jl** -- exact by linearity: the tables add.
+      - **icws** -- coordinated per-slot min-merge: shard winners are
+        re-scored under the merged norm on the shared u32 streams and the
+        smaller hash wins (approximate: a shard may have discarded the
+        union argmin; empirically ~90% of slots match a build-once sketch,
+        and estimates stay within sampling noise).
+      - **ts / ps** -- union re-subsampling: pool the kept slots, recompute
+        the scheme threshold (TS: taus add; PS: ``min(T_a, T_b, T_cand)``),
+        re-decide with the coordinated hash.  PS is *exactly* build-once;
+        TS is exact modulo the rare per-shard overflow truncation.
+
+  * :func:`build_sharded` runs the whole pipeline: partition every input
+    vector across ``shards`` shards, sketch each shard independently (the
+    parallelizable part), then compact with a pairwise merge tree.
+
+Tenancy survives merging: row-aligned stores must carry identical
+per-tenant row-range tables, and the merged arena inherits them verbatim.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u32
+from repro.core.sampling import SAMPLE_KEY_MASK
+from repro.core.types import SparseVec
+
+from .store import CorpusStore
+
+
+def split_by_key(v: SparseVec, shards: int, shard: int) -> SparseVec:
+    """The ``shard``-th of ``shards`` disjoint key-partitions of ``v``.
+
+    A coordinate goes to shard ``mix32(key) % shards`` where ``key`` is the
+    31-bit folded index -- the exact key every u32-contract sketch hashes.
+    Folding *before* hashing guarantees two raw indices that alias to one
+    key (and are therefore one coordinate to every sketch) land in the same
+    shard, so partitions have disjoint key supports: the precondition of
+    the sampling union-merges, and what makes partition inner products sum
+    to the full inner product.
+    """
+    shards = int(shards)
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    if not 0 <= int(shard) < shards:
+        raise ValueError(f"shard {shard} out of range for {shards} shards")
+    if shards == 1:
+        return v
+    keys = (np.asarray(v.indices, np.int64)
+            & np.int64(SAMPLE_KEY_MASK)).astype(np.uint32)
+    keep = u32.mix32(keys) % np.uint32(shards) == np.uint32(shard)
+    return SparseVec(indices=v.indices[keep], values=v.values[keep], n=v.n)
+
+
+def partition_by_key(v: SparseVec, shards: int) -> "tuple[SparseVec, ...]":
+    """All ``shards`` disjoint key-partitions of ``v`` in one hash pass.
+
+    Identical assignment rule to :func:`split_by_key` (element ``s`` equals
+    ``split_by_key(v, shards, s)``), but each key is folded and hashed
+    once instead of once per shard -- the producer-side partition pass of
+    a parallel build does this, not ``shards`` independent scans.
+    """
+    shards = int(shards)
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    if shards == 1:
+        return (v,)
+    keys = (np.asarray(v.indices, np.int64)
+            & np.int64(SAMPLE_KEY_MASK)).astype(np.uint32)
+    sid = u32.mix32(keys) % np.uint32(shards)
+    return tuple(
+        SparseVec(indices=v.indices[sid == s], values=v.values[sid == s],
+                  n=v.n)
+        for s in range(shards))
+
+
+def merge_stores(a: CorpusStore, b: CorpusStore) -> CorpusStore:
+    """Merge two row-aligned stores of disjoint-partition sketches.
+
+    Row ``i`` of ``a`` and row ``i`` of ``b`` must sketch disjoint
+    key-partitions of the same underlying vector (e.g. two
+    :func:`split_by_key` shards); the result's row ``i`` sketches their
+    union, with per-row semantics from the family's ``merge_rows`` (see
+    the module docstring for the per-family guarantees).  Both stores must
+    share the family *including its seed* -- every merge rule re-decides
+    winners on the coordinated u32 hash streams, which only line up when
+    both sides drew from the same seed -- and carry identical per-tenant
+    row-range tables, which the merged arena inherits.
+
+    Returns a fresh store (on ``a``'s mesh); the inputs are not consumed.
+    """
+    if a.family != b.family:
+        raise ValueError(
+            "cannot merge stores of different families or seeds: "
+            f"{a.family!r} vs {b.family!r} -- coordinated merge semantics "
+            "require identical family parameters, seed included")
+    if a.fields != b.fields:
+        raise ValueError(f"field count mismatch: {a.fields} vs {b.fields}")
+    if len(a) != len(b):
+        raise ValueError(
+            f"stores must be row-aligned: {len(a)} vs {len(b)} rows")
+    tenants_a = {t: a.tenant_ranges(t) for t in a.tenants()}
+    tenants_b = {t: b.tenant_ranges(t) for t in b.tenants()}
+    if tenants_a != tenants_b:
+        raise ValueError(
+            "tenant row-range tables differ; merge inputs must assign "
+            f"identical rows to identical tenants ({tenants_a} vs "
+            f"{tenants_b})")
+    merged = a.family.merge_rows(a.field_arrays(), b.field_arrays())
+    out = CorpusStore(family=a.family, fields=a.fields, mesh=a.mesh)
+    out.append(*merged)
+    for t, ranges in tenants_a.items():
+        out._tenant_ranges[t] = [tuple(r) for r in ranges]
+    return out
+
+
+def _field_rows(rows) -> "list[tuple]":
+    """Normalize ``rows`` to a list of per-row field tuples."""
+    rows = list(rows)
+    if rows and isinstance(rows[0], SparseVec):
+        return [(r,) for r in rows]
+    return [tuple(r) for r in rows]
+
+
+def build_sharded(rows: Sequence, *, family, shards: int, mesh=None,
+                  bucket: int = 256) -> CorpusStore:
+    """Build a corpus store from ``rows`` via ``shards`` parallel partitions.
+
+    ``rows`` is either a sequence of :class:`SparseVec` (a single-field
+    corpus) or a sequence of per-row field tuples ``(v_f1, .., v_fF)`` (a
+    field-stacked corpus).  Each row is key-partitioned across the shards
+    (:func:`split_by_key`), every shard is sketched independently with the
+    family's batch launch -- the part a parallel lake build distributes --
+    and the shard stores compact through a pairwise merge tree
+    (:func:`merge_stores`).
+
+    With ``shards=1`` this is exactly the single-stream build.  For the
+    linear and sampling families the merged rows match the single-stream
+    rows (bitwise / exactly, see :func:`merge_stores`); for ICWS the
+    merged rows are statistically equivalent re-leveled sketches whose
+    estimates agree with single-stream to within sampling noise.
+    """
+    shards = int(shards)
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    field_rows = _field_rows(rows)
+    if not field_rows:
+        raise ValueError("build_sharded needs at least one row")
+    F = len(field_rows[0])
+    n_comp = len(family.components)
+    # one partition pass over the data (each key folded + hashed once),
+    # then per-shard sketching -- the distributable part
+    parted = [tuple(partition_by_key(v, shards) for v in fr)
+              for fr in field_rows]
+    stores = []
+    for s in range(shards):
+        per_field = [family.sketch_rows([pr[f][s] for pr in parted],
+                                        bucket=bucket)
+                     for f in range(F)]
+        stacked = tuple(
+            jnp.stack([per_field[f][i] for f in range(F)], axis=0)
+            for i in range(n_comp))
+        store = CorpusStore(family=family, fields=F, mesh=mesh)
+        store.append(*stacked)
+        stores.append(store)
+    while len(stores) > 1:
+        merged = [merge_stores(stores[i], stores[i + 1])
+                  for i in range(0, len(stores) - 1, 2)]
+        if len(stores) % 2:
+            merged.append(stores[-1])
+        stores = merged
+    return stores[0]

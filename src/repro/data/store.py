@@ -30,13 +30,26 @@ results are identical to running on exact-size arrays.
 On CPU (no buffer donation in XLA's CPU client) the update falls back to a
 buffer copy; the scheme still never restacks chunk lists and becomes truly
 in-place on TPU.
+
+**Multi-tenant arena.**  One store can hold many logical corpora: every
+``append(..., tenant=...)`` records the written row range in a per-tenant
+row-range table, so N tenants share one set of device buffers (one
+allocation, one growth schedule, one jit shape family) while queries
+address a single tenant's rows.  Because per-row estimates are bitwise
+independent of the surrounding rows, a tenant's results off the shared
+arena equal a dedicated single-tenant store bit for bit -- the serving
+stack exploits this by slicing (contiguous tenants) or gathering
+(fragmented tenants) at query time.  Rows appended without a tenant belong
+to the arena at large and are only visible to tenant-less queries.
 """
 from __future__ import annotations
 
 import contextlib
 import functools
 import warnings
-from typing import Tuple
+from typing import Dict, List, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -145,6 +158,9 @@ class CorpusStore:
         self._bufs = None
         self._size = 0
         self._cap = 0
+        # tenant id -> ordered [start, stop) row ranges (coalesced when
+        # consecutive appends land back to back)
+        self._tenant_ranges: Dict[str, List[Tuple[int, int]]] = {}
 
     def __len__(self) -> int:
         return self._size
@@ -160,13 +176,17 @@ class CorpusStore:
         return self._cap
 
     # -- ingestion -----------------------------------------------------------
-    def append(self, *rows) -> None:
+    def append(self, *rows, tenant: "str | None" = None) -> None:
         """Append sketch rows, one array per family component, each
         ``[F, b, *trailing]`` (the leading F axis may be omitted when
         ``fields == 1`` -- e.g. ICWS ``[b, m]`` / ``[b]``).
 
         All components are validated against each other up front -- a
         row-count mismatch raises here, at ingest, never at query time.
+
+        ``tenant`` assigns the written rows to a logical corpus inside the
+        shared arena (see the module docstring); ``None`` leaves them in
+        the tenant-less pool.
         """
         if len(rows) != len(self._specs):
             raise ValueError(
@@ -198,7 +218,51 @@ class CorpusStore:
             self._bufs = _write_rows(self._bufs, tuple(rows),
                                      jnp.int32(self._size))
         self._place()
+        if tenant is not None:
+            ranges = self._tenant_ranges.setdefault(str(tenant), [])
+            if ranges and ranges[-1][1] == self._size:
+                ranges[-1] = (ranges[-1][0], self._size + b)
+            else:
+                ranges.append((self._size, self._size + b))
         self._size += b
+
+    # -- tenancy -------------------------------------------------------------
+    def tenants(self) -> Tuple[str, ...]:
+        """Tenant ids in first-append order."""
+        return tuple(self._tenant_ranges)
+
+    def tenant_ranges(self, tenant: str) -> Tuple[Tuple[int, int], ...]:
+        """The tenant's ordered, coalesced ``[start, stop)`` row ranges.
+
+        A tenant whose appends were never interleaved with other writes has
+        exactly one range -- the query path then serves it by slicing the
+        shared buffers instead of gathering.
+        """
+        try:
+            return tuple(self._tenant_ranges[str(tenant)])
+        except KeyError:
+            raise KeyError(f"unknown tenant {tenant!r}; "
+                           f"have {list(self._tenant_ranges)}") from None
+
+    def tenant_rows(self, tenant: str) -> np.ndarray:
+        """Global row indices of the tenant's rows, ascending."""
+        return np.concatenate(
+            [np.arange(a, b, dtype=np.int64)
+             for a, b in self.tenant_ranges(tenant)] or
+            [np.zeros(0, np.int64)])
+
+    def tenant_size(self, tenant: str) -> int:
+        return int(sum(b - a for a, b in self.tenant_ranges(tenant)))
+
+    def describe_tenants(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant accounting: rows, row ranges, and the tenant's share
+        of the paper's storage-doubles ledger."""
+        per_row = self.fields * self.family.storage_doubles_per_row()
+        return {
+            t: {"rows": float(self.tenant_size(t)),
+                "ranges": float(len(self.tenant_ranges(t))),
+                "storage_doubles": float(self.tenant_size(t) * per_row)}
+            for t in self._tenant_ranges}
 
     def _reserve(self, n: int) -> None:
         if n <= self._cap:
@@ -264,6 +328,18 @@ class CorpusStore:
         if self.fields == 1:
             return tuple(o[0] for o in out)
         return out
+
+    def field_arrays(self) -> Tuple[jnp.ndarray, ...]:
+        """Exact-size component slices, ALWAYS ``[F, P, *trailing]``.
+
+        Like :meth:`arrays` but without the ``fields == 1`` F-axis drop --
+        the uniform layout the merge layer (:mod:`repro.data.merge`)
+        consumes and the family ``merge_rows`` contracts are written
+        against.
+        """
+        if self._size == 0:
+            raise ValueError("empty corpus")
+        return tuple(b[:, :self._size] for b in self._bufs)
 
     def storage_doubles(self) -> float:
         """Paper accounting, per family (icws: 1.5 doubles per sample + 1

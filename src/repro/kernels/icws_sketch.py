@@ -35,7 +35,7 @@ from .ref import BIG
 
 
 def _icws_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
-                 *, seed: int, bm: int, bn: int):
+                 out_key_ref, *, seed: int, bm: int, bn: int):
     m_idx = pl.program_id(1)
     n_idx = pl.program_id(2)
 
@@ -79,6 +79,7 @@ def _icws_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
         amin_ref[:, :] = amin
         fp_ref[:, :] = fp
         out_val_ref[:, :] = val_sel
+        out_key_ref[:, :] = key_sel
 
     @pl.when(n_idx != 0)
     def _merge():
@@ -86,6 +87,7 @@ def _icws_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
         amin_ref[:, :] = jnp.where(better, amin, amin_ref[:, :])
         fp_ref[:, :] = jnp.where(better, fp, fp_ref[:, :])
         out_val_ref[:, :] = jnp.where(better, val_sel, out_val_ref[:, :])
+        out_key_ref[:, :] = jnp.where(better, key_sel, out_key_ref[:, :])
 
 
 @functools.partial(jax.jit, static_argnames=("m", "seed", "br", "bm", "bn",
@@ -95,7 +97,9 @@ def icws_sketch_pallas(w, keys, vals, *, m: int, seed: int, br: int = 1,
     """Batched ICWS sketch via Pallas.  See :func:`repro.kernels.ref.icws_sketch_ref`.
 
     Args: w/keys/vals [B, N] (N padded to a multiple of ``bn`` by the caller
-    or here); returns (fp [B, m] int32, val [B, m] f32, amin [B, m] f32).
+    or here); returns (fp [B, m] int32, val [B, m] f32, amin [B, m] f32,
+    argkey [B, m] int32 -- the original vector index that won each sample,
+    the sidecar the merge path re-levels from; 0 for empty inputs).
     ``br`` rows are sketched per grid step (pad rows are all-zero => empty);
     results are bitwise identical for every (br, bm, bn) choice.
     """
@@ -112,7 +116,7 @@ def icws_sketch_pallas(w, keys, vals, *, m: int, seed: int, br: int = 1,
 
     grid = (Bp // br, mp // bm, Np // bn)
     kernel = functools.partial(_icws_kernel, seed=seed, bm=bm, bn=bn)
-    fp, val, amin = pl.pallas_call(
+    fp, val, amin, key = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -124,15 +128,18 @@ def icws_sketch_pallas(w, keys, vals, *, m: int, seed: int, br: int = 1,
             pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
             pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
             pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+            pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
             jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
             jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
         ],
         interpret=interpret,
     )(w.astype(jnp.float32), keys.astype(jnp.int32), vals.astype(jnp.float32))
 
-    fp, val, amin = fp[:B, :m], val[:B, :m], amin[:B, :m]
+    fp, val, amin, key = fp[:B, :m], val[:B, :m], amin[:B, :m], key[:B, :m]
     empty = amin >= BIG
-    return (jnp.where(empty, -1, fp), jnp.where(empty, 0.0, val), amin)
+    return (jnp.where(empty, -1, fp), jnp.where(empty, 0.0, val), amin,
+            jnp.where(empty, 0, key))

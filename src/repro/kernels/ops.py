@@ -32,7 +32,8 @@ def _interpret() -> bool:
 
 
 def icws_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0):
-    """Device ICWS sketch of padded sparse batch.  [B,N] -> (fp, val, amin) [B,m].
+    """Device ICWS sketch of padded sparse batch.
+    [B,N] -> (fp, val, amin, argkey) [B,m].
 
     ``row_block=0`` auto-picks: large batches (serving micro-batches, lake
     ingest) sketch several rows per grid step; small/single-query launches

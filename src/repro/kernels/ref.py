@@ -31,7 +31,9 @@ def icws_sketch_ref(w, keys, vals, m: int, seed: int):
     Returns:
       fp   [B, m] int32 fingerprints of (key, level, t); -1 for empty inputs,
       val  [B, m] f32 sampled signed values,
-      amin [B, m] f32 the minimizing ICWS hash values.
+      amin [B, m] f32 the minimizing ICWS hash values,
+      argkey [B, m] int32 winning original indices (0 for empty inputs) --
+      the sidecar that lets the merge path re-level samples under a new norm.
     """
     B, N = w.shape
     t = jnp.arange(m, dtype=jnp.int32)                       # [m]
@@ -67,7 +69,8 @@ def icws_sketch_ref(w, keys, vals, m: int, seed: int):
     nonempty = jnp.any(w > 0, axis=1)[:, None]
     fp = jnp.where(nonempty, fp, -1)
     val_sel = jnp.where(nonempty, val_sel, 0.0)
-    return fp, val_sel, jnp.where(nonempty, amin, BIG)
+    key_sel = jnp.where(nonempty, key_sel, 0)
+    return fp, val_sel, jnp.where(nonempty, amin, BIG), key_sel
 
 
 # ---------------------------------------------------------------------------

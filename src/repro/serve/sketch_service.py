@@ -69,25 +69,65 @@ class SketchSearchService:
         self.stats = ServiceStats()
 
     # -- ingestion ----------------------------------------------------------
-    def ingest(self, name: str, keys: np.ndarray, values: np.ndarray) -> None:
-        if any(t.name == name for t in self.index.tables):
-            raise ValueError(f"table {name!r} already ingested")
-        self.index.add_table(name, keys, values)
+    def ingest(self, name: str, keys: np.ndarray, values: np.ndarray, *,
+               tenant: Optional[str] = None) -> None:
+        """Ingest one named table; ``tenant`` scopes it to a logical corpus
+        inside the shared arena (see :meth:`search`).  Duplicate-name
+        checks are scoped per tenant -- tenants are logical corpora, so two
+        tenants may each own a table called "sales"."""
+        if any(t.name == name
+               for t in self._tenant_tables_or_empty(tenant)):
+            raise ValueError(f"table {name!r} already ingested"
+                             + (f" for tenant {tenant!r}"
+                                if tenant is not None else ""))
+        self.index.add_table(name, keys, values, tenant=tenant)
         self.stats.tables_ingested += 1
         self.stats.rows_ingested += len(keys)
 
-    def ingest_many(self, tables: Sequence[Tuple[str, np.ndarray, np.ndarray]]
-                    ) -> None:
+    def _tenant_tables_or_empty(self, tenant: Optional[str]):
+        """The tenant's tables for the duplicate-name check -- empty for a
+        tenant that has not ingested yet (a KeyError here would make the
+        FIRST ingest of every tenant fail)."""
+        if tenant is not None and str(tenant) not in self.index.tenants():
+            return []
+        return self.index._tenant_table_list(tenant)
+
+    def ingest_many(self, tables: Sequence[Tuple[str, np.ndarray, np.ndarray]],
+                    *, tenant: Optional[str] = None) -> None:
         for name, keys, values in tables:
-            self.ingest(name, keys, values)
+            self.ingest(name, keys, values, tenant=tenant)
+
+    def ingest_many_sharded(self,
+                            tables: Sequence[Tuple[str, np.ndarray,
+                                                   np.ndarray]],
+                            *, shards: int,
+                            tenant: Optional[str] = None) -> None:
+        """Ingest a batch of tables via a ``shards``-way parallel lake build
+        (:meth:`repro.data.DatasetSearchIndex.add_tables_sharded`)."""
+        tables = list(tables)
+        seen = {t.name for t in self._tenant_tables_or_empty(tenant)}
+        for name, _, _ in tables:
+            if name in seen:
+                raise ValueError(f"table {name!r} already ingested"
+                                 + (f" for tenant {tenant!r}"
+                                    if tenant is not None else ""))
+            seen.add(name)
+        self.index.add_tables_sharded(tables, shards=shards, tenant=tenant)
+        self.stats.tables_ingested += len(tables)
+        self.stats.rows_ingested += sum(len(k) for _, k, _ in tables)
 
     # -- queries ------------------------------------------------------------
     def search(self, keys: np.ndarray, values: np.ndarray, *,
                top_k: int = 10, min_join: float = 1.0,
-               backend: Optional[str] = None) -> List[SearchResult]:
+               backend: Optional[str] = None,
+               tenant: Optional[str] = None) -> List[SearchResult]:
+        """Rank tables by |corr|; ``tenant`` searches one logical corpus of
+        the shared arena, bitwise equal to a dedicated single-tenant index
+        over the same tables."""
         t0 = time.perf_counter()
         results = self.index.query(keys, values, top_k=top_k,
-                                   min_join=min_join, backend=backend)
+                                   min_join=min_join, backend=backend,
+                                   tenant=tenant)
         ms = (time.perf_counter() - t0) * 1e3
         self.stats.queries_served += 1
         self.stats.last_query_ms = ms
@@ -98,8 +138,9 @@ class SketchSearchService:
 
     def search_batch(self, queries: Sequence[Tuple[np.ndarray, np.ndarray]],
                      *, top_k: int = 10, min_join: float = 1.0,
-                     backend: Optional[str] = None,
-                     micro_batch: int = 16) -> List[List[SearchResult]]:
+                     backend: Optional[str] = None, micro_batch: int = 16,
+                     tenant: Optional[str] = None
+                     ) -> List[List[SearchResult]]:
         """Batched search: Q ``(keys, values)`` queries, Q result lists.
 
         Queries run through :meth:`DatasetSearchIndex.query_batch` in
@@ -124,7 +165,8 @@ class SketchSearchService:
             else:
                 padded = chunk
             out = self.index.query_batch(padded, top_k=top_k,
-                                         min_join=min_join, backend=backend)
+                                         min_join=min_join, backend=backend,
+                                         tenant=tenant)
             results.extend(out[:len(chunk)])
             ms = (time.perf_counter() - t0) * 1e3
             self.stats.batches_served += 1
@@ -133,8 +175,30 @@ class SketchSearchService:
             self.stats.total_batch_ms += ms
         return results
 
-    def describe(self) -> Dict[str, object]:
+    def describe(self, tenant: Optional[str] = None) -> Dict[str, object]:
+        """Service accounting.  With ``tenant``, the report scopes to that
+        logical corpus: its table count, rows, row ranges in the arena, and
+        its share of the storage-doubles ledger."""
         store = self.index.store
+        if tenant is not None:
+            tables = self.index._tenant_table_list(tenant)
+            if store is not None:
+                acct = store.describe_tenants()[str(tenant)]
+                rows, ranges = acct["rows"], acct["ranges"]
+                storage = acct["storage_doubles"]
+            else:
+                rows, ranges = float(len(tables)), 1.0
+                storage = float(len(tables) * 3
+                                * self.index.family.storage_doubles_per_row())
+            return {
+                "tenant": tenant,
+                "family": self.index.family.name,
+                "backend": self.index.backend,
+                "tables": float(len(tables)),
+                "corpus_rows": rows,
+                "row_ranges": ranges,
+                "storage_doubles": storage,
+            }
         # a host-only index (backend="host") has no device store, but its
         # corpus is just as real -- one row per ingested table per field.
         # Report the table-derived row count rather than a misleading 0;
@@ -147,6 +211,7 @@ class SketchSearchService:
             "family": self.index.family.name,
             "backend": self.index.backend,
             "tables": float(len(self.index.tables)),
+            "tenants": float(len(self.index.tenants())),
             "storage_doubles": self.index.storage_doubles(),
             "corpus_rows": rows,
             "corpus_capacity": cap,

@@ -51,8 +51,8 @@ def sketch_gradient(flat_grad: jnp.ndarray, cfg: TelemetryConfig):
     zn = flat_grad / safe
     w = (zn * zn)[None, :]
     keys = jnp.arange(flat_grad.shape[0], dtype=jnp.int32)[None, :]
-    fp, val, _ = icws_sketch_pallas(w, keys, zn[None, :], m=cfg.m,
-                                    seed=cfg.seed, interpret=True)
+    fp, val, _, _ = icws_sketch_pallas(w, keys, zn[None, :], m=cfg.m,
+                                       seed=cfg.seed, interpret=True)
     return {"fp": fp[0], "val": val[0], "norm": norm}
 
 

@@ -117,8 +117,8 @@ def test_many_vs_many_matches_ref_on_real_sketches():
     corpus = SketchCorpus(m=256, seed=4)
     corpus.add_batch(vecs)
     from repro.data.corpus import sketch_batch
-    fq, vq, _ = sketch_batch(queries, m=256, seed=4)
-    fc, vc, _ = corpus.arrays()
+    fq, vq, _, _ = sketch_batch(queries, m=256, seed=4)
+    fc, vc, _, _ = corpus.arrays()
     cnt_k, sw_k = estimate_many_vs_many_pallas(fq, vq, fc, vc, interpret=True)
     cnt_r, sw_r = ref.estimate_many_vs_many_ref(fq, vq, fc, vc)
     np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))

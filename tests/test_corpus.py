@@ -94,17 +94,18 @@ def test_corpus_chunked_append_matches_one_shot():
     chunked.add_batch(vecs[3:5])
     chunked.add_batch(vecs[5:])
     assert len(one) == len(chunked) == 7
-    fp1, v1, n1 = one.arrays()
-    fp2, v2, n2 = chunked.arrays()
+    fp1, v1, n1, k1 = one.arrays()
+    fp2, v2, n2, k2 = chunked.arrays()
     assert np.array_equal(np.asarray(fp1), np.asarray(fp2))
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
     np.testing.assert_allclose(np.asarray(n1), np.asarray(n2))
+    assert np.array_equal(np.asarray(k1), np.asarray(k2))
     # appends land in the canonical store: rows already written are stable
     # across later appends (and capacity growth), no chunk re-consolidation
     assert chunked.capacity >= len(chunked)
     chunked.add_batch(vecs[:1])
     assert len(chunked) == 8
-    fp3, _, _ = chunked.arrays()
+    fp3, _, _, _ = chunked.arrays()
     assert np.array_equal(np.asarray(fp3)[:7], np.asarray(fp2))
 
 
@@ -117,11 +118,11 @@ def test_corpus_device_query_matches_host_estimator_on_identical_sketches():
     m = 256
     corpus = SketchCorpus(m=m, seed=2)
     corpus.add_batch(vecs)
-    fq, vq, nq = corpus.sketch_query(q)
+    fq, vq, nq, _ = corpus.sketch_query(q)
     dev = np.asarray(corpus.estimate(fq, vq, nq[0]), np.float64)
 
     # identical sketches, host estimator (f64), query tiled host-side
-    fpc, vc, nc = (np.asarray(a) for a in corpus.arrays())
+    fpc, vc, nc = (np.asarray(a) for a in corpus.arrays()[:3])
     P = len(vecs)
     A = StackedICWS(fingerprints=np.repeat(np.asarray(fq), P, axis=0),
                     values=np.repeat(np.asarray(vq, np.float64), P, axis=0),
@@ -166,12 +167,15 @@ def test_corpus_add_sketches_validates_all_components():
     fp = rng.integers(0, 50, size=(4, m)).astype(np.int32)
     val = rng.normal(size=(4, m)).astype(np.float32)
     norm = np.ones(4, np.float32)
+    key = rng.integers(0, 2 ** 31 - 1, size=(4, m)).astype(np.int32)
     with pytest.raises(ValueError):
-        corpus.add_sketches(fp, val[:3], norm)          # short val
+        corpus.add_sketches(fp, val[:3], norm, key)     # short val
     with pytest.raises(ValueError):
-        corpus.add_sketches(fp, val, norm[:3])          # short norm
+        corpus.add_sketches(fp, val, norm[:3], key)     # short norm
+    with pytest.raises(ValueError):
+        corpus.add_sketches(fp, val, norm, key[:3])     # short argkeys
     assert len(corpus) == 0                             # nothing ingested
-    corpus.add_sketches(fp, val, norm)                  # matched: fine
+    corpus.add_sketches(fp, val, norm, key)             # matched: fine
     assert len(corpus) == 4
 
 

@@ -291,8 +291,8 @@ def test_icws_device_estimates_match_host_oracle():
                                          qmap=(0,), cmap=(0,))[0], np.float64)
 
     from repro.core.icws import StackedICWS
-    fq, vq, nq = (np.asarray(a) for a in qc)
-    fc, vc, nc = (np.asarray(a) for a in cc)
+    fq, vq, nq = (np.asarray(a) for a in qc[:3])
+    fc, vc, nc = (np.asarray(a) for a in cc[:3])
     host = np.stack([
         oracle.estimate_batch(
             StackedICWS(np.repeat(fq[i:i + 1], len(corpus), axis=0),

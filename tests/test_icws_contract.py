@@ -68,7 +68,7 @@ def _host_and_device_sketch(rng, n, density, m, seed):
     w = jnp.asarray((z32 * z32)[None, :])
     keys = jnp.asarray(v.indices.astype(np.int32)[None, :])
     vals = jnp.asarray(z32[None, :])
-    fp, val, _ = ops.icws_sketch(w, keys, vals, m=m, seed=seed)
+    fp, val, _, _ = ops.icws_sketch(w, keys, vals, m=m, seed=seed)
     return v, host, (np.asarray(fp)[0], np.asarray(val)[0], v.norm())
 
 
@@ -139,7 +139,7 @@ def test_host_empty_sketch_matches_kernel_sentinels():
     assert (s.fingerprints == -1).all()
     assert s.fingerprints.dtype == np.int32
     assert (s.values == 0).all() and s.norm == 0.0
-    fp, val, _ = ops.icws_sketch(jnp.zeros((1, 128)),
-                                 jnp.zeros((1, 128), jnp.int32),
-                                 jnp.zeros((1, 128)), m=32, seed=0)
+    fp, val, _, _ = ops.icws_sketch(jnp.zeros((1, 128)),
+                                    jnp.zeros((1, 128), jnp.int32),
+                                    jnp.zeros((1, 128)), m=32, seed=0)
     assert (np.asarray(fp)[0] == s.fingerprints).all()

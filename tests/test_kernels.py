@@ -38,10 +38,11 @@ def _sparse_batch(rng, B, N, density=0.6, dtype=jnp.float32):
 def test_icws_kernel_matches_ref(B, N, m):
     rng = np.random.default_rng(B * 1000 + N + m)
     w, keys, vals = _sparse_batch(rng, B, N)
-    fp_k, val_k, amin_k = icws_sketch_pallas(w, keys, vals, m=m, seed=7,
-                                             interpret=True)
-    fp_r, val_r, amin_r = ref.icws_sketch_ref(w, keys, vals, m=m, seed=7)
+    fp_k, val_k, amin_k, key_k = icws_sketch_pallas(w, keys, vals, m=m, seed=7,
+                                                    interpret=True)
+    fp_r, val_r, amin_r, key_r = ref.icws_sketch_ref(w, keys, vals, m=m, seed=7)
     assert np.array_equal(np.asarray(fp_k), np.asarray(fp_r))
+    assert np.array_equal(np.asarray(key_k), np.asarray(key_r))
     np.testing.assert_allclose(np.asarray(val_k), np.asarray(val_r), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(amin_k), np.asarray(amin_r), rtol=1e-5)
 
@@ -50,10 +51,11 @@ def test_icws_kernel_matches_ref(B, N, m):
 def test_icws_kernel_dtypes(dtype):
     rng = np.random.default_rng(0)
     w, keys, vals = _sparse_batch(rng, 2, 256, dtype=dtype)
-    fp_k, val_k, _ = icws_sketch_pallas(w, keys, vals, m=64, seed=1,
-                                        interpret=True)
-    fp_r, val_r, _ = ref.icws_sketch_ref(w.astype(jnp.float32), keys,
-                                         vals.astype(jnp.float32), m=64, seed=1)
+    fp_k, val_k, _, _ = icws_sketch_pallas(w, keys, vals, m=64, seed=1,
+                                           interpret=True)
+    fp_r, val_r, _, _ = ref.icws_sketch_ref(w.astype(jnp.float32), keys,
+                                            vals.astype(jnp.float32),
+                                            m=64, seed=1)
     # bf16 inputs are upcast inside; fingerprints must agree except where the
     # bf16 rounding moved an argmin (rare) -- demand 95% agreement for bf16.
     agree = np.mean(np.asarray(fp_k) == np.asarray(fp_r))
@@ -64,10 +66,11 @@ def test_icws_kernel_empty_rows():
     w = jnp.zeros((2, 128))
     keys = jnp.zeros((2, 128), jnp.int32)
     vals = jnp.zeros((2, 128))
-    fp, val, amin = icws_sketch_pallas(w, keys, vals, m=32, seed=0,
-                                       interpret=True)
+    fp, val, amin, key = icws_sketch_pallas(w, keys, vals, m=32, seed=0,
+                                            interpret=True)
     assert np.all(np.asarray(fp) == -1)
     assert np.all(np.asarray(val) == 0.0)
+    assert np.all(np.asarray(key) == 0)
 
 
 @pytest.mark.slow
@@ -81,6 +84,7 @@ def test_icws_kernel_block_size_invariance():
                                        bm=bm, bn=bn, interpret=True))
     for o in outs[1:]:
         assert np.array_equal(np.asarray(o[0]), np.asarray(outs[0][0]))
+        assert np.array_equal(np.asarray(o[3]), np.asarray(outs[0][3]))
         np.testing.assert_allclose(np.asarray(o[1]), np.asarray(outs[0][1]),
                                    rtol=1e-6)
 
@@ -102,8 +106,8 @@ def test_icws_device_collision_law():
                 jnp.asarray(np.where(nz, xn, 0.0)[None, :], jnp.float32))
 
     m = 4096
-    fpa, _, _ = icws_sketch_pallas(*prep(a), m=m, seed=11, interpret=True)
-    fpb, _, _ = icws_sketch_pallas(*prep(b), m=m, seed=11, interpret=True)
+    fpa, _, _, _ = icws_sketch_pallas(*prep(a), m=m, seed=11, interpret=True)
+    fpb, _, _, _ = icws_sketch_pallas(*prep(b), m=m, seed=11, interpret=True)
     rate = np.mean(np.asarray(fpa) == np.asarray(fpb))
     wa = (a / np.linalg.norm(a)) ** 2
     wb = (b / np.linalg.norm(b)) ** 2
@@ -186,8 +190,8 @@ def test_full_device_estimate_accuracy():
         return (jnp.asarray(xn[None] ** 2, jnp.float32),
                 jnp.asarray(keys[None]), jnp.asarray(xn[None], jnp.float32))
 
-    fpa, va, _ = icws_sketch_pallas(*prep(a), m=m, seed=13, interpret=True)
-    fpb, vb, _ = icws_sketch_pallas(*prep(b), m=m, seed=13, interpret=True)
+    fpa, va, _, _ = icws_sketch_pallas(*prep(a), m=m, seed=13, interpret=True)
+    fpb, vb, _, _ = icws_sketch_pallas(*prep(b), m=m, seed=13, interpret=True)
     na = jnp.asarray([np.linalg.norm(a)], jnp.float32)
     nb = jnp.asarray([np.linalg.norm(b)], jnp.float32)
     est = float(ops.icws_estimate(fpa, va, na, fpb, vb, nb)[0])

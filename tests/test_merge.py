@@ -1,0 +1,553 @@
+"""Merge algebra, shard-and-merge lake builds, and the multi-tenant arena.
+
+Pins the contracts of :mod:`repro.data.merge` and the per-family
+``merge_rows`` semantics (:mod:`repro.data.families`):
+
+  * ``split_by_key`` partitions are disjoint, complete, and alias-safe
+    (raw indices folding to one 31-bit key land in one shard).
+  * ``merge_rows`` commutes bitwise for every family; the linear and
+    sampling merges are associative (bitwise tables on integer data;
+    bitwise keys/values with float-ulp taus).  ICWS is deliberately NOT
+    associative -- re-leveling composes approximately -- so no such claim
+    is tested.
+  * Sharded builds match single-stream builds: bitwise tables for cs/jl
+    on integer-valued data, bitwise keys/values (tau to f32 ulp) for
+    ts/ps, and -- for ICWS, whose merge is approximate -- bit-identity
+    between the device ``merge_rows`` and the host ``ICWS.merge`` union
+    oracle, plus preserved top-k rankings on a separated lake.
+  * ``merge_stores`` refuses cross-seed / cross-family / row-misaligned /
+    tenant-misaligned inputs, and merged stores keep their spare capacity
+    rows inert.
+  * The multi-tenant arena serves every tenant bitwise identically to a
+    dedicated single-tenant index -- contiguous (buffer-slice fast path)
+    and fragmented (gather path) tenants alike, on both backends -- and
+    the service front-end scopes duplicate-name checks and ``describe``
+    per tenant.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SparseVec
+from repro.core.icws import ICWS, ICWSSketch
+from repro.core.types import inner
+from repro.data import DatasetSearchIndex
+from repro.data.families import (CSFamily, ICWSFamily, JLFamily, PSFamily,
+                                 TSFamily)
+from repro.data.merge import (build_sharded, merge_stores, partition_by_key,
+                              split_by_key)
+from repro.data.store import CorpusStore
+from repro.serve import SketchSearchService
+
+SEED = 3
+
+
+def _families():
+    # jl m is a power of 4 on purpose: its 1/sqrt(m) post-scale is then a
+    # power of two, so integer-valued shard tables stay exactly
+    # representable and the linearity merge is bitwise (any other m leaves
+    # the scale inexact and shard addition exact only to the final-rounding
+    # ulp -- see the sharded-ingest ranking tests)
+    return {"icws": ICWSFamily(m=64, seed=SEED),
+            "cs": CSFamily(width=16, seed=SEED),
+            "jl": JLFamily(m=64, seed=SEED),
+            "ts": TSFamily(slots=32, seed=SEED),
+            "ps": PSFamily(slots=32, seed=SEED)}
+
+
+def _vec(rng, n=4000, nnz=200, integer=False):
+    idx = np.sort(rng.choice(n, size=nnz, replace=False)).astype(np.int64)
+    if integer:
+        vals = (rng.integers(1, 6, size=nnz)
+                * rng.choice([-1.0, 1.0], size=nnz))
+    else:
+        vals = rng.normal(size=nnz)
+        vals[vals == 0.0] = 1.0
+    return SparseVec.from_pairs(idx, vals, n)
+
+
+def _shard_comps(family, vecs, shards):
+    """Per-shard family components with the [F=1] axis merge_rows expects."""
+    out = []
+    for s in range(shards):
+        parts = [split_by_key(v, shards, s) for v in vecs]
+        comps = family.sketch_rows(parts)
+        out.append(tuple(jnp.asarray(c)[None] for c in comps))
+    return out
+
+
+def _np(comps):
+    return tuple(np.asarray(c) for c in comps)
+
+
+# ---------------------------------------------------------------------------
+# split_by_key: disjoint, complete, alias-safe partitions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shards", [2, 3, 5])
+def test_split_by_key_partitions_disjoint_and_complete(shards):
+    rng = np.random.default_rng(11)
+    v = _vec(rng)
+    parts = [split_by_key(v, shards, s) for s in range(shards)]
+    got_idx = np.concatenate([p.indices for p in parts])
+    got_val = np.concatenate([p.values for p in parts])
+    order = np.argsort(got_idx)
+    assert np.array_equal(got_idx[order], v.indices)          # complete
+    assert np.unique(got_idx).size == got_idx.size            # disjoint
+    np.testing.assert_array_equal(got_val[order], v.values)
+    # partition inner products sum to the full inner product (disjointness)
+    w = _vec(rng)
+    wp = [split_by_key(w, shards, s) for s in range(shards)]
+    total = sum(inner(p, q) for p, q in zip(parts, wp))
+    np.testing.assert_allclose(total, inner(v, w), rtol=1e-12)
+
+
+def test_split_by_key_shard1_and_validation():
+    rng = np.random.default_rng(1)
+    v = _vec(rng)
+    assert split_by_key(v, 1, 0) is v
+    with pytest.raises(ValueError):
+        split_by_key(v, 0, 0)
+    with pytest.raises(ValueError):
+        split_by_key(v, 2, 2)
+    with pytest.raises(ValueError):
+        split_by_key(v, 2, -1)
+
+
+def test_partition_by_key_matches_split_by_key():
+    """The one-pass k-way partition (a producer's routing pass) must equal
+    the per-shard scans element for element, plus shard-1 identity and
+    validation."""
+    rng = np.random.default_rng(17)
+    v = _vec(rng)
+    for shards in (2, 3, 5):
+        parts = partition_by_key(v, shards)
+        assert len(parts) == shards
+        for s, p in enumerate(parts):
+            q = split_by_key(v, shards, s)
+            assert np.array_equal(p.indices, q.indices), (shards, s)
+            np.testing.assert_array_equal(p.values, q.values)
+            assert p.n == q.n
+    assert partition_by_key(v, 1) == (v,)
+    with pytest.raises(ValueError):
+        partition_by_key(v, 0)
+
+
+def test_split_by_key_folds_before_hashing():
+    """Raw indices that alias to one 31-bit folded key (one coordinate to
+    every u32-contract sketch) must land in the same shard."""
+    lo = 12345
+    v = SparseVec.from_pairs(np.array([lo, lo + 2 ** 31], np.int64),
+                             np.array([1.0, 2.0]), 2 ** 32)
+    for shards in (2, 3, 7):
+        sizes = [split_by_key(v, shards, s).nnz for s in range(shards)]
+        assert sorted(sizes) == [0] * (shards - 1) + [2], (shards, sizes)
+
+
+# ---------------------------------------------------------------------------
+# merge_rows algebra
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["icws", "cs", "jl", "ts", "ps"])
+def test_merge_rows_commutes_bitwise(name):
+    family = _families()[name]
+    rng = np.random.default_rng(21)
+    vecs = [_vec(rng) for _ in range(6)]
+    a, b = _shard_comps(family, vecs, 2)
+    ab, ba = _np(family.merge_rows(a, b)), _np(family.merge_rows(b, a))
+    for x, y, spec in zip(ab, ba, family.components):
+        assert np.array_equal(x, y), (name, spec.name)
+
+
+@pytest.mark.parametrize("name", ["cs", "jl"])
+def test_linear_merge_associative_bitwise_on_integer_data(name):
+    family = _families()[name]
+    rng = np.random.default_rng(22)
+    vecs = [_vec(rng, integer=True) for _ in range(5)]
+    a, b, c = _shard_comps(family, vecs, 3)
+    left = family.merge_rows(family.merge_rows(a, b), c)
+    right = family.merge_rows(a, family.merge_rows(b, c))
+    assert np.array_equal(np.asarray(left[0]), np.asarray(right[0]))
+
+
+@pytest.mark.parametrize("name", ["ts", "ps"])
+def test_sampling_merge_associative(name):
+    """Keys and values associate exactly; taus only to f32 rounding (the
+    intermediate merge stores its tau in f32)."""
+    family = _families()[name]
+    rng = np.random.default_rng(23)
+    vecs = [_vec(rng) for _ in range(5)]
+    a, b, c = _shard_comps(family, vecs, 3)
+    kl, vl, tl = _np(family.merge_rows(family.merge_rows(a, b), c))
+    kr, vr, tr = _np(family.merge_rows(a, family.merge_rows(b, c)))
+    assert np.array_equal(kl, kr)
+    assert np.array_equal(vl, vr)
+    np.testing.assert_allclose(tl, tr, rtol=1e-5)
+
+
+def test_sampling_merge_rejects_shared_keys():
+    """Union-merge preconditions disjoint supports -- merging a shard with
+    itself (every kept key on both sides) must refuse, not mis-estimate."""
+    family = _families()["ts"]
+    rng = np.random.default_rng(24)
+    (a,) = _shard_comps(family, [_vec(rng)], 1)
+    with pytest.raises(ValueError, match="disjoint"):
+        family.merge_rows(a, a)
+
+
+# ---------------------------------------------------------------------------
+# sharded builds vs single-stream builds, per family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,shards", [("cs", 2), ("cs", 3),
+                                         ("jl", 2), ("jl", 3)])
+def test_linear_build_sharded_bitwise_on_integer_data(name, shards):
+    family = _families()[name]
+    rng = np.random.default_rng(31)
+    vecs = [_vec(rng, integer=True) for _ in range(7)]
+    single = np.asarray(family.sketch_rows(vecs)[0])
+    store = build_sharded(vecs, family=family, shards=shards)
+    assert len(store) == len(vecs)
+    merged = np.asarray(store.field_arrays()[0])[0]
+    assert np.array_equal(merged, single)
+
+
+@pytest.mark.parametrize("name,shards", [("ts", 2), ("ts", 3),
+                                         ("ps", 2), ("ps", 3)])
+def test_sampling_build_sharded_matches_single_stream(name, shards):
+    """Union re-subsampling reproduces the build-once sample: keys and
+    values bitwise; taus recompute from f32-stored inputs, so they agree
+    to f32 rounding only."""
+    family = _families()[name]
+    rng = np.random.default_rng(32)
+    vecs = [_vec(rng) for _ in range(7)]
+    k1, v1, t1 = _np(family.sketch_rows(vecs))
+    store = build_sharded(vecs, family=family, shards=shards)
+    k2, v2, t2 = (np.asarray(c)[0] for c in store.field_arrays())
+    assert np.array_equal(k1, k2)
+    assert np.array_equal(v1, v2)
+    np.testing.assert_allclose(t1, t2, rtol=1e-5)
+
+
+def test_icws_device_merge_matches_host_union_oracle():
+    """The device ``ICWSFamily.merge_rows`` and the host ``ICWS.merge``
+    union oracle are bit-twins on identical inputs: same fingerprints and
+    argkeys, values to f32 rounding.  (The merge itself is approximate
+    relative to a build-once sketch; THIS identity is the correctness
+    contract.)"""
+    family = _families()["icws"]
+    oracle = ICWS(m=family.m, seed=SEED)
+    rng = np.random.default_rng(33)
+    vecs = [_vec(rng) for _ in range(5)]
+    a, b = _shard_comps(family, vecs, 2)
+    fp_m, val_m, norm_m, key_m = _np(family.merge_rows(a, b))
+    (fpa, va, na, ka), (fpb, vb, nb, kb) = _np(a), _np(b)
+    for i in range(len(vecs)):
+        sa = ICWSSketch(fingerprints=fpa[0, i],
+                        values=va[0, i].astype(np.float64),
+                        norm=float(na[0, i]), argkeys=ka[0, i])
+        sb = ICWSSketch(fingerprints=fpb[0, i],
+                        values=vb[0, i].astype(np.float64),
+                        norm=float(nb[0, i]), argkeys=kb[0, i])
+        host = oracle.merge(sa, sb)
+        assert np.array_equal(host.fingerprints, fp_m[0, i]), i
+        assert np.array_equal(host.argkeys, key_m[0, i]), i
+        np.testing.assert_allclose(host.values, val_m[0, i],
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(host.norm, norm_m[0, i], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# merge_stores validation + merged-store invariants
+# ---------------------------------------------------------------------------
+def _ts_store(family, vecs):
+    store = CorpusStore(family=family, fields=1)
+    store.append(*family.sketch_rows(vecs))
+    return store
+
+
+def test_merge_stores_rejects_cross_seed():
+    """Satellite regression: per-family seeds plumb through to the merge,
+    and a cross-seed merge -- whose coordinated hash streams do NOT line
+    up -- must refuse loudly."""
+    rng = np.random.default_rng(41)
+    vecs = [_vec(rng) for _ in range(3)]
+    a = _ts_store(TSFamily(slots=32, seed=1), vecs)
+    b = _ts_store(TSFamily(slots=32, seed=2), vecs)
+    with pytest.raises(ValueError, match="seed"):
+        merge_stores(a, b)
+
+
+def test_merge_stores_rejects_misaligned_inputs():
+    rng = np.random.default_rng(42)
+    fam = TSFamily(slots=32, seed=SEED)
+    vecs = [_vec(rng) for _ in range(4)]
+    a = _ts_store(fam, vecs)
+    with pytest.raises(ValueError, match="row-aligned"):
+        merge_stores(a, _ts_store(fam, vecs[:2]))
+    with pytest.raises(ValueError, match="famil"):
+        merge_stores(a, _ts_store(TSFamily(slots=16, seed=SEED), vecs))
+    # tenant tables must agree row for row (disjoint shard partitions, so
+    # only the tenant check can fire)
+    lo = [split_by_key(v, 2, 0) for v in vecs]
+    hi = [split_by_key(v, 2, 1) for v in vecs]
+    c = CorpusStore(family=fam, fields=1)
+    c.append(*fam.sketch_rows(lo), tenant="acme")
+    with pytest.raises(ValueError, match="tenant"):
+        merge_stores(a, c)
+    # and identical tenant tables survive the merge verbatim
+    d = CorpusStore(family=fam, fields=1)
+    d.append(*fam.sketch_rows(hi), tenant="acme")
+    m = merge_stores(c, d)
+    assert m.tenants() == ("acme",)
+    assert m.tenant_ranges("acme") == ((0, len(vecs)),)
+
+
+@pytest.mark.parametrize("name", ["icws", "cs", "ts"])
+def test_merged_store_spare_rows_stay_inert(name):
+    """A merged store is a first-class store: spare capacity keeps the
+    family fills (so query launches over full buffers stay exact) and
+    further appends work."""
+    family = _families()[name]
+    rng = np.random.default_rng(43)
+    vecs = [_vec(rng) for _ in range(5)]
+    store = build_sharded(vecs, family=family, shards=2)
+    assert store.capacity > len(store)
+    for buf, spec in zip(store.buffers(), family.components):
+        spare = np.asarray(buf[:, len(store):])
+        assert np.all(spare == spec.fill), (name, spec.name)
+    store.append(*family.sketch_rows([_vec(rng)]))
+    assert len(store) == 6
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: sharded lake builds preserve rankings
+# ---------------------------------------------------------------------------
+def _separated_lake(rng, integer=False):
+    """A lake the ranking cannot confuse: near-duplicates of the query
+    signal vs disjoint-support noise tables (the ICWS merge is approximate,
+    so ranking invariance is only promised on separated lakes)."""
+    keys = np.arange(500)
+    if integer:
+        # strictly integer, strictly non-zero values everywhere (zeros get
+        # nudged to 1e-9 by vectorize, which would de-integerize the lake):
+        # shard tables then sum exactly in f32
+        signal = (rng.integers(1, 9, size=500)
+                  * rng.choice([-1.0, 1.0], size=500))
+        jitter = lambda: signal + rng.integers(10, 13, size=500)  # noqa: E731
+        noise = lambda: (rng.integers(1, 9, size=500)             # noqa: E731
+                         * rng.choice([-1.0, 1.0], size=500))
+    else:
+        signal = rng.normal(size=500)
+        jitter = lambda: signal + 0.01 * rng.normal(size=500)  # noqa: E731
+        noise = lambda: rng.normal(size=500)                   # noqa: E731
+    tables = [(f"dup{i}", keys, jitter()) for i in range(3)]
+    tables += [(f"far{i}", np.arange(9000 + 600 * i, 9500 + 600 * i),
+                noise()) for i in range(4)]
+    return tables, [(keys, signal),
+                    (np.arange(250, 750), rng.normal(size=500))]
+
+
+def _linear_lake_indexes(name):
+    rng = np.random.default_rng(51)
+    tables, queries = _separated_lake(rng, integer=True)
+
+    def build(sharded):
+        idx = DatasetSearchIndex(m=128, seed=1, keep_host_oracle=False,
+                                 family=name)
+        if sharded:
+            idx.add_tables_sharded(tables, shards=3)
+        else:
+            for nm, k, v in tables:
+                idx.add_table(nm, k, v)
+        return idx
+
+    return build(False), build(True), queries
+
+
+def test_sharded_ingest_rankings_bitwise_cs():
+    single, sharded, queries = _linear_lake_indexes("cs")
+    # integer-valued lake => shard tables sum exactly (CountSketch buckets
+    # are unscaled signed sums) => bitwise estimates => identical
+    # SearchResults, every statistic included
+    assert (single.query_batch(queries, top_k=4, min_join=20)
+            == sharded.query_batch(queries, top_k=4, min_join=20))
+
+
+def test_sharded_ingest_rankings_jl_exact_to_scale_ulp():
+    """JL tables carry a 1/sqrt(m) post-scale; with the storage-matched m
+    (193 here) the scale is not a binary fraction, so shard addition is
+    exact only to the final-rounding ulp of each cell.  Rankings and every
+    statistic must still agree to f32 relative tolerance (the bitwise
+    linearity itself is pinned at power-of-4 m in
+    test_linear_build_sharded_bitwise_on_integer_data)."""
+    single, sharded, queries = _linear_lake_indexes("jl")
+    for res_s, res_h in zip(single.query_batch(queries, top_k=4, min_join=20),
+                            sharded.query_batch(queries, top_k=4, min_join=20)):
+        assert [r.name for r in res_s] == [r.name for r in res_h]
+        for a, b in zip(res_s, res_h):
+            np.testing.assert_allclose(
+                [a.join_size, a.sum_b, a.mean_b, a.corr],
+                [b.join_size, b.sum_b, b.mean_b, b.corr],
+                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["icws", "ts", "ps"])
+def test_sharded_ingest_rankings_topk_set(name):
+    rng = np.random.default_rng(52)
+    tables, queries = _separated_lake(rng)
+
+    def build(sharded):
+        idx = DatasetSearchIndex(m=256, seed=1, keep_host_oracle=False,
+                                 family=name)
+        if sharded:
+            idx.add_tables_sharded(tables, shards=3)
+        else:
+            for nm, k, v in tables:
+                idx.add_table(nm, k, v)
+        return idx
+
+    single, sharded = build(False), build(True)
+    for res_s, res_h in zip(single.query_batch(queries, top_k=3, min_join=20),
+                            sharded.query_batch(queries, top_k=3, min_join=20)):
+        assert {r.name for r in res_s} == {r.name for r in res_h}, name
+    # the signal query must surface the near-duplicates in both builds
+    top = sharded.query(*queries[0], top_k=3, min_join=20)
+    assert {r.name for r in top} == {"dup0", "dup1", "dup2"}, name
+
+
+def test_add_tables_sharded_requires_device_corpus():
+    idx = DatasetSearchIndex(m=64, seed=0, backend="host")
+    with pytest.raises(ValueError, match="device corpus"):
+        idx.add_tables_sharded([("t", np.arange(8), np.ones(8))], shards=2)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant arena == dedicated single-tenant stores, bitwise
+# ---------------------------------------------------------------------------
+def _tenant_tables(rng, prefix, count=3):
+    keys = np.arange(400)
+    return [(f"{prefix}{i}", keys,
+             rng.normal(size=400) + (0.5 * i) * np.sin(keys / 7.0))
+            for i in range(count)]
+
+
+def test_tenant_queries_bitwise_equal_dedicated_index():
+    rng = np.random.default_rng(61)
+    acme = _tenant_tables(rng, "acme")
+    globex = _tenant_tables(rng, "globex")
+    initech = _tenant_tables(rng, "initech")
+
+    shared = DatasetSearchIndex(m=128, seed=2)
+    # interleave acme/globex appends -> both tenants fragment across the
+    # arena (gather path); initech appends back-to-back -> one contiguous
+    # range (buffer-slice fast path)
+    for (na, ka, va), (ng, kg, vg) in zip(acme, globex):
+        shared.add_table(na, ka, va, tenant="acme")
+        shared.add_table(ng, kg, vg, tenant="globex")
+    for nm, k, v in initech:
+        shared.add_table(nm, k, v, tenant="initech")
+
+    assert len(shared.store.tenant_ranges("acme")) > 1
+    assert len(shared.store.tenant_ranges("globex")) > 1
+    assert shared.store.tenant_ranges("initech") == ((6, 9),)
+    assert shared.store.tenant_size("acme") == 3
+    assert set(shared.tenants()) == {"acme", "globex", "initech"}
+
+    queries = [(np.arange(400), rng.normal(size=400)),
+               (np.arange(100, 500), rng.normal(size=400))]
+    for tenant, tabs in (("acme", acme), ("globex", globex),
+                         ("initech", initech)):
+        dedicated = DatasetSearchIndex(m=128, seed=2)
+        for nm, k, v in tabs:
+            dedicated.add_table(nm, k, v)
+        for k, v in queries:
+            # device path (gather or slice, depending on the tenant)
+            assert (shared.query(k, v, top_k=3, min_join=5, tenant=tenant)
+                    == dedicated.query(k, v, top_k=3, min_join=5)), tenant
+            # host oracle path scopes to the same tenant tables
+            assert (shared.query(k, v, top_k=3, min_join=5, tenant=tenant,
+                                 backend="host")
+                    == dedicated.query(k, v, top_k=3, min_join=5,
+                                       backend="host")), tenant
+        assert (shared.query_batch(queries, top_k=3, min_join=5,
+                                   tenant=tenant)
+                == dedicated.query_batch(queries, top_k=3, min_join=5))
+
+    with pytest.raises(KeyError, match="unknown tenant"):
+        shared.query(np.arange(10), np.ones(10), tenant="nope")
+    with pytest.raises(KeyError, match="unknown tenant"):
+        shared.store.tenant_ranges("nope")
+
+
+def test_store_tenant_accounting():
+    fam = TSFamily(slots=32, seed=SEED)
+    rng = np.random.default_rng(62)
+    store = CorpusStore(family=fam, fields=1)
+    store.append(*fam.sketch_rows([_vec(rng) for _ in range(3)]), tenant="a")
+    store.append(*fam.sketch_rows([_vec(rng)]))              # tenant-less
+    store.append(*fam.sketch_rows([_vec(rng) for _ in range(2)]), tenant="a")
+    store.append(*fam.sketch_rows([_vec(rng)]), tenant="b")
+    assert store.tenants() == ("a", "b")
+    assert store.tenant_ranges("a") == ((0, 3), (4, 6))
+    assert np.array_equal(store.tenant_rows("a"), [0, 1, 2, 4, 5])
+    assert store.tenant_size("b") == 1
+    acct = store.describe_tenants()
+    assert acct["a"]["rows"] == 5.0 and acct["a"]["ranges"] == 2.0
+    assert acct["a"]["storage_doubles"] == pytest.approx(
+        5 * fam.storage_doubles_per_row())
+    # back-to-back same-tenant appends coalesce into one range
+    store.append(*fam.sketch_rows([_vec(rng)]), tenant="b")
+    assert store.tenant_ranges("b") == ((6, 8),)
+
+
+def test_service_tenancy_end_to_end():
+    rng = np.random.default_rng(63)
+    svc = SketchSearchService(m=128, seed=2, keep_host_oracle=False)
+    keys = np.arange(300)
+    svc.ingest("sales", keys, rng.normal(size=300), tenant="acme")
+    # two tenants may each own a table called "sales"...
+    svc.ingest("sales", keys, rng.normal(size=300), tenant="globex")
+    svc.ingest("костs", keys, rng.normal(size=300), tenant="acme")
+    # ...but within one tenant the name is taken
+    with pytest.raises(ValueError, match="acme"):
+        svc.ingest("sales", keys, rng.normal(size=300), tenant="acme")
+    # sharded ingest shares the per-tenant duplicate check (and catches
+    # within-batch duplicates)
+    with pytest.raises(ValueError, match="sales"):
+        svc.ingest_many_sharded([("sales", keys, rng.normal(size=300))],
+                                shards=2, tenant="globex")
+    with pytest.raises(ValueError, match="fresh"):
+        svc.ingest_many_sharded(
+            [("fresh", keys, rng.normal(size=300)),
+             ("fresh", keys, rng.normal(size=300))], shards=2, tenant="acme")
+    svc.ingest_many_sharded([("lake0", keys, rng.normal(size=300)),
+                             ("lake1", keys, rng.normal(size=300))],
+                            shards=2, tenant="globex")
+
+    q = (keys, rng.normal(size=300))
+    names = {r.name for r in svc.search(*q, top_k=10, min_join=5,
+                                        tenant="globex")}
+    assert names <= {"sales", "lake0", "lake1"}
+    assert [r.name for batch in
+            svc.search_batch([q], top_k=10, min_join=5, tenant="acme")
+            for r in batch if r.name == "sales"]
+
+    d = svc.describe(tenant="globex")
+    assert d["tenant"] == "globex" and d["tables"] == 3.0
+    assert d["corpus_rows"] == 3.0 and d["row_ranges"] >= 1.0
+    assert d["storage_doubles"] > 0
+    d_all = svc.describe()
+    assert d_all["tenants"] == 2.0 and d_all["tables"] == 5.0
+    with pytest.raises(KeyError, match="unknown tenant"):
+        svc.describe(tenant="nope")
+
+
+def test_sharded_ingest_into_tenant_is_contiguous():
+    """add_tables_sharded appends the whole merged batch in one write, so
+    the tenant stays single-range and serves off the slice fast path."""
+    rng = np.random.default_rng(64)
+    idx = DatasetSearchIndex(m=128, seed=2, keep_host_oracle=False)
+    idx.add_tables_sharded(_tenant_tables(rng, "t"), shards=2,
+                           tenant="acme")
+    assert idx.store.tenant_ranges("acme") == ((0, 3),)
+    res = idx.query(np.arange(400), rng.normal(size=400), top_k=3,
+                    min_join=5, tenant="acme")
+    assert {r.name for r in res} <= {"t0", "t1", "t2"}

@@ -70,7 +70,7 @@ _SCRIPT = textwrap.dedent("""
     assert np.array_equal(e0, e1)
     # the sharded store's buffers are ALLOCATED across the mesh (corpus
     # memory spreads over devices; queries never redistribute the corpus)
-    fpb, _, _ = shard._store.buffers()
+    fpb, _, _, _ = shard._store.buffers()
     assert len(fpb.sharding.device_set) == 2, fpb.sharding
     assert shard._store.capacity % 2 == 0
 

@@ -21,7 +21,8 @@ def _rows(rng, fields, b, m):
     fp = rng.integers(0, 100, size=(fields, b, m)).astype(np.int32)
     val = rng.normal(size=(fields, b, m)).astype(np.float32)
     norm = (rng.random((fields, b)) + 0.1).astype(np.float32)
-    return fp, val, norm
+    key = rng.integers(0, 2 ** 31 - 1, size=(fields, b, m)).astype(np.int32)
+    return fp, val, norm, key
 
 
 # ---------------------------------------------------------------------------
@@ -36,16 +37,16 @@ def test_interleaved_appends_match_one_shot(fields, device, sizes, seed):
     appends crossing capacity-doubling boundaries == build-once ingest."""
     rng = np.random.default_rng(seed)
     m, total = 16, sum(sizes)
-    fp, val, norm = _rows(rng, fields, total, m)
+    rows = _rows(rng, fields, total, m)
 
     one = CorpusStore(m=m, fields=fields, min_capacity=2)
-    one.append(fp, val, norm)
+    one.append(*rows)
 
     # min_capacity=2 forces several capacity doublings mid-sequence
     inc = CorpusStore(m=m, fields=fields, min_capacity=2)
     off = 0
     for b in sizes:
-        chunk = (fp[:, off:off + b], val[:, off:off + b], norm[:, off:off + b])
+        chunk = tuple(r[:, off:off + b] for r in rows)
         if device:
             chunk = tuple(jnp.asarray(c) for c in chunk)
         inc.append(*chunk)
@@ -82,11 +83,11 @@ def test_store_row_multiple_keeps_capacity_divisible():
 
 def test_store_single_field_accepts_2d_rows():
     rng = np.random.default_rng(1)
-    fp, val, norm = _rows(rng, 1, 5, 8)
+    rows = _rows(rng, 1, 5, 8)
     flat = CorpusStore(m=8, fields=1)
-    flat.append(fp[0], val[0], norm[0])            # [b, m] / [b]
+    flat.append(*(r[0] for r in rows))             # [b, m] / [b]
     stacked = CorpusStore(m=8, fields=1)
-    stacked.append(fp, val, norm)                  # [1, b, m] / [1, b]
+    stacked.append(*rows)                          # [1, b, m] / [1, b]
     for a, b in zip(flat.arrays(), stacked.arrays()):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
@@ -96,18 +97,22 @@ def test_store_single_field_accepts_2d_rows():
 # ---------------------------------------------------------------------------
 def test_store_append_validates_all_components():
     rng = np.random.default_rng(2)
-    fp, val, norm = _rows(rng, 3, 4, 8)
+    fp, val, norm, key = _rows(rng, 3, 4, 8)
     store = CorpusStore(m=8, fields=3)
     with pytest.raises(ValueError):
-        store.append(fp, val[:, :3], norm)         # mismatched val rows
+        store.append(fp, val[:, :3], norm, key)    # mismatched val rows
     with pytest.raises(ValueError):
-        store.append(fp, val, norm[:, :3])         # mismatched norm rows
+        store.append(fp, val, norm[:, :3], key)    # mismatched norm rows
     with pytest.raises(ValueError):
-        store.append(fp[:2], val[:2], norm[:2])    # wrong field count
+        store.append(fp, val, norm, key[:, :3])    # mismatched argkey rows
     with pytest.raises(ValueError):
-        store.append(fp[:, :, :4], val[:, :, :4], norm)   # wrong m
+        store.append(fp, val, norm)                # missing a component
+    with pytest.raises(ValueError):
+        store.append(fp[:2], val[:2], norm[:2], key[:2])  # wrong field count
+    with pytest.raises(ValueError):
+        store.append(fp[:, :, :4], val[:, :, :4], norm, key)   # wrong m
     assert len(store) == 0
-    store.append(fp, val, norm)
+    store.append(fp, val, norm, key)
     assert len(store) == 4
 
 
@@ -118,7 +123,7 @@ def test_store_empty_raises_and_zero_rows_noop():
     with pytest.raises(ValueError):
         store.buffers()
     store.append(np.zeros((1, 0, 8), np.int32), np.zeros((1, 0, 8)),
-                 np.zeros((1, 0)))
+                 np.zeros((1, 0)), np.zeros((1, 0, 8), np.int32))
     assert len(store) == 0
 
 
@@ -131,24 +136,25 @@ def test_spare_capacity_is_inert_in_estimates():
     skip materializing an exact-size corpus copy."""
     rng = np.random.default_rng(7)
     m, P = 32, 5
-    fp, val, norm = _rows(rng, 1, P, m)
+    rows = _rows(rng, 1, P, m)
     store = CorpusStore(m=m, fields=1, min_capacity=16)   # capacity 16 > P=5
-    store.append(fp, val, norm)
+    store.append(*rows)
     assert store.capacity > len(store)
-    fpb, vb, nb = store.buffers()
+    fpb, vb, nb, _ = store.buffers()
     assert np.all(np.asarray(fpb)[0, P:] == PAD_FP)
 
     fq = jnp.asarray(rng.integers(0, 100, size=(2, m)).astype(np.int32))
     vq = jnp.asarray(rng.normal(size=(2, m)).astype(np.float32))
     nq = jnp.ones((2,), jnp.float32)
 
-    exact = ops.icws_estimate_many(fq, vq, nq, *store.arrays())
+    exact = ops.icws_estimate_many(fq, vq, nq, *store.arrays()[:3])
     padded = ops.icws_estimate_many_stacked(fq, vq, nq, fpb, vb, nb)
     assert padded.shape == (2, store.capacity)
     assert np.all(np.asarray(padded)[:, P:] == 0.0)       # spare rows: zero
     assert np.array_equal(np.asarray(padded)[:, :P], np.asarray(exact))
 
-    one = ops.icws_estimate_corpus(fq[:1], vq[:1], nq[0], *store.arrays())
+    one = ops.icws_estimate_corpus(fq[:1], vq[:1], nq[0],
+                                   *store.arrays()[:3])
     one_p = ops.icws_estimate_corpus_stacked(fq[:1], vq[:1], nq[0],
                                              fpb, vb, nb)
     assert np.array_equal(np.asarray(one_p)[:P], np.asarray(one))
