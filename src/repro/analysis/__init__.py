@@ -1,0 +1,43 @@
+"""``repro.analysis``: the repo's invariants as machine-checked lint rules.
+
+The accuracy story of this reproduction (WMH beating CountSketch/JL on
+sparse vectors, arXiv:2301.05811; TS/PS beating both, arXiv:2309.16157)
+rests on *implementation* invariants that no single runtime test sees
+whole: host oracles must be bit-twins of the Pallas kernels, u32 hash
+streams must never collide across the five sketch families, every serving
+path must stay behind ``repro/compat.py``, and kernel BlockSpecs must fit
+VMEM.  This package turns those standing invariants into an AST-based
+static-analysis pass -- pure stdlib, **no jax import**, <2s on the whole
+repo -- runnable anywhere (including a CI job with nothing installed):
+
+    python -m repro.analysis --strict
+
+Rule groups (see ``repro.analysis.findings.RULES`` or ``--list-rules``):
+
+* ``SR*`` stream-registry  -- every u32 salt stream is a named ``*_STREAM``
+  constant in ``kernels/common.py`` with an identically named, identically
+  valued host twin in ``core/``; IDs are globally unique; call sites never
+  inline literals.  Generates the ``STREAMS.md`` registry table.
+* ``CB*`` compat-boundary  -- version-gated jax APIs (``jax.shard_map``,
+  ``jax.sharding.AxisType``, ``jax.make_mesh``) only inside
+  ``repro/compat.py``; no hardcoded ``interpret=True`` call sites in src.
+* ``PB*`` pallas-budget    -- per-kernel VMEM block footprint statically
+  bounded from BlockSpec shapes x dtypes against a configurable budget;
+  emits the per-kernel report the block-size autotuner consumes.
+* ``FC*`` family-contract  -- every name in ``FAMILY_NAMES`` has a complete
+  ``SketchFamily`` implementation and appears in the parameterized
+  test/bench sweeps, so a sixth family cannot be half-registered.
+* ``BL*`` baseline hygiene -- stale allowlist entries are themselves
+  findings, keeping ``analysis/baseline.toml`` honest and diffable.
+
+True exceptions are pinned in ``baseline.toml`` next to this module, one
+entry per finding with a written justification.
+"""
+from __future__ import annotations
+
+from .config import Config, load_baseline
+from .engine import AnalysisResult, run
+from .findings import RULES, Finding
+
+__all__ = ["AnalysisResult", "Config", "Finding", "RULES", "load_baseline",
+           "run"]

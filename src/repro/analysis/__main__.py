@@ -1,0 +1,118 @@
+"""CLI entry point: ``python -m repro.analysis [--strict] [...]``.
+
+Exit codes: 0 clean (or report-only mode), 1 actionable findings under
+``--strict``, 2 configuration error (bad baseline, bad root).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from .config import BaselineError, Config
+from .engine import STREAMS_MD, run
+from .findings import RULES
+
+
+def _find_root(start: pathlib.Path) -> pathlib.Path:
+    """Walk up from ``start`` to the checkout root (the dir holding src/)."""
+    p = start.resolve()
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    return p
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static invariant checks for the repro codebase "
+                    "(stream registry, compat boundary, pallas VMEM "
+                    "budget, family contract). Pure stdlib; no jax.")
+    ap.add_argument("--root", type=pathlib.Path, default=None,
+                    help="checkout root (default: auto-detect upward from "
+                         "cwd)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when non-baselined findings exist")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule-ID prefixes to run "
+                         "(e.g. SR,CB); default all")
+    ap.add_argument("--baseline", type=pathlib.Path, default=None,
+                    help="override the baseline.toml allowlist path")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="per-pallas_call block I/O budget in bytes "
+                         "(default 2 MiB)")
+    ap.add_argument("--write-streams", action="store_true",
+                    help="(re)write STREAMS.md at the root and exit")
+    ap.add_argument("--budget-report", type=pathlib.Path, default=None,
+                    help="write the per-kernel VMEM budget report (JSON)")
+    ap.add_argument("--json", dest="json_out", type=pathlib.Path,
+                    default=None, help="write findings as JSON")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(RULES):
+            print(f"{rule}  {RULES[rule]}")
+        return 0
+
+    root = _find_root(args.root or pathlib.Path.cwd())
+    if not (root / "src" / "repro").is_dir():
+        print(f"error: {root} does not look like the repo checkout "
+              f"(no src/repro/)", file=sys.stderr)
+        return 2
+
+    cfg = Config(root=root, baseline_path=args.baseline)
+    if args.vmem_budget is not None:
+        cfg.vmem_block_budget = args.vmem_budget
+    if args.rules:
+        cfg.rules = tuple(p.strip() for p in args.rules.split(",") if p.strip())
+
+    t0 = time.monotonic()
+    try:
+        result = run(cfg)
+    except BaselineError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    dt = time.monotonic() - t0
+
+    if args.write_streams:
+        (root / STREAMS_MD).write_text(result.streams_md)
+        print(f"wrote {root / STREAMS_MD}")
+        # fall through: still report findings (a fresh STREAMS.md clears
+        # SR006 on the next run, not this one)
+
+    if args.budget_report is not None:
+        args.budget_report.parent.mkdir(parents=True, exist_ok=True)
+        args.budget_report.write_text(
+            json.dumps(result.budget_report, indent=2) + "\n")
+        print(f"wrote {args.budget_report} "
+              f"({len(result.budget_report)} pallas_call sites)")
+
+    if args.json_out is not None:
+        payload = {
+            "findings": [vars(f) for f in result.findings],
+            "baselined": [{**vars(f), "reason": e.reason}
+                          for f, e in result.baselined],
+            "budget_report": result.budget_report,
+        }
+        args.json_out.parent.mkdir(parents=True, exist_ok=True)
+        args.json_out.write_text(json.dumps(payload, indent=2) + "\n")
+
+    for f in result.findings:
+        print(f.format())
+    n_base = len(result.baselined)
+    n_sites = len(result.budget_report)
+    status = "clean" if result.ok else f"{len(result.findings)} finding(s)"
+    print(f"repro.analysis: {status}, {n_base} baselined, "
+          f"{n_sites} pallas_call sites budgeted, {dt:.2f}s")
+    if args.strict and not result.ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,179 @@
+"""Shared AST plumbing for the analysis checkers.
+
+A :class:`Repo` parses every ``.py`` file once and hands the cached
+:class:`ParsedFile` objects to each checker, so the whole pass stays well
+under the 2s budget.  Helpers here are deliberately conservative: when a
+value cannot be resolved statically they return ``None`` and let the
+checker decide whether that is a finding (pallas-budget) or a pass
+(everything else).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class ParsedFile:
+    path: pathlib.Path       # absolute
+    rel: str                 # repo-relative, posix separators
+    tree: ast.AST
+    source: str
+
+
+class Repo:
+    """Parse-once cache over a file tree."""
+
+    def __init__(self, root: pathlib.Path, scan_dirs: Iterable[str]):
+        self.root = pathlib.Path(root).resolve()
+        self.files: List[ParsedFile] = []
+        seen = set()
+        for d in scan_dirs:
+            base = self.root / d
+            if not base.exists():
+                continue
+            paths = [base] if base.is_file() else sorted(base.rglob("*.py"))
+            for p in paths:
+                if p.suffix != ".py" or p in seen:
+                    continue
+                seen.add(p)
+                try:
+                    source = p.read_text()
+                    tree = ast.parse(source, filename=str(p))
+                except (SyntaxError, UnicodeDecodeError):
+                    continue    # not ours to lint (e.g. fixture snippets)
+                rel = p.relative_to(self.root).as_posix()
+                self.files.append(ParsedFile(p, rel, tree, source))
+
+    def get(self, rel: str) -> Optional[ParsedFile]:
+        for f in self.files:
+            if f.rel == rel:
+                return f
+        return None
+
+    def matching(self, suffix: str) -> List[ParsedFile]:
+        return [f for f in self.files if f.rel.endswith(suffix)]
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.sharding.AxisType`` attribute chain -> its dotted string."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def eval_int(node: ast.AST, env: Dict[str, int]) -> Optional[int]:
+    """Fold an expression to an int given a name environment, else None.
+
+    Supports literals, names, unary +/-, and the + - * // arithmetic that
+    shows up in block-size expressions.  ``min``/``max`` calls fold when
+    every argument folds (used for clamped block sizes -- the result is
+    exact, and for budget purposes a declared default is an upper bound
+    anyway).
+    """
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.USub, ast.UAdd)):
+        v = eval_int(node.operand, env)
+        if v is None:
+            return None
+        return -v if isinstance(node.op, ast.USub) else v
+    if isinstance(node, ast.BinOp):
+        a, b = eval_int(node.left, env), eval_int(node.right, env)
+        if a is None or b is None:
+            return None
+        if isinstance(node.op, ast.Add):
+            return a + b
+        if isinstance(node.op, ast.Sub):
+            return a - b
+        if isinstance(node.op, ast.Mult):
+            return a * b
+        if isinstance(node.op, ast.FloorDiv) and b != 0:
+            return a // b
+        return None
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("min", "max") and not node.keywords:
+        vals = [eval_int(a, env) for a in node.args]
+        if any(v is None for v in vals) or not vals:
+            return None
+        return (min if node.func.id == "min" else max)(vals)
+    return None
+
+
+def module_int_env(tree: ast.AST) -> Dict[str, int]:
+    """Top-level ``NAME = <int expr>`` constants of a module."""
+    env: Dict[str, int] = {}
+    for stmt in getattr(tree, "body", []):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            v = eval_int(stmt.value, env)
+            if v is not None:
+                env[stmt.targets[0].id] = v
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name) \
+                and stmt.value is not None:
+            v = eval_int(stmt.value, env)
+            if v is not None:
+                env[stmt.target.id] = v
+    return env
+
+
+def function_default_env(fn: ast.FunctionDef) -> Dict[str, int]:
+    """Int-valued parameter defaults of a function (``bq=8, bm=128, ...``)."""
+    env: Dict[str, int] = {}
+    a = fn.args
+    pos = a.posonlyargs + a.args
+    for arg, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        v = eval_int(default, {})
+        if v is not None:
+            env[arg.arg] = v
+    for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+        if default is not None:
+            v = eval_int(default, {})
+            if v is not None:
+                env[arg.arg] = v
+    return env
+
+
+def enclosing_functions(tree: ast.AST) -> Dict[ast.AST, ast.FunctionDef]:
+    """Map every AST node to its innermost enclosing function def."""
+    owner: Dict[ast.AST, ast.FunctionDef] = {}
+
+    def visit(node: ast.AST, current: Optional[ast.FunctionDef]):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            current = node
+        for child in ast.iter_child_nodes(node):
+            if current is not None:
+                owner[child] = current
+            visit(child, current)
+
+    visit(tree, None)
+    return owner
+
+
+def int_assignments(tree: ast.AST, names: Tuple[str, ...] = ()) -> List[Tuple[str, int, int]]:
+    """All ``NAME = <int literal>`` assignments anywhere in a module.
+
+    Returns ``(name, value, lineno)`` triples; used by the stream-registry
+    checker, which must see constants wherever they are defined.
+    """
+    out: List[Tuple[str, int, int]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if names and not any(name.endswith(s) for s in names):
+                continue
+            v = eval_int(node.value, {})
+            if v is not None:
+                out.append((name, v, node.lineno))
+    return out

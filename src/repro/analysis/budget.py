@@ -1,0 +1,143 @@
+"""PB* pallas-budget checker: static VMEM block accounting per kernel.
+
+Every ``pl.pallas_call`` site tiles its operands through BlockSpecs; the
+blocks (x2 for the compiler's double buffering) must fit the ~16 MiB/core
+VMEM.  This checker resolves each BlockSpec's block shape from the
+enclosing function's parameter defaults (the ``bq=8, bp=64, bm=128``
+convention) plus module-level int constants, charges 4 bytes/element
+(f32/i32 -- every repo dtype), and compares the summed block I/O per call
+site against ``Config.vmem_block_budget``.  Shapes that cannot be bounded
+statically (runtime-dependent dims) are PB002 findings: either refactor to
+a declared default or baseline with a written justification.
+
+The per-kernel report this emits (``--budget-report``) is the input the
+planned block-size autotuner (ROADMAP item) consumes: it already knows
+every call site, its tunable block parameters, and its headroom.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from .astutil import (Repo, dotted_name, enclosing_functions, eval_int,
+                      function_default_env, module_int_env)
+from .config import Config
+from .findings import Finding
+
+_BYTES_PER_ELEM = 4    # f32 / i32 / u32: every dtype the kernels move
+
+
+def _blockspec_calls(node: ast.AST) -> Optional[List[Tuple[ast.Call, int]]]:
+    """Flatten an in_specs/out_specs expression into (BlockSpec call, count)
+    pairs.  Handles single specs, lists/tuples, and ``[spec] * N``."""
+    if isinstance(node, ast.Call):
+        callee = dotted_name(node.func)
+        if callee and callee.split(".")[-1] == "BlockSpec":
+            return [(node, 1)]
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        out: List[Tuple[ast.Call, int]] = []
+        for elt in node.elts:
+            sub = _blockspec_calls(elt)
+            if sub is None:
+                return None
+            out.extend(sub)
+        return out
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        for specs, count in ((node.left, node.right), (node.right, node.left)):
+            sub = _blockspec_calls(specs)
+            n = eval_int(count, {})
+            if sub is not None and n is not None:
+                return [(call, c * n) for call, c in sub]
+        return None
+    return None
+
+
+def _block_shape(call: ast.Call) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "block_shape":
+            return kw.value
+    if call.args:
+        return call.args[0]
+    return None
+
+
+def check(repo: Repo, cfg: Config) -> Tuple[List[Finding], List[Dict]]:
+    findings: List[Finding] = []
+    report: List[Dict] = []
+    for pf in repo.files:
+        if not pf.rel.startswith("src/"):
+            continue
+        if "pallas_call" not in pf.source:
+            continue
+        owners = enclosing_functions(pf.tree)
+        mod_env = module_int_env(pf.tree)
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if not callee or callee.split(".")[-1] != "pallas_call":
+                continue
+            fn = owners.get(node)
+            env = dict(mod_env)
+            if fn is not None:
+                env.update(function_default_env(fn))
+            kernel = fn.name if fn is not None else "<module>"
+
+            blocks: List[Dict] = []
+            unresolved: List[str] = []
+            for kw in node.keywords:
+                if kw.arg not in ("in_specs", "out_specs"):
+                    continue
+                specs = _blockspec_calls(kw.value)
+                if specs is None:
+                    unresolved.append(
+                        f"{kw.arg}: expression not statically recognizable")
+                    continue
+                for i, (spec, count) in enumerate(specs):
+                    shape_node = _block_shape(spec)
+                    if not isinstance(shape_node, (ast.Tuple, ast.List)):
+                        unresolved.append(
+                            f"{kw.arg}[{i}]: block shape is not a literal "
+                            f"tuple")
+                        continue
+                    dims: List[int] = []
+                    bad = None
+                    for d in shape_node.elts:
+                        v = eval_int(d, env)
+                        if v is None:
+                            bad = ast.unparse(d)
+                            break
+                        dims.append(v)
+                    if bad is not None:
+                        unresolved.append(
+                            f"{kw.arg}[{i}]: dimension `{bad}` is not "
+                            f"statically bounded")
+                        continue
+                    nbytes = _BYTES_PER_ELEM * count
+                    for v in dims:
+                        nbytes *= v
+                    blocks.append({"spec": f"{kw.arg}[{i}]",
+                                   "count": count, "shape": dims,
+                                   "bytes": nbytes})
+
+            total = sum(b["bytes"] for b in blocks)
+            entry = {
+                "kernel": kernel, "file": pf.rel, "line": node.lineno,
+                "blocks": blocks, "total_block_bytes": total,
+                "budget_bytes": cfg.vmem_block_budget,
+                "within_budget": total <= cfg.vmem_block_budget,
+                "unresolved": unresolved,
+            }
+            report.append(entry)
+            for msg in unresolved:
+                findings.append(Finding(
+                    "PB002", pf.rel, node.lineno,
+                    f"pallas_call in {kernel}: {msg}"))
+            if total > cfg.vmem_block_budget:
+                findings.append(Finding(
+                    "PB001", pf.rel, node.lineno,
+                    f"pallas_call in {kernel}: block I/O {total} bytes "
+                    f"exceeds budget {cfg.vmem_block_budget}"))
+    report.sort(key=lambda e: (e["file"], e["line"]))
+    return findings, report

@@ -1,0 +1,138 @@
+"""Analysis configuration + the pinned-allowlist (baseline) loader.
+
+The baseline file is TOML, but this package must run with *zero*
+third-party imports on Python 3.10 (no ``tomllib`` until 3.11, and the CI
+lint job installs nothing).  We therefore parse the narrow subset the
+baseline actually uses -- ``[[exempt]]`` array-of-tables with quoted
+string values -- with a ~40-line reader.  Anything outside that subset is
+a hard config error (exit 2), never a silent pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, List, Optional, Tuple
+
+# Directories scanned for enforced source rules, repo-relative.  Tests and
+# benchmarks are deliberately *not* here for CB004/SR005 (interpret=True
+# and ad-hoc streams are fine in test code); family-contract sweeps name
+# their files explicitly.
+SRC_DIRS = ("src",)
+
+# Stream registry geography (repo-relative).
+DEVICE_REGISTRY = "src/repro/kernels/common.py"
+HOST_REGISTRIES = (
+    "src/repro/core/u32.py",
+    "src/repro/core/linear.py",
+    "src/repro/core/sampling.py",
+)
+
+# Family-contract geography.
+FAMILIES_MODULE = "src/repro/data/families.py"
+SWEEP_FILES = (
+    "tests/test_families.py",
+    "tests/test_sharded_query.py",
+    "benchmarks/perf_sketch.py",
+)
+
+# compat boundary: the one module allowed to touch version-gated jax APIs.
+COMPAT_MODULE = "src/repro/compat.py"
+
+
+@dataclasses.dataclass
+class Config:
+    root: pathlib.Path
+    # Per-pallas_call budget for the summed BlockSpec block I/O, bytes.
+    # ~2 MiB leaves ample headroom inside the ~16 MiB/core VMEM once the
+    # compiler's double-buffering and kernel intermediates are accounted.
+    vmem_block_budget: int = 2 * 1024 * 1024
+    rules: Tuple[str, ...] = ()        # prefix filter; empty = all
+    baseline_path: Optional[pathlib.Path] = None
+
+    def baseline_file(self) -> pathlib.Path:
+        if self.baseline_path is not None:
+            return self.baseline_path
+        return pathlib.Path(__file__).parent / "baseline.toml"
+
+    def wants(self, rule: str) -> bool:
+        return not self.rules or any(rule.startswith(p) for p in self.rules)
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    reason: str
+    match: str = ""        # substring of the finding message; "" = any
+    line: int = 0          # line in baseline.toml (for BL001 anchoring)
+
+    def covers(self, rule: str, path: str, message: str) -> bool:
+        return (self.rule == rule and self.path == path
+                and (not self.match or self.match in message))
+
+
+class BaselineError(ValueError):
+    """Malformed baseline file -- a config error, not a finding."""
+
+
+def _parse_value(raw: str, lineno: int) -> str:
+    raw = raw.strip()
+    if len(raw) >= 2 and raw[0] == raw[-1] and raw[0] in ("'", '"'):
+        return raw[1:-1]
+    raise BaselineError(
+        f"baseline.toml:{lineno}: expected a quoted string value, got {raw!r}")
+
+
+def parse_baseline(text: str) -> List[BaselineEntry]:
+    entries: List[BaselineEntry] = []
+    current: Optional[Dict[str, object]] = None
+
+    def flush():
+        nonlocal current
+        if current is None:
+            return
+        missing = [k for k in ("rule", "path", "reason") if k not in current]
+        if missing:
+            raise BaselineError(
+                f"baseline.toml:{current['_line']}: [[exempt]] entry missing "
+                f"required key(s): {', '.join(missing)}")
+        entries.append(BaselineEntry(
+            rule=str(current["rule"]), path=str(current["path"]),
+            reason=str(current["reason"]), match=str(current.get("match", "")),
+            line=int(current["_line"])))
+        current = None
+
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        stripped = line.split("#", 1)[0].strip() if not line.lstrip().startswith("#") \
+            else ""
+        if not stripped:
+            continue
+        if stripped == "[[exempt]]":
+            flush()
+            current = {"_line": lineno}
+            continue
+        if stripped.startswith("["):
+            raise BaselineError(
+                f"baseline.toml:{lineno}: only [[exempt]] tables are "
+                f"supported, got {stripped!r}")
+        if "=" not in stripped:
+            raise BaselineError(
+                f"baseline.toml:{lineno}: expected `key = \"value\"`")
+        if current is None:
+            raise BaselineError(
+                f"baseline.toml:{lineno}: key outside an [[exempt]] table")
+        key, raw = stripped.split("=", 1)
+        key = key.strip()
+        if key not in ("rule", "path", "match", "reason"):
+            raise BaselineError(
+                f"baseline.toml:{lineno}: unknown key {key!r} "
+                f"(allowed: rule, path, match, reason)")
+        current[key] = _parse_value(raw, lineno)
+    flush()
+    return entries
+
+
+def load_baseline(path: pathlib.Path) -> List[BaselineEntry]:
+    if not path.exists():
+        return []
+    return parse_baseline(path.read_text())

@@ -1,0 +1,112 @@
+"""Analysis driver: parse once, run every checker, apply the baseline.
+
+Separated from ``__main__`` so tests (and future tooling, e.g. the
+block-size autotuner reading the budget report) can call :func:`run`
+directly on any root -- including tiny fixture trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, List, Tuple
+
+from . import budget as budget_mod
+from . import compat as compat_mod
+from . import config as cfg_mod
+from . import families as families_mod
+from . import streams as streams_mod
+from .astutil import Repo
+from .config import BaselineEntry, Config, load_baseline
+from .findings import Finding
+
+# Directories a full run parses.  src/ carries the enforced rules; tests/
+# and benchmarks/ are parsed only as sweep evidence for FC003 (their own
+# code is exempt from SR005/CB004 by the checkers' src/ scoping).
+SCAN_DIRS = ("src", "tests", "benchmarks")
+
+STREAMS_MD = "STREAMS.md"
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: List[Finding]              # non-baselined (actionable)
+    baselined: List[Tuple[Finding, BaselineEntry]]
+    streams_md: str                      # rendered registry table
+    budget_report: List[Dict]            # per-pallas_call VMEM accounting
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def _apply_baseline(findings: List[Finding],
+                    entries: List[BaselineEntry],
+                    report_stale: bool = True):
+    """Split findings into (actionable, baselined); unmatched baseline
+    entries become BL001 findings so the allowlist cannot rot.  Stale
+    reporting is suppressed under a ``--rules`` filter, where unmatched
+    entries are expected (their rules never ran)."""
+    used = [False] * len(entries)
+    actionable: List[Finding] = []
+    baselined: List[Tuple[Finding, BaselineEntry]] = []
+    for f in findings:
+        hit = None
+        for i, e in enumerate(entries):
+            if e.covers(f.rule, f.path, f.message):
+                hit = e
+                used[i] = True
+                break
+        if hit is None:
+            actionable.append(f)
+        else:
+            baselined.append((f, hit))
+    for e, u in zip(entries, used):
+        if not u and report_stale:
+            actionable.append(Finding(
+                "BL001", "src/repro/analysis/baseline.toml", e.line,
+                f"stale baseline entry (rule={e.rule}, path={e.path}"
+                + (f", match={e.match!r}" if e.match else "") + ")"))
+    return actionable, baselined
+
+
+def run(cfg: Config) -> AnalysisResult:
+    repo = Repo(cfg.root, SCAN_DIRS)
+    findings: List[Finding] = []
+
+    sr_findings, streams_md = streams_mod.check(repo)
+    findings.extend(sr_findings)
+
+    # SR006: the committed registry table must match the regenerated one.
+    committed = cfg.root / STREAMS_MD
+    if not committed.exists():
+        findings.append(Finding(
+            "SR006", STREAMS_MD, 1,
+            "STREAMS.md missing; generate with --write-streams"))
+    elif committed.read_text() != streams_md:
+        findings.append(Finding(
+            "SR006", STREAMS_MD, 1,
+            "STREAMS.md is stale; regenerate with --write-streams"))
+
+    findings.extend(compat_mod.check(repo))
+    pb_findings, budget_report = budget_mod.check(repo, cfg)
+    findings.extend(pb_findings)
+    findings.extend(families_mod.check(repo))
+
+    findings = [f for f in findings if cfg.wants(f.rule)]
+    entries = load_baseline(cfg.baseline_file())
+    actionable, baselined = _apply_baseline(findings, entries,
+                                            report_stale=not cfg.rules)
+    actionable.sort(key=Finding.sort_key)
+    baselined.sort(key=lambda pair: pair[0].sort_key())
+    return AnalysisResult(findings=actionable, baselined=baselined,
+                          streams_md=streams_md,
+                          budget_report=budget_report)
+
+
+def default_config(root) -> Config:
+    return Config(root=pathlib.Path(root).resolve())
+
+
+# Re-exported for convenience of `from repro.analysis.engine import ...`.
+__all__ = ["AnalysisResult", "Config", "run", "default_config",
+           "SCAN_DIRS", "STREAMS_MD"]

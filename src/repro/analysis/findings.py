@@ -1,0 +1,61 @@
+"""Finding record + the rule catalogue every checker registers under."""
+from __future__ import annotations
+
+import dataclasses
+
+# One-line description per rule ID.  Checker modules own their group prefix;
+# this central table is what ``--list-rules`` prints and what README's
+# "Invariants as code" section documents.
+RULES = {
+    # stream-registry (repro.analysis.streams)
+    "SR001": "u32 stream IDs must be globally unique within a registry side "
+             "(two draws sharing an ID share their randomness)",
+    "SR002": "host-oracle stream constant has no identically named device "
+             "mirror in kernels/common.py",
+    "SR003": "device stream constant has no identically named host twin in "
+             "core/ (u32.py, linear.py, sampling.py)",
+    "SR004": "host and device stream constants with the same name disagree "
+             "on the stream ID",
+    "SR005": "inline u32 stream literal at a call site; route it through a "
+             "named *_STREAM constant of the registry",
+    "SR006": "STREAMS.md is stale: regenerate with "
+             "`python -m repro.analysis --write-streams`",
+    # compat-boundary (repro.analysis.compat)
+    "CB001": "direct jax shard_map use outside repro/compat.py (0.4.x spells "
+             "it jax.experimental.shard_map with check_rep)",
+    "CB002": "direct jax.sharding.AxisType use outside repro/compat.py "
+             "(absent on jax 0.4.x)",
+    "CB003": "direct jax.make_mesh use outside repro/compat.py (axis_types "
+             "kwarg is version-gated)",
+    "CB004": "hardcoded interpret=True call site under src/ (dispatch "
+             "belongs to repro.kernels.ops._interpret)",
+    # pallas-budget (repro.analysis.budget)
+    "PB001": "pallas_call block working set exceeds the configured VMEM "
+             "block budget",
+    "PB002": "pallas_call block shape cannot be statically bounded "
+             "(runtime-dependent dimension)",
+    # family-contract (repro.analysis.families)
+    "FC001": "family in FAMILY_NAMES lacks a complete SketchFamily "
+             "implementation",
+    "FC002": "family in FAMILY_NAMES is not constructible via make_family",
+    "FC003": "family in FAMILY_NAMES is missing from a parameterized "
+             "test/bench sweep",
+    # baseline hygiene (repro.analysis.engine)
+    "BL001": "baseline.toml entry matches no current finding; delete it",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a repo-relative file:line."""
+
+    rule: str
+    path: str          # repo-relative, posix separators
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def sort_key(self):
+        return (self.path, self.line, self.rule, self.message)

@@ -1,0 +1,189 @@
+"""SR* stream-registry checker + STREAMS.md generator.
+
+The u32 salt-stream contract is the load-bearing piece of host<->device
+bit-exactness: every independent pseudo-random draw is selected by a small
+integer stream ID fed to ``salt_for(seed, stream, t)``.  Two draws sharing
+an ID share their randomness -- a silent correctness bug no runtime test
+catches unless it happens to compare exactly those two draws.  This
+checker extracts every ``*_STREAM`` constant from the device registry
+(``kernels/common.py``) and the host registries (``core/u32.py``,
+``core/linear.py``, ``core/sampling.py``), proves global ID uniqueness per
+side, proves the host/device mirrors agree name-by-name, forbids inline
+stream literals at call sites, and renders the generated ``STREAMS.md``
+registry table.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Tuple
+
+from . import config as cfg_mod
+from .astutil import ParsedFile, Repo, dotted_name, int_assignments
+from .findings import Finding
+
+STREAM_SUFFIX = ("_STREAM",)
+
+
+def _registry(pf: ParsedFile) -> List[Tuple[str, int, int]]:
+    return int_assignments(pf.tree, STREAM_SUFFIX)
+
+
+def _stream_helpers(tree: ast.AST) -> List[str]:
+    """Names of local functions that take a ``stream`` param and forward it
+    to ``salt_for`` -- the ``def u(stream): ... salt_for(seed, stream, t)``
+    idiom.  Calls to these are stream call sites too."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = [a.arg for a in node.args.posonlyargs + node.args.args]
+        if "stream" not in params:
+            continue
+        for inner in ast.walk(node):
+            if isinstance(inner, ast.Call):
+                callee = dotted_name(inner.func)
+                if callee and callee.split(".")[-1] == "salt_for":
+                    out.append((node.name, params.index("stream")))
+                    break
+    return [name for name, _ in out], dict(out)
+
+
+def _literal_stream_arg(call: ast.Call, pos: int):
+    """The int-literal stream argument of a call, if any (position or kw)."""
+    for kw in call.keywords:
+        if kw.arg == "stream" and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, int) \
+                and not isinstance(kw.value.value, bool):
+            return kw.value.value
+    if len(call.args) > pos:
+        a = call.args[pos]
+        if isinstance(a, ast.Constant) and isinstance(a.value, int) \
+                and not isinstance(a.value, bool):
+            return a.value
+    return None
+
+
+def check(repo: Repo) -> Tuple[List[Finding], str]:
+    """Run SR001-SR005 and return (findings, rendered STREAMS.md text).
+
+    SR006 (staleness vs the committed STREAMS.md) is applied by the engine,
+    which owns file I/O policy.
+    """
+    findings: List[Finding] = []
+
+    dev_pf = repo.get(cfg_mod.DEVICE_REGISTRY)
+    device: Dict[str, Tuple[int, str, int]] = {}
+    if dev_pf is not None:
+        for name, value, line in _registry(dev_pf):
+            device[name] = (value, dev_pf.rel, line)
+
+    host: Dict[str, Tuple[int, str, int]] = {}
+    for rel in cfg_mod.HOST_REGISTRIES:
+        pf = repo.get(rel)
+        if pf is None:
+            continue
+        for name, value, line in _registry(pf):
+            if name in host and host[name][0] != value:
+                findings.append(Finding(
+                    "SR001", pf.rel, line,
+                    f"host stream {name} redefined with value {value} "
+                    f"(already {host[name][0]} at {host[name][1]}:"
+                    f"{host[name][2]})"))
+            host[name] = (value, pf.rel, line)
+
+    # SR001: globally unique IDs within each side of the mirror.
+    for side, reg in (("device", device), ("host", host)):
+        by_value: Dict[int, List[str]] = {}
+        for name, (value, _, _) in reg.items():
+            by_value.setdefault(value, []).append(name)
+        for value, names in sorted(by_value.items()):
+            if len(names) > 1:
+                names = sorted(names, key=lambda n: (reg[n][1], reg[n][2]))
+                _, path, line = reg[names[-1]]    # latest definition anchors
+                findings.append(Finding(
+                    "SR001", path, line,
+                    f"duplicate {side} stream ID {value} shared by "
+                    f"{', '.join(names)}"))
+
+    # SR002/SR003/SR004: name-by-name host<->device mirroring.
+    for name, (value, path, line) in sorted(host.items()):
+        if name not in device:
+            findings.append(Finding(
+                "SR002", path, line,
+                f"host stream {name}={value} has no device mirror in "
+                f"{cfg_mod.DEVICE_REGISTRY}"))
+        elif device[name][0] != value:
+            findings.append(Finding(
+                "SR004", path, line,
+                f"stream {name} disagrees across the mirror: host {value} "
+                f"vs device {device[name][0]} "
+                f"({cfg_mod.DEVICE_REGISTRY}:{device[name][2]})"))
+    for name, (value, path, line) in sorted(device.items()):
+        if name not in host:
+            findings.append(Finding(
+                "SR003", path, line,
+                f"device stream {name}={value} has no host twin in "
+                f"{', '.join(cfg_mod.HOST_REGISTRIES)}"))
+
+    # SR005: no inline stream literals at call sites under src/.
+    registry_files = {cfg_mod.DEVICE_REGISTRY, *cfg_mod.HOST_REGISTRIES}
+    for pf in repo.files:
+        if not pf.rel.startswith("src/"):
+            continue
+        helper_names, helper_pos = _stream_helpers(pf.tree)
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if callee is None:
+                continue
+            leaf = callee.split(".")[-1]
+            if leaf == "salt_for":
+                lit = _literal_stream_arg(node, pos=1)
+            elif leaf in helper_names:
+                lit = _literal_stream_arg(node, pos=helper_pos[leaf])
+            else:
+                continue
+            if lit is None:
+                continue
+            if pf.rel in registry_files:
+                continue    # registries may self-document with literals
+            findings.append(Finding(
+                "SR005", pf.rel, node.lineno,
+                f"inline stream literal {lit} passed to {leaf}(); use the "
+                f"named *_STREAM constant"))
+
+    return findings, render_streams_md(repo, device, host)
+
+
+def render_streams_md(repo: Repo, device, host) -> str:
+    """The generated registry table committed as STREAMS.md."""
+    lines = [
+        "# u32 salt-stream registry",
+        "",
+        "Generated by `python -m repro.analysis --write-streams` -- do not",
+        "edit by hand.  Every independent pseudo-random draw in the repo is",
+        "selected by one of these stream IDs via `salt_for(seed, stream, t)`;",
+        "the `SR*` rules of `repro.analysis` enforce that IDs are globally",
+        "unique per side and that every device constant has an identically",
+        "valued host twin (the host<->device bit-exactness contract).",
+        "",
+        "| stream | id | device definition | host twin | used by |",
+        "|---|---|---|---|---|",
+    ]
+    registry_files = {cfg_mod.DEVICE_REGISTRY, *cfg_mod.HOST_REGISTRIES}
+    names = sorted(set(device) | set(host),
+                   key=lambda n: (device.get(n, host.get(n))[0], n))
+    for name in names:
+        value = device.get(name, host.get(name))[0]
+        dev = (f"{device[name][1]}:{device[name][2]}"
+               if name in device else "(missing)")
+        hst = (f"{host[name][1]}:{host[name][2]}"
+               if name in host else "(missing)")
+        users = sorted(
+            pf.rel for pf in repo.files
+            if pf.rel not in registry_files and name in pf.source)
+        lines.append(f"| `{name}` | {value} | {dev} | {hst} | "
+                     f"{', '.join(users) if users else '-'} |")
+    lines.append("")
+    return "\n".join(lines)

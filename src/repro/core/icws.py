@@ -78,9 +78,9 @@ class ICWS:
             salt = u32.salt_for(self.seed, stream, t)[:, None]   # [m, 1]
             return u32.uniform01(keys_u32[None, :], salt)        # [m, nnz] f32
 
-        r = -np.log(u(1) * u(2))      # Gamma(2,1), f32
-        c = -np.log(u(3) * u(4))      # Gamma(2,1), f32
-        beta = u(5)
+        r = -np.log(u(u32.ICWS_R1_STREAM) * u(u32.ICWS_R2_STREAM))  # Gamma(2,1)
+        c = -np.log(u(u32.ICWS_C1_STREAM) * u(u32.ICWS_C2_STREAM))  # Gamma(2,1)
+        beta = u(u32.ICWS_BETA_STREAM)
         return r, c, beta
 
     def sketch(self, v: SparseVec) -> ICWSSketch:
@@ -107,7 +107,7 @@ class ICWS:
         lvl_sel = lvl[rows, arg].astype(np.int32)
         fpbits = u32.hash_u32(
             keys_u32[arg] ^ (lvl_sel.astype(np.uint32) * np.uint32(0x9E3779B9)),
-            u32.salt_for(self.seed, 9, rows))
+            u32.salt_for(self.seed, u32.ICWS_FP_STREAM, rows))
         fp = (fpbits & np.uint32(0x7FFFFFFF)).astype(np.int32)
         return ICWSSketch(fingerprints=fp, values=z[arg], norm=norm,
                           argkeys=keys_u32[arg].view(np.int32))
@@ -150,9 +150,9 @@ class ICWS:
             def u(stream: int) -> np.ndarray:
                 return u32.uniform01(keys, u32.salt_for(self.seed, stream, t))
 
-            r = -np.log(u(1) * u(2))
-            c = -np.log(u(3) * u(4))
-            beta = u(5)
+            r = -np.log(u(u32.ICWS_R1_STREAM) * u(u32.ICWS_R2_STREAM))
+            c = -np.log(u(u32.ICWS_C1_STREAM) * u(u32.ICWS_C2_STREAM))
+            beta = u(u32.ICWS_BETA_STREAM)
             logw = np.log(np.maximum(w, np.float32(1e-37)))
             lvl = np.floor(logw / r + beta)
             y = np.exp(r * (lvl - beta))
@@ -168,7 +168,7 @@ class ICWS:
         val_c = np.where(pick_b, zb, za)
         fpbits = u32.hash_u32(
             key_c ^ (lvl_c.astype(np.uint32) * np.uint32(0x9E3779B9)),
-            u32.salt_for(self.seed, 9, t))
+            u32.salt_for(self.seed, u32.ICWS_FP_STREAM, t))
         fp = (fpbits & np.uint32(0x7FFFFFFF)).astype(np.int32)
         dead = np.minimum(aa, ab) >= _BIG
         return ICWSSketch(

@@ -23,6 +23,18 @@ _M1 = np.uint32(0x85EBCA6B)
 _M2 = np.uint32(0xC2B2AE35)
 _GOLDEN = np.uint32(0x9E3779B9)
 
+# Host twins of the ICWS salt streams in ``repro.kernels.common`` -- same
+# names, same values, checked by ``repro.analysis`` rule SR004 (the CS/JL
+# twins live in repro.core.linear, the TS/PS twin in repro.core.sampling;
+# this module mirrors the mixers, so it also mirrors the ICWS streams its
+# callers draw from).
+ICWS_R1_STREAM = 1
+ICWS_R2_STREAM = 2
+ICWS_C1_STREAM = 3
+ICWS_C2_STREAM = 4
+ICWS_BETA_STREAM = 5
+ICWS_FP_STREAM = 9
+
 
 def mix32(x: np.ndarray) -> np.ndarray:
     """Murmur3 fmix32 over uint32 lanes; twin of ``kernels.common.mix32``."""

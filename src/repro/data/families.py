@@ -55,7 +55,10 @@ from repro.core.sampling import (SAMPLE_HASH_STREAM, PrioritySamplingU32,
                                  ThresholdSamplingU32)
 from repro.core.types import SparseVec
 from repro.kernels import ops
-from repro.kernels.common import hash_u32, salt_for, uniform01
+from repro.kernels.common import (ICWS_BETA_STREAM, ICWS_C1_STREAM,
+                                  ICWS_C2_STREAM, ICWS_FP_STREAM,
+                                  ICWS_R1_STREAM, ICWS_R2_STREAM, hash_u32,
+                                  salt_for, uniform01)
 from repro.kernels.estimate import CORPUS_PAD_FP
 from repro.kernels.ref import BIG
 
@@ -158,9 +161,9 @@ class ICWSFamily:
             def u(stream):
                 return uniform01(kk, salt_for(self.seed, stream, t))
 
-            r = -jnp.log(u(1) * u(2))
-            c = -jnp.log(u(3) * u(4))
-            beta = u(5)
+            r = -jnp.log(u(ICWS_R1_STREAM) * u(ICWS_R2_STREAM))
+            c = -jnp.log(u(ICWS_C1_STREAM) * u(ICWS_C2_STREAM))
+            beta = u(ICWS_BETA_STREAM)
             logw = jnp.log(jnp.maximum(w, jnp.float32(1e-37)))
             lvl = jnp.floor(logw / r + beta)
             y = jnp.exp(r * (lvl - beta))
@@ -178,7 +181,7 @@ class ICWSFamily:
         fpbits = hash_u32(
             key_c.astype(jnp.uint32)
             ^ (lvl_c.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)),
-            salt_for(self.seed, 9, t))
+            salt_for(self.seed, ICWS_FP_STREAM, t))
         fp_c = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
         dead = jnp.minimum(aa, ab) >= BIG
         return (jnp.where(dead, -1, fp_c),

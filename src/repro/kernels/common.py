@@ -15,16 +15,45 @@ _M1 = 0x85EBCA6B
 _M2 = 0xC2B2AE35
 _GOLDEN = 0x9E3779B9
 
-# u32 salt streams for the linear-sketch kernels (one per independent hash
-# draw; the ICWS kernel's streams 1-5/9 stay literals next to its math).
-# The host twins in repro.core.linear mirror these values -- keep in sync,
-# exactly as repro.core.u32 mirrors the mixers above.
+# ---------------------------------------------------------------------------
+# The u32 salt-stream registry: every independent hash draw any kernel makes
+# gets a named ``*_STREAM`` constant HERE (device side) with an identically
+# named, identically valued host twin in ``repro.core`` (u32.py for ICWS,
+# linear.py for CS/JL, sampling.py for TS/PS -- those packages stay
+# numpy-only and never import this module).  Stream IDs must be globally
+# unique: two draws sharing an ID share their randomness, which silently
+# correlates sketches that the estimators assume independent.  Uniqueness,
+# host/device mirroring, and literal-free call sites are machine-checked by
+# ``python -m repro.analysis`` (rules SR001-SR006); the generated STREAMS.md
+# at the repo root is the human-readable registry table.
+# ---------------------------------------------------------------------------
+
+# ICWS (weighted MinHash): per-(sample, key) variates r ~ Gamma(2,1) from
+# two uniforms, c ~ Gamma(2,1) from two more, beta ~ U(0,1), plus the
+# (key, level) fingerprint salt.
+ICWS_R1_STREAM = 1
+ICWS_R2_STREAM = 2
+ICWS_C1_STREAM = 3
+ICWS_C2_STREAM = 4
+ICWS_BETA_STREAM = 5
+ICWS_FP_STREAM = 9
+# linear-sketch kernels: CountSketch buckets/signs (shared between the dense
+# gradient-compression kernel and the sparse corpus-ingest kernel so
+# position- and key-sketched vectors interoperate) and JL signs.
 CS_BUCKET_STREAM = 21
 CS_SIGN_STREAM = 22
 JL_SIGN_STREAM = 31
 # coordinated sample hash h(key) of the TS/PS sampling sketches (one draw
 # per key, shared across vectors -- repro.core.sampling mirrors this)
 SAMPLE_HASH_STREAM = 41
+
+
+def streams() -> dict:
+    """The enumerated stream registry: ``{name: id}`` for every ``*_STREAM``
+    constant above (runtime view of what ``repro.analysis`` reads from the
+    AST)."""
+    return {k: v for k, v in sorted(globals().items())
+            if k.endswith("_STREAM") and isinstance(v, int)}
 
 
 def mix32(x: jnp.ndarray) -> jnp.ndarray:

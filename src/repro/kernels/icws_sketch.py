@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import hash_u32, salt_for, uniform01
+from .common import (ICWS_BETA_STREAM, ICWS_C1_STREAM, ICWS_C2_STREAM,
+                     ICWS_FP_STREAM, ICWS_R1_STREAM, ICWS_R2_STREAM,
+                     hash_u32, salt_for, uniform01)
 from .ref import BIG
 
 
@@ -50,9 +52,9 @@ def _icws_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
         salt = salt_for(seed, stream, t)[None, :, None]   # [1, BM, 1]
         return uniform01(kk, salt)                    # [BR, BM, BN]
 
-    r = -jnp.log(u(1) * u(2))
-    c = -jnp.log(u(3) * u(4))
-    beta = u(5)
+    r = -jnp.log(u(ICWS_R1_STREAM) * u(ICWS_R2_STREAM))
+    c = -jnp.log(u(ICWS_C1_STREAM) * u(ICWS_C2_STREAM))
+    beta = u(ICWS_BETA_STREAM)
     logw = jnp.log(jnp.maximum(w, 1e-37))[:, None, :]
     lvl = jnp.floor(logw / r + beta)
     y = jnp.exp(r * (lvl - beta))
@@ -70,7 +72,7 @@ def _icws_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
     fpbits = hash_u32(
         key_sel.astype(jnp.uint32)
         ^ (lvl_sel.astype(jnp.int32).astype(jnp.uint32) * jnp.uint32(0x9E3779B9)),
-        salt_for(seed, 9, t)[None, :])
+        salt_for(seed, ICWS_FP_STREAM, t)[None, :])
     # 31-bit fingerprint: non-negative int32 (see ref.icws_sketch_ref)
     fp = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
 

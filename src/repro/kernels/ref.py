@@ -10,8 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import (CS_BUCKET_STREAM, CS_SIGN_STREAM,
-                     JL_SIGN_STREAM, hash_u32, salt_for, uniform01)
+from .common import (CS_BUCKET_STREAM, CS_SIGN_STREAM, ICWS_BETA_STREAM,
+                     ICWS_C1_STREAM, ICWS_C2_STREAM, ICWS_FP_STREAM,
+                     ICWS_R1_STREAM, ICWS_R2_STREAM, JL_SIGN_STREAM,
+                     hash_u32, salt_for, uniform01)
 
 BIG = 3.0e38  # python float: safe to close over in kernel bodies
 
@@ -43,9 +45,9 @@ def icws_sketch_ref(w, keys, vals, m: int, seed: int):
         salt = salt_for(seed, stream, t)[None, :, None]      # [1, m, 1]
         return uniform01(kk, salt)                           # [B, m, N]
 
-    r = -jnp.log(u(1) * u(2))
-    c = -jnp.log(u(3) * u(4))
-    beta = u(5)
+    r = -jnp.log(u(ICWS_R1_STREAM) * u(ICWS_R2_STREAM))
+    c = -jnp.log(u(ICWS_C1_STREAM) * u(ICWS_C2_STREAM))
+    beta = u(ICWS_BETA_STREAM)
     logw = jnp.log(jnp.maximum(w, 1e-37))[:, None, :]        # [B, 1, N]
     lvl = jnp.floor(logw / r + beta)
     y = jnp.exp(r * (lvl - beta))
@@ -62,7 +64,7 @@ def icws_sketch_ref(w, keys, vals, m: int, seed: int):
     fpbits = hash_u32(
         key_sel.astype(jnp.uint32)
         ^ (lvl_sel.astype(jnp.int32).astype(jnp.uint32) * jnp.uint32(0x9E3779B9)),
-        salt_for(seed, 9, t)[None, :])
+        salt_for(seed, ICWS_FP_STREAM, t)[None, :])
     # 31-bit fingerprint: keeps int32 values non-negative so the estimator's
     # `fp >= 0` empty-sentinel guard never discards real collisions
     fp = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)

@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
-from repro.kernels.icws_sketch import icws_sketch_pallas
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,12 +37,15 @@ class TelemetryConfig:
 def sketch_gradient(flat_grad: jnp.ndarray, cfg: TelemetryConfig):
     """[T] gradient -> sketch pytree (device path, batched-kernel friendly)."""
     if cfg.method == "jl":
-        # hash-based +-1 projection, m rows
-        from repro.kernels.common import hash_u32, salt_for
+        # hash-based +-1 projection, m rows (the JL sign stream of the
+        # kernel registry, so these projections interoperate with
+        # device-JL-sketched vectors)
+        from repro.kernels.common import JL_SIGN_STREAM, hash_u32, salt_for
         t = jnp.arange(cfg.m, dtype=jnp.int32)
         idx = jnp.arange(flat_grad.shape[0], dtype=jnp.uint32)
-        sign = jnp.where((hash_u32(idx[None, :], salt_for(cfg.seed, 31, t)[:, None])
-                          & jnp.uint32(1)) == 0, 1.0, -1.0)
+        sign = jnp.where(
+            (hash_u32(idx[None, :], salt_for(cfg.seed, JL_SIGN_STREAM, t)[:, None])
+             & jnp.uint32(1)) == 0, 1.0, -1.0)
         proj = (sign @ flat_grad) / jnp.sqrt(cfg.m)
         return {"proj": proj}
     norm = jnp.linalg.norm(flat_grad)
@@ -51,8 +53,8 @@ def sketch_gradient(flat_grad: jnp.ndarray, cfg: TelemetryConfig):
     zn = flat_grad / safe
     w = (zn * zn)[None, :]
     keys = jnp.arange(flat_grad.shape[0], dtype=jnp.int32)[None, :]
-    fp, val, _, _ = icws_sketch_pallas(w, keys, zn[None, :], m=cfg.m,
-                                       seed=cfg.seed, interpret=True)
+    fp, val, _, _ = kops.icws_sketch(w, keys, zn[None, :], m=cfg.m,
+                                     seed=cfg.seed)
     return {"fp": fp[0], "val": val[0], "norm": norm}
 
 

@@ -113,10 +113,13 @@ _SCRIPT = textwrap.dedent("""
     d = svc.describe()
     assert d["corpus_rows"] == 5.0 and d["corpus_capacity"] >= 5.0
 
-    # -- linear + sampling serving families: sharded == single-device,
-    #    bitwise, and every sharded store buffer (dense tables, or sample
-    #    key/value/tau rows) spreads over the mesh
-    for fam in ("cs", "jl", "ts", "ps"):
+    # -- every serving family: sharded == single-device, bitwise, and
+    #    every sharded store buffer (fp/val/norm rows, dense tables, or
+    #    sample key/value/tau rows) spreads over the mesh.  Iterates
+    #    FAMILY_NAMES so a new family lands in this sweep automatically
+    #    (the FC003 rule of repro.analysis checks exactly that).
+    from repro.data.families import FAMILY_NAMES
+    for fam in FAMILY_NAMES:
         def buildf(m=None):
             idx = DatasetSearchIndex(m=128, seed=1, mesh=m,
                                      keep_host_oracle=False, family=fam)
