@@ -17,6 +17,7 @@ every call site, its tunable block parameters, and its headroom.
 from __future__ import annotations
 
 import ast
+import json
 from typing import Dict, List, Optional, Tuple
 
 from .astutil import (Repo, dotted_name, enclosing_functions, eval_int,
@@ -25,6 +26,14 @@ from .config import Config
 from .findings import Finding
 
 _BYTES_PER_ELEM = 4    # f32 / i32 / u32: every dtype the kernels move
+
+# The roofline autotuner's committed block-size cache.  Tuned launches
+# resolve their blocks from here at runtime (repro.roofline.autotune), so
+# the static per-call-site pass below -- which only sees the declared
+# defaults -- would miss a tuned configuration that blows the budget.  The
+# cache check closes that hole: every entry's block_shapes are charged
+# under the same 4-bytes/element accounting and gated by the same PB001.
+_CACHE_REL = "src/repro/roofline/block_cache.json"
 
 
 def _blockspec_calls(node: ast.AST) -> Optional[List[Tuple[ast.Call, int]]]:
@@ -60,6 +69,66 @@ def _block_shape(call: ast.Call) -> Optional[ast.AST]:
     if call.args:
         return call.args[0]
     return None
+
+
+def _check_cache(repo: Repo, cfg: Config, findings: List[Finding],
+                 report: List[Dict]) -> None:
+    """Charge every autotuner cache entry against the VMEM block budget.
+
+    Each entry carries the exact per-operand block shapes its tuned launch
+    will request (``block_shapes``: ``[count, [dims..]]`` pairs, written by
+    ``repro.roofline.autotune.tune``).  Report rows use
+    ``kernel="cache:<group>|<key>"`` at line 0 of the cache file; a
+    malformed entry is PB002 (the runtime would silently fall back to
+    defaults, but a cache that cannot be audited must not ship), an
+    over-budget one is PB001 -- same rules, no new baseline entries.
+    """
+    path = repo.root / _CACHE_REL
+    if not path.exists():
+        return
+    try:
+        entries = json.loads(path.read_text())["entries"]
+        if not isinstance(entries, list):
+            raise TypeError("entries is not a list")
+    except Exception as e:
+        findings.append(Finding(
+            "PB002", _CACHE_REL, 0,
+            f"autotuner block cache is unreadable ({e}); the budget check "
+            f"cannot audit tuned launches"))
+        return
+    for ei, e in enumerate(entries):
+        try:
+            kernel = "cache:{}|{}".format(
+                e["kernel"], ",".join(f"{k}={v}"
+                                      for k, v in sorted(e["key"].items())))
+            shapes = [(int(c), [int(d) for d in dims])
+                      for c, dims in e["block_shapes"]]
+        except Exception as exc:
+            findings.append(Finding(
+                "PB002", _CACHE_REL, 0,
+                f"autotuner cache entry [{ei}] is malformed ({exc}); tuned "
+                f"block shapes must be statically auditable"))
+            continue
+        blocks = []
+        for i, (count, dims) in enumerate(shapes):
+            nbytes = _BYTES_PER_ELEM * count
+            for d in dims:
+                nbytes *= d
+            blocks.append({"spec": f"cache[{i}]", "count": count,
+                           "shape": dims, "bytes": nbytes})
+        total = sum(b["bytes"] for b in blocks)
+        report.append({
+            "kernel": kernel, "file": _CACHE_REL, "line": 0,
+            "blocks": blocks, "total_block_bytes": total,
+            "budget_bytes": cfg.vmem_block_budget,
+            "within_budget": total <= cfg.vmem_block_budget,
+            "unresolved": [],
+        })
+        if total > cfg.vmem_block_budget:
+            findings.append(Finding(
+                "PB001", _CACHE_REL, 0,
+                f"autotuned blocks for {kernel}: block I/O {total} bytes "
+                f"exceeds budget {cfg.vmem_block_budget}"))
 
 
 def check(repo: Repo, cfg: Config) -> Tuple[List[Finding], List[Dict]]:
@@ -139,5 +208,6 @@ def check(repo: Repo, cfg: Config) -> Tuple[List[Finding], List[Dict]]:
                     "PB001", pf.rel, node.lineno,
                     f"pallas_call in {kernel}: block I/O {total} bytes "
                     f"exceeds budget {cfg.vmem_block_budget}"))
+    _check_cache(repo, cfg, findings, report)
     report.sort(key=lambda e: (e["file"], e["line"]))
     return findings, report

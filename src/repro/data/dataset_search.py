@@ -123,7 +123,7 @@ class DatasetSearchIndex:
 
     def __init__(self, m: int = 256, seed: int = 0, key_space: int = 2 ** 31,
                  backend: str = "device", keep_host_oracle: bool = True,
-                 mesh=None, family: str = "icws"):
+                 mesh=None, family: str = "icws", packed: bool = False):
         if backend not in ("device", "host"):
             raise ValueError(f"unknown backend {backend!r}")
         if family not in FAMILY_NAMES:
@@ -162,8 +162,14 @@ class DatasetSearchIndex:
         # the single device-resident copy of all three field corpora: the
         # store resolves the corpus axis, shards its buffers over it, and
         # keeps capacity divisible by the shard count
+        # packed=True stores the corpus in the family's bit-packed wire
+        # layout and serves queries through the unpack-in-kernel estimate
+        # launches; rankings equal an unpacked index over bf16-roundtripped
+        # rows bit for bit (see repro.data.store.CorpusStore)
+        self.packed = bool(packed)
         self.store: Optional[CorpusStore] = (
-            CorpusStore(family=self.family, fields=len(FIELDS), mesh=mesh)
+            CorpusStore(family=self.family, fields=len(FIELDS), mesh=mesh,
+                        packed=self.packed)
             if self.keep_device_corpus else None)
         self._corpus_axis = (self.store.corpus_axis
                              if self.store is not None else None)
@@ -352,6 +358,24 @@ class DatasetSearchIndex:
         return self._query_batch_device(queries, top_k, min_join,
                                         tenant=tenant)
 
+    def _estimate(self, qcomps, cbufs):
+        """The fused single-device fields launch, routed to the packed
+        (unpack-in-kernel) twin when the store holds the packed layout."""
+        if self.packed:
+            return self.family.estimate_fields_packed(
+                qcomps, cbufs, qmap=QFIELD, cmap=CFIELD)
+        return self.family.estimate_fields(qcomps, cbufs,
+                                           qmap=QFIELD, cmap=CFIELD)
+
+    def _estimate_sharded(self, qcomps, cbufs):
+        if self.packed:
+            return self.family.estimate_fields_packed_sharded(
+                qcomps, cbufs, qmap=QFIELD, cmap=CFIELD, mesh=self.mesh,
+                axis=self._corpus_axis)
+        return self.family.estimate_fields_sharded(
+            qcomps, cbufs, qmap=QFIELD, cmap=CFIELD, mesh=self.mesh,
+            axis=self._corpus_axis)
+
     def _query_batch_device(self, queries, top_k: int, min_join: float,
                             tenant: Optional[str] = None
                             ) -> List[List[SearchResult]]:
@@ -389,20 +413,15 @@ class DatasetSearchIndex:
                 # launch -- per-query cost scales with THIS tenant's rows,
                 # not the arena (the performance-isolation fast path)
                 lo, hi = ranges[0]
-                est = self.family.estimate_fields(
-                    qcomps, tuple(c[:, lo:hi] for c in cbufs),
-                    qmap=QFIELD, cmap=CFIELD)
+                est = self._estimate(qcomps,
+                                     tuple(c[:, lo:hi] for c in cbufs))
             else:
                 # fragmented tenant: full-arena launch, gather the tenant's
                 # estimate columns (O(arena) compute, exact results)
                 if self._corpus_axis is not None:
-                    est = self.family.estimate_fields_sharded(
-                        qcomps, cbufs, qmap=QFIELD, cmap=CFIELD,
-                        mesh=self.mesh, axis=self._corpus_axis)
+                    est = self._estimate_sharded(qcomps, cbufs)
                 else:
-                    est = self.family.estimate_fields(qcomps, cbufs,
-                                                      qmap=QFIELD,
-                                                      cmap=CFIELD)
+                    est = self._estimate(qcomps, cbufs)
                 est = est[:, :, jnp.asarray(self.store.tenant_rows(tenant))]
             est = est[:, :, :P]
             k = min(top_k, P)
@@ -411,12 +430,9 @@ class DatasetSearchIndex:
             scores, idx = _top_k(score, k)
         else:
             if self._corpus_axis is not None:
-                est = self.family.estimate_fields_sharded(
-                    qcomps, cbufs, qmap=QFIELD, cmap=CFIELD,
-                    mesh=self.mesh, axis=self._corpus_axis)    # [6, Q, cap]
+                est = self._estimate_sharded(qcomps, cbufs)    # [6, Q, cap]
             else:
-                est = self.family.estimate_fields(qcomps, cbufs,
-                                                  qmap=QFIELD, cmap=CFIELD)
+                est = self._estimate(qcomps, cbufs)
             P = len(self.tables)
             est = est[:, :, :P]
 

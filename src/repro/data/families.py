@@ -60,9 +60,18 @@ from repro.kernels.common import (ICWS_BETA_STREAM, ICWS_C1_STREAM,
                                   ICWS_R1_STREAM, ICWS_R2_STREAM, hash_u32,
                                   salt_for, uniform01)
 from repro.kernels.estimate import CORPUS_PAD_FP
+from repro.kernels.packed import pack_halfwords_f32, unpack_halfwords_f32
 from repro.kernels.ref import BIG
 
 from .ingest import pad_linear_batch, pad_sample_batch, sketch_batch
+
+
+def _pad_last(x: jnp.ndarray, n: int, value=0) -> jnp.ndarray:
+    """Pad the last dim by ``n`` elements of ``value`` (0 -> unchanged)."""
+    if not n:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, n)]
+    return jnp.pad(x, widths, constant_values=value)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +140,53 @@ class ICWSFamily:
         return ops.icws_estimate_fields_sharded(fq, vq, nq, fpc, vc, nc,
                                                 qmap=qmap, cmap=cmap,
                                                 mesh=mesh, axis=axis)
+
+    @property
+    def packed_components(self) -> Tuple[ComponentSpec, ...]:
+        """Packed wire format: fingerprints stay full i32 lanes (31-bit
+        exact-match state), values pack two bf16 halfwords per i32 word
+        (odd m gains one inert pad slot), and the argkeys merge sidecar is
+        dropped -- packed corpora are frozen serving state, 6m + 4 bytes
+        per row vs 12m + 4 unpacked (50%)."""
+        me = self.m + (self.m % 2)
+        return (ComponentSpec("fingerprints", (me,), jnp.int32,
+                              CORPUS_PAD_FP),
+                ComponentSpec("packed_values", (me // 2,), jnp.int32, 0.0),
+                ComponentSpec("norms", (), jnp.float32, 0.0))
+
+    def pack_rows(self, rows):
+        """(fp, val, norm[, argkey]) -> packed components, any leading dims.
+        Values are bf16-truncated (exact thereafter); argkeys are dropped."""
+        fp = _pad_last(jnp.asarray(rows[0]).astype(jnp.int32), self.m % 2,
+                       CORPUS_PAD_FP)
+        val = _pad_last(jnp.asarray(rows[1]).astype(jnp.float32), self.m % 2)
+        return (fp, pack_halfwords_f32(val),
+                jnp.asarray(rows[2]).astype(jnp.float32))
+
+    def unpack_rows(self, rows):
+        """Packed components -> unpacked-layout rows, bitwise the fixpoint
+        of ``pack_rows`` (pack(unpack(p)) == p).  The argkeys sidecar comes
+        back zeroed: packed rows are frozen and cannot re-enter the merge
+        path."""
+        fp, w, norm = (jnp.asarray(x) for x in rows)
+        val = unpack_halfwords_f32(w)[..., :self.m]
+        return (fp[..., :self.m].astype(jnp.int32), val,
+                norm.astype(jnp.float32),
+                jnp.zeros(fp.shape[:-1] + (self.m,), jnp.int32))
+
+    def estimate_fields_packed(self, q, c, *, qmap, cmap):
+        fq, vq, nq = q[0], q[1], q[2]
+        fpc, wc, nc = c[0], c[1], c[2]
+        return ops.icws_estimate_fields_packed(fq, vq, nq, fpc, wc, nc,
+                                               qmap=qmap, cmap=cmap)
+
+    def estimate_fields_packed_sharded(self, q, c, *, qmap, cmap, mesh,
+                                       axis):
+        fq, vq, nq = q[0], q[1], q[2]
+        fpc, wc, nc = c[0], c[1], c[2]
+        return ops.icws_estimate_fields_packed_sharded(
+            fq, vq, nq, fpc, wc, nc, qmap=qmap, cmap=cmap, mesh=mesh,
+            axis=axis)
 
     def merge_rows(self, a, b):
         """Coordinated per-slot min-merge of row-aligned ICWS components.
@@ -230,6 +286,33 @@ class _LinearFamily:
         return ops.linear_estimate_fields_sharded(q[0], c[0], qmap=qmap,
                                                   cmap=cmap, mesh=mesh,
                                                   axis=axis)
+
+    @property
+    def packed_components(self) -> Tuple[ComponentSpec, ...]:
+        """Packed wire format: every table cell bf16-truncated, two cells
+        per i32 word (odd widths gain one zero column) -- half the
+        unpacked ``[R, W]`` f32 bytes.  Zero-fill stays inert: the zero
+        word decodes to a zero table."""
+        we = self.width + (self.width % 2)
+        return (ComponentSpec("packed_tables", (self.reps, we // 2),
+                              jnp.int32, 0.0),)
+
+    def pack_rows(self, rows):
+        t = _pad_last(jnp.asarray(rows[0]).astype(jnp.float32),
+                      self.width % 2)
+        return (pack_halfwords_f32(t),)
+
+    def unpack_rows(self, rows):
+        return (unpack_halfwords_f32(jnp.asarray(rows[0]))[..., :self.width],)
+
+    def estimate_fields_packed(self, q, c, *, qmap, cmap):
+        return ops.linear_estimate_fields_packed(q[0], c[0], qmap=qmap,
+                                                 cmap=cmap)
+
+    def estimate_fields_packed_sharded(self, q, c, *, qmap, cmap, mesh,
+                                       axis):
+        return ops.linear_estimate_fields_packed_sharded(
+            q[0], c[0], qmap=qmap, cmap=cmap, mesh=mesh, axis=axis)
 
     def merge_rows(self, a, b):
         """Exact merge by linearity: ``S(x + y) = S(x) + S(y)`` -- the
@@ -331,6 +414,46 @@ class _SamplingFamily:
         return ops.sample_estimate_fields_sharded(kq, vq, tq, kc, vc, tc,
                                                   qmap=qmap, cmap=cmap,
                                                   mesh=mesh, axis=axis)
+
+    @property
+    def packed_components(self) -> Tuple[ComponentSpec, ...]:
+        """Packed wire format: sample keys stay full i32 lanes (31-bit
+        exact-match state -- the information floor of this layout), values
+        pack two bf16 halfwords per i32 word (odd slot counts gain one
+        inert pad slot), taus stay f32: 6S + 4 bytes per row vs 8S + 4
+        unpacked (75%)."""
+        se = self.slots + (self.slots % 2)
+        return (ComponentSpec("keys", (se,), jnp.int32, CORPUS_PAD_FP),
+                ComponentSpec("packed_values", (se // 2,), jnp.int32, 0.0),
+                ComponentSpec("taus", (), jnp.float32, 0.0))
+
+    def pack_rows(self, rows):
+        k = _pad_last(jnp.asarray(rows[0]).astype(jnp.int32),
+                      self.slots % 2, CORPUS_PAD_FP)
+        v = _pad_last(jnp.asarray(rows[1]).astype(jnp.float32),
+                      self.slots % 2)
+        return (k, pack_halfwords_f32(v),
+                jnp.asarray(rows[2]).astype(jnp.float32))
+
+    def unpack_rows(self, rows):
+        k, w, t = (jnp.asarray(x) for x in rows)
+        return (k[..., :self.slots].astype(jnp.int32),
+                unpack_halfwords_f32(w)[..., :self.slots],
+                t.astype(jnp.float32))
+
+    def estimate_fields_packed(self, q, c, *, qmap, cmap):
+        kq, vq, tq = q
+        kc, wc, tc = c
+        return ops.sample_estimate_fields_packed(kq, vq, tq, kc, wc, tc,
+                                                 qmap=qmap, cmap=cmap)
+
+    def estimate_fields_packed_sharded(self, q, c, *, qmap, cmap, mesh,
+                                       axis):
+        kq, vq, tq = q
+        kc, wc, tc = c
+        return ops.sample_estimate_fields_packed_sharded(
+            kq, vq, tq, kc, wc, tc, qmap=qmap, cmap=cmap, mesh=mesh,
+            axis=axis)
 
     def _merge_keep(self, live, h, vals, ta, tb):
         raise NotImplementedError

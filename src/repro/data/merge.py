@@ -108,6 +108,11 @@ def merge_stores(a: CorpusStore, b: CorpusStore) -> CorpusStore:
 
     Returns a fresh store (on ``a``'s mesh); the inputs are not consumed.
     """
+    if getattr(a, "packed", False) or getattr(b, "packed", False):
+        raise ValueError(
+            "cannot merge packed stores: the packed wire layout is frozen "
+            "(ICWS drops the argkeys re-leveling sidecar and values are "
+            "bf16-truncated) -- merge unpacked stores, then pack the result")
     if a.family != b.family:
         raise ValueError(
             "cannot merge stores of different families or seeds: "

@@ -109,11 +109,26 @@ class CorpusStore:
     :class:`repro.data.corpus.SketchCorpus`, a thin view over this class);
     ``fields=3`` backs :class:`repro.data.dataset_search.DatasetSearchIndex`
     with all three §1.3 field corpora in one canonical stack.
+
+    ``packed=True`` switches the resident buffers to the family's bit-packed
+    wire layout (``family.packed_components``): sketch values are stored as
+    bf16 halfword pairs in int32 words and decoded *inside* the estimate
+    kernels, cutting resident bytes/row to ~50% (icws / linear) or ~75%
+    (ts / ps, whose 31-bit exact-match keys are the information floor).
+    ``append`` still takes ordinary unpacked sketch rows -- they are
+    validated against the family's unpacked contract, then packed via
+    ``family.pack_rows`` before the device write, so ingest call sites are
+    unchanged.  Query paths consume the packed buffers directly through
+    ``family.estimate_fields_packed``; rankings are bitwise identical to an
+    unpacked store holding the bf16-roundtripped rows.  Packed stores are
+    frozen for merging: the ICWS packed layout drops the ``argkeys``
+    re-leveling sidecar, so :func:`repro.data.merge.merge_stores` refuses
+    them.
     """
 
     def __init__(self, m: "int | None" = None, fields: int = 1,
                  min_capacity: int = 64, mesh=None, row_multiple: int = 0,
-                 family=None):
+                 family=None, packed: bool = False):
         if family is None:
             if m is None:
                 raise ValueError("provide a family or an ICWS sample count m")
@@ -127,7 +142,12 @@ class CorpusStore:
         if min_capacity < 1:
             raise ValueError("min_capacity must be >= 1")
         self.family = family
-        self._specs = tuple(family.components)
+        self.packed = bool(packed)
+        # append always validates against the unpacked row contract; the
+        # resident layout is the packed one when packed=True
+        self._row_specs = tuple(family.components)
+        self._specs = (tuple(family.packed_components) if self.packed
+                       else self._row_specs)
         self._fills = tuple(s.fill for s in self._specs)
         self.m = getattr(family, "m", None)
         self.fields = int(fields)
@@ -188,15 +208,16 @@ class CorpusStore:
         shared arena (see the module docstring); ``None`` leaves them in
         the tenant-less pool.
         """
-        if len(rows) != len(self._specs):
+        if len(rows) != len(self._row_specs):
             raise ValueError(
-                f"{self.family.name} rows have {len(self._specs)} components "
-                f"({', '.join(s.name for s in self._specs)}); got {len(rows)}")
-        rows = [jnp.asarray(r, s.dtype) for r, s in zip(rows, self._specs)]
+                f"{self.family.name} rows have {len(self._row_specs)} "
+                f"components ({', '.join(s.name for s in self._row_specs)}); "
+                f"got {len(rows)}")
+        rows = [jnp.asarray(r, s.dtype) for r, s in zip(rows, self._row_specs)]
         if self.fields == 1:
             rows = [r[None] if r.ndim == 1 + len(s.trailing) else r
-                    for r, s in zip(rows, self._specs)]
-        lead = self._specs[0]
+                    for r, s in zip(rows, self._row_specs)]
+        lead = self._row_specs[0]
         if (rows[0].ndim != 2 + len(lead.trailing)
                 or rows[0].shape[0] != self.fields
                 or rows[0].shape[2:] != lead.trailing):
@@ -205,7 +226,7 @@ class CorpusStore:
                 f"{', '.join(map(str, lead.trailing))}]; "
                 f"got {tuple(rows[0].shape)}")
         b = int(rows[0].shape[1])
-        for r, s in zip(rows[1:], self._specs[1:]):
+        for r, s in zip(rows[1:], self._row_specs[1:]):
             if r.shape != (self.fields, b) + s.trailing:
                 raise ValueError(
                     f"{s.name} rows {tuple(r.shape)} do not match "
@@ -213,6 +234,9 @@ class CorpusStore:
                     f"{(self.fields, b) + s.trailing}")
         if b == 0:
             return
+        if self.packed:
+            rows = [jnp.asarray(r, s.dtype) for r, s in
+                    zip(self.family.pack_rows(tuple(rows)), self._specs)]
         self._reserve(self._size + b)
         with _quiet_cpu_donation():
             self._bufs = _write_rows(self._bufs, tuple(rows),
@@ -340,6 +364,18 @@ class CorpusStore:
         if self._size == 0:
             raise ValueError("empty corpus")
         return tuple(b[:, :self._size] for b in self._bufs)
+
+    def bytes_per_row(self) -> int:
+        """Resident device bytes per stored sketch row (one field), straight
+        from the component specs that size the buffers: ``sum(itemsize *
+        prod(trailing))``.  This is the quantity the packed layout shrinks
+        (the ``perf/scale`` gate compares packed vs unpacked stores) --
+        distinct from :meth:`storage_doubles`, the paper's idealized
+        double-equivalents ledger."""
+        return int(sum(
+            np.dtype(s.dtype).itemsize
+            * int(np.prod(s.trailing, dtype=np.int64))
+            for s in self._specs))
 
     def storage_doubles(self) -> float:
         """Paper accounting, per family (icws: 1.5 doubles per sample + 1

@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .packed import unpack_halfwords_f32
+
 # Pad sentinels -- the single definition of the padding convention every
 # estimate variant (and the corpus store / sharded wrappers) relies on:
 # query padding (-1, also the empty-sketch fingerprint) and corpus padding
@@ -301,6 +303,104 @@ def estimate_fields_pallas(fq, vq, fpc, vc, *, qmap, cmap, bq: int = 8,
     return cnt[:, :Q, :P], sw[:, :Q, :P]
 
 
+def _fields_packed_kernel(fq_ref, vq_ref, fc_ref, wc_ref, cnt_ref, sw_ref):
+    m_idx = pl.program_id(3)
+    # decode the corpus value tile in VMEM: [bp, bm//2] i32 -> [bp, bm] f32.
+    # The decode is exact (bf16 -> f32), so the tile is bitwise equal to the
+    # unpacked-roundtripped corpus tile and _mvm_body reduces identically.
+    vc = unpack_halfwords_f32(wc_ref[0, :, :])
+    cnt, sw = _mvm_body(fq_ref[0, :, :], vq_ref[0, :, :], fc_ref[0, :, :], vc)
+
+    @pl.when(m_idx == 0)
+    def _init():
+        cnt_ref[0, :, :] = cnt
+        sw_ref[0, :, :] = sw
+
+    @pl.when(m_idx != 0)
+    def _acc():
+        cnt_ref[0, :, :] = cnt_ref[0, :, :] + cnt
+        sw_ref[0, :, :] = sw_ref[0, :, :] + sw
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap", "bq", "bp", "bm",
+                                             "interpret"))
+def estimate_fields_packed_pallas(fq, vq, fpc, wc, *, qmap, cmap, bq: int = 8,
+                                  bp: int = 128, bm: int = 128,
+                                  interpret: bool = True):
+    """:func:`estimate_fields_pallas` over a bit-packed corpus value plane.
+
+    Identical contract except the corpus values arrive packed: ``wc`` is
+    ``[C, P, m // 2]`` i32 bf16-halfword words (see
+    :mod:`repro.kernels.packed`) instead of ``vc [C, P, m]`` f32, and the
+    kernel decodes each ``[bp, bm // 2]`` tile to ``[bp, bm]`` in VMEM --
+    the f32 plane never exists in HBM.  ``m`` and ``bm`` must be even
+    (odd-m families pad one inert sample at pack time).  Zero words decode
+    to value 0.0 and spare rows keep sentinel fingerprints, so the packed
+    layout inherits the inert-spare-row invariant unchanged.
+    """
+    qmap = tuple(int(i) for i in qmap)
+    cmap = tuple(int(i) for i in cmap)
+    if len(qmap) != len(cmap):
+        raise ValueError("qmap/cmap length mismatch")
+    if not qmap:
+        raise ValueError("qmap/cmap must name at least one field pair")
+    G = len(qmap)
+    F, Q, m = fq.shape
+    C, P, mw = wc.shape
+    if m % 2 or bm % 2:
+        raise ValueError(f"packed estimate needs even m and bm; got "
+                         f"m={m}, bm={bm}")
+    if fpc.shape[2] != m or 2 * mw != m:
+        raise ValueError(f"packed corpus {(fpc.shape[2], 2 * mw)} does not "
+                         f"match query m={m}")
+    if min(qmap) < 0 or max(qmap) >= F or min(cmap) < 0 or max(cmap) >= C:
+        raise ValueError("field map index out of range")
+    q_pad = (-Q) % bq
+    p_pad = (-P) % bp
+    m_pad = (-m) % bm           # even: m and bm are both even
+    if q_pad or m_pad:
+        fq = jnp.pad(fq, ((0, 0), (0, q_pad), (0, m_pad)),
+                     constant_values=QUERY_PAD_FP)
+        vq = jnp.pad(vq, ((0, 0), (0, q_pad), (0, m_pad)))
+    if p_pad or m_pad:
+        fpc = jnp.pad(fpc, ((0, 0), (0, p_pad), (0, m_pad)),
+                      constant_values=CORPUS_PAD_FP)
+        # zero words decode to value 0.0 -- the same inert fill the
+        # unpacked path pads vc with
+        wc = jnp.pad(wc, ((0, 0), (0, p_pad), (0, m_pad // 2)))
+    Qp, mp = fq.shape[1:]
+    Pp = fpc.shape[1]
+
+    def _lut(table):
+        # static lookup via select arithmetic, as estimate_fields_pallas
+        def sel(g):
+            idx = table[0]
+            for i, v in enumerate(table[1:], start=1):
+                idx = jnp.where(g == i, v, idx)
+            return idx
+        return sel
+
+    qsel, csel = _lut(qmap), _lut(cmap)
+    grid = (G, Qp // bq, Pp // bp, mp // bm)
+    cnt, sw = pl.pallas_call(
+        _fields_packed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, bm), lambda g, q, p, mi: (qsel(g), q, mi)),
+            pl.BlockSpec((1, bq, bm), lambda g, q, p, mi: (qsel(g), q, mi)),
+            pl.BlockSpec((1, bp, bm), lambda g, q, p, mi: (csel(g), p, mi)),
+            pl.BlockSpec((1, bp, bm // 2),
+                         lambda g, q, p, mi: (csel(g), p, mi)),
+        ],
+        out_specs=[pl.BlockSpec((1, bq, bp),
+                                lambda g, q, p, mi: (g, q, p))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((G, Qp, Pp), jnp.float32)] * 2,
+        interpret=interpret,
+    )(fq.astype(jnp.int32), vq.astype(jnp.float32),
+      fpc.astype(jnp.int32), wc.astype(jnp.int32))
+    return cnt[:, :Q, :P], sw[:, :Q, :P]
+
+
 # ---------------------------------------------------------------------------
 # Linear-family estimation: per-rep sketch dots as MXU matmuls
 # ---------------------------------------------------------------------------
@@ -394,4 +494,87 @@ def linear_estimate_fields_pallas(tq, tc, *, qmap, cmap, bq: int = 8,
         out_shape=jax.ShapeDtypeStruct((G, R, Qp, Pp), jnp.float32),
         interpret=interpret,
     )(tq.astype(jnp.float32), tc.astype(jnp.float32))
+    return out[:, :, :Q, :P]
+
+
+def _linear_fields_packed_kernel(tq_ref, wc_ref, out_ref):
+    w_idx = pl.program_id(3)
+    a = tq_ref[0, :, 0, :]                                    # [BQ, BW]
+    b = unpack_halfwords_f32(wc_ref[0, :, 0, :])              # [BP, BW]
+    tile = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # [BQ, BP]
+
+    @pl.when(w_idx == 0)
+    def _init():
+        out_ref[0, 0, :, :] = tile
+
+    @pl.when(w_idx != 0)
+    def _acc():
+        out_ref[0, 0, :, :] = out_ref[0, 0, :, :] + tile
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap", "bq", "bp", "bw",
+                                             "interpret"))
+def linear_estimate_fields_packed_pallas(tq, wc, *, qmap, cmap, bq: int = 8,
+                                         bp: int = 128, bw: int = 128,
+                                         interpret: bool = True):
+    """:func:`linear_estimate_fields_pallas` over bf16-halfword corpus tables.
+
+    ``wc`` is ``[C, P, R, W // 2]`` i32 packed words in place of the f32
+    ``tc [C, P, R, W]``; each corpus tile decodes in VMEM before the MXU
+    dot.  ``W`` and ``bw`` must be even (odd widths gain one zero column at
+    pack time -- inert under the dot, exactly like zero W-padding).
+    """
+    qmap = tuple(int(i) for i in qmap)
+    cmap = tuple(int(i) for i in cmap)
+    if len(qmap) != len(cmap):
+        raise ValueError("qmap/cmap length mismatch")
+    if not qmap:
+        raise ValueError("qmap/cmap must name at least one field pair")
+    G = len(qmap)
+    F, Q, R, W = tq.shape
+    C, P, Rc, Ww = wc.shape
+    if W % 2 or bw % 2:
+        raise ValueError(f"packed linear estimate needs even W and bw; got "
+                         f"W={W}, bw={bw}")
+    if (R, W) != (Rc, 2 * Ww):
+        raise ValueError(f"query tables {(R, W)} do not match packed corpus "
+                         f"tables {(Rc, 2 * Ww)}")
+    if min(qmap) < 0 or max(qmap) >= F or min(cmap) < 0 or max(cmap) >= C:
+        raise ValueError("field map index out of range")
+    q_pad = (-Q) % bq
+    p_pad = (-P) % bp
+    w_pad = (-W) % bw           # even: W and bw are both even
+    if q_pad or w_pad:
+        tq = jnp.pad(tq, ((0, 0), (0, q_pad), (0, 0), (0, w_pad)))
+    if p_pad or w_pad:
+        wc = jnp.pad(wc, ((0, 0), (0, p_pad), (0, 0), (0, w_pad // 2)))
+    Qp, Pp, Wp = Q + q_pad, P + p_pad, W + w_pad
+
+    def _lut(table):
+        # static lookup via select arithmetic, as estimate_fields_pallas
+        def sel(g):
+            idx = table[0]
+            for i, v in enumerate(table[1:], start=1):
+                idx = jnp.where(g == i, v, idx)
+            return idx
+        return sel
+
+    qsel, csel = _lut(qmap), _lut(cmap)
+    grid = (G * R, Qp // bq, Pp // bp, Wp // bw)
+    out = pl.pallas_call(
+        _linear_fields_packed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, bw),
+                         lambda gr, q, p, wi: (qsel(gr // R), q, gr % R, wi)),
+            pl.BlockSpec((1, bp, 1, bw // 2),
+                         lambda gr, q, p, wi: (csel(gr // R), p, gr % R, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, bp),
+                               lambda gr, q, p, wi: (gr // R, gr % R, q, p)),
+        out_shape=jax.ShapeDtypeStruct((G, R, Qp, Pp), jnp.float32),
+        interpret=interpret,
+    )(tq.astype(jnp.float32), wc.astype(jnp.int32))
     return out[:, :, :Q, :P]

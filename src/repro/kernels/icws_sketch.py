@@ -33,6 +33,7 @@ from jax.experimental import pallas as pl
 from .common import (ICWS_BETA_STREAM, ICWS_C1_STREAM, ICWS_C2_STREAM,
                      ICWS_FP_STREAM, ICWS_R1_STREAM, ICWS_R2_STREAM,
                      hash_u32, salt_for, uniform01)
+from .packed import pack_halfwords_f32
 from .ref import BIG
 
 
@@ -92,10 +93,37 @@ def _icws_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
         out_key_ref[:, :] = jnp.where(better, key_sel, out_key_ref[:, :])
 
 
+def _icws_kernel_packed(w_ref, key_ref, val_ref, fp_ref, out_val_ref,
+                        amin_ref, out_key_ref, packed_ref, *, seed: int,
+                        bm: int, bn: int, m_live: int, n_steps: int):
+    """The sketch kernel plus a pack-on-output epilogue: after the final
+    non-zero tile has merged, the per-row value block is bf16-halfword
+    packed in VMEM (see :mod:`repro.kernels.packed`) and written as a fifth
+    output -- the packed plane a packed :class:`CorpusStore` appends
+    directly, with no host-side re-pack of the f32 values.  Samples beyond
+    ``m_live`` (bm padding / the odd-m inert slot) and empty rows are
+    zeroed before packing, matching the host epilogue's empty fixup and
+    ``pack_rows``' zero pad bit for bit.
+    """
+    _icws_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
+                 out_key_ref, seed=seed, bm=bm, bn=bn)
+    m_idx = pl.program_id(1)
+    n_idx = pl.program_id(2)
+
+    @pl.when(n_idx == n_steps - 1)
+    def _pack():
+        t = m_idx * bm + jax.lax.iota(jnp.int32, bm)
+        v = out_val_ref[:, :]
+        v = jnp.where((t < m_live)[None, :], v, 0.0)
+        v = jnp.where(amin_ref[:, :] >= BIG, 0.0, v)
+        packed_ref[:, :] = pack_halfwords_f32(v)
+
+
 @functools.partial(jax.jit, static_argnames=("m", "seed", "br", "bm", "bn",
-                                             "interpret"))
+                                             "pack_vals", "interpret"))
 def icws_sketch_pallas(w, keys, vals, *, m: int, seed: int, br: int = 1,
-                       bm: int = 128, bn: int = 256, interpret: bool = True):
+                       bm: int = 128, bn: int = 256,
+                       pack_vals: bool = False, interpret: bool = True):
     """Batched ICWS sketch via Pallas.  See :func:`repro.kernels.ref.icws_sketch_ref`.
 
     Args: w/keys/vals [B, N] (N padded to a multiple of ``bn`` by the caller
@@ -104,6 +132,11 @@ def icws_sketch_pallas(w, keys, vals, *, m: int, seed: int, br: int = 1,
     the sidecar the merge path re-levels from; 0 for empty inputs).
     ``br`` rows are sketched per grid step (pad rows are all-zero => empty);
     results are bitwise identical for every (br, bm, bn) choice.
+
+    With ``pack_vals=True`` (needs even ``bm``) a fifth output is appended:
+    ``[B, (m + m % 2) // 2]`` i32 bf16-halfword packed values, produced
+    in-kernel at the last non-zero grid step -- bitwise equal to
+    ``pack_halfwords_f32`` of the (zero-padded-to-even) ``val`` output.
     """
     B, N = w.shape
     n_pad = (-N) % bn
@@ -117,31 +150,68 @@ def icws_sketch_pallas(w, keys, vals, *, m: int, seed: int, br: int = 1,
     Bp, Np = w.shape
 
     grid = (Bp // br, mp // bm, Np // bn)
-    kernel = functools.partial(_icws_kernel, seed=seed, bm=bm, bn=bn)
-    fp, val, amin, key = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
-            pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
-            pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
-        ],
-        out_specs=[
-            pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
-            pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
-            pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
-            pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
-            jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
-            jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
-            jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
-        ],
-        interpret=interpret,
-    )(w.astype(jnp.float32), keys.astype(jnp.int32), vals.astype(jnp.float32))
+    if pack_vals:
+        if bm % 2:
+            raise ValueError(f"pack_vals needs an even bm; got bm={bm}")
+        kernel = functools.partial(_icws_kernel_packed, seed=seed, bm=bm,
+                                   bn=bn, m_live=m, n_steps=Np // bn)
+        fp, val, amin, key, packed = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
+                pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
+                pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
+            ],
+            out_specs=[
+                pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+                pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+                pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+                pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+                pl.BlockSpec((br, bm // 2), lambda b, mi, ni: (b, mi)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
+                jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
+                jax.ShapeDtypeStruct((Bp, mp // 2), jnp.int32),
+            ],
+            interpret=interpret,
+        )(w.astype(jnp.float32), keys.astype(jnp.int32),
+          vals.astype(jnp.float32))
+    else:
+        kernel = functools.partial(_icws_kernel, seed=seed, bm=bm, bn=bn)
+        fp, val, amin, key = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
+                pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
+                pl.BlockSpec((br, bn), lambda b, mi, ni: (b, ni)),
+            ],
+            out_specs=[
+                pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+                pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+                pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+                pl.BlockSpec((br, bm), lambda b, mi, ni: (b, mi)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
+                jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, mp), jnp.int32),
+            ],
+            interpret=interpret,
+        )(w.astype(jnp.float32), keys.astype(jnp.int32),
+          vals.astype(jnp.float32))
+        packed = None
 
     fp, val, amin, key = fp[:B, :m], val[:B, :m], amin[:B, :m], key[:B, :m]
     empty = amin >= BIG
-    return (jnp.where(empty, -1, fp), jnp.where(empty, 0.0, val), amin,
+    outs = (jnp.where(empty, -1, fp), jnp.where(empty, 0.0, val), amin,
             jnp.where(empty, 0, key))
+    if pack_vals:
+        me = m + (m % 2)
+        return outs + (packed[:B, :me // 2],)
+    return outs

@@ -14,16 +14,20 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PSpec
 
 from repro import compat
+from repro.roofline import autotune
 
 from . import ref
 from .countsketch import countsketch_pallas, countsketch_sparse_pallas
-from .estimate import (CORPUS_PAD_FP, estimate_fields_pallas,
+from .estimate import (CORPUS_PAD_FP, QUERY_PAD_FP, estimate_fields_pallas,
+                       estimate_fields_packed_pallas,
                        estimate_many_vs_many_pallas,
                        estimate_one_vs_many_pallas, estimate_partials_pallas,
+                       linear_estimate_fields_packed_pallas,
                        linear_estimate_fields_pallas)
 from .icws_sketch import icws_sketch_pallas
 from .jl_sketch import jl_sketch_pallas
-from .sample_estimate import (sample_estimate_fields_pallas,
+from .sample_estimate import (sample_estimate_fields_packed_pallas,
+                              sample_estimate_fields_pallas,
                               sample_inclusion_probs)
 
 
@@ -31,19 +35,42 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def icws_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0):
+def _tuned(kernel: str, key, clamp):
+    """Autotuned block kwargs for one launch ({} -> the kernel's defaults).
+
+    Resolution happens at trace time on concrete shapes (the wrappers are
+    jit'd with static field maps), so the cache file is consulted once per
+    traced shape, never per call.  Row-dim blocks are clamped to the
+    launch's padded row count (:func:`repro.roofline.autotune.resolve`);
+    reduction-dim blocks come back exactly as tuned, keyed only by the
+    sketch width, which is what keeps every bitwise ranking identity
+    (batched/sequential, sharded/single-device, tenant, packed/unpacked)
+    intact under tuning.
+    """
+    return autotune.resolve(kernel, jax.default_backend(), key, clamp=clamp)
+
+
+def icws_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0,
+                pack_vals: bool = False):
     """Device ICWS sketch of padded sparse batch.
     [B,N] -> (fp, val, amin, argkey) [B,m].
 
     ``row_block=0`` auto-picks: large batches (serving micro-batches, lake
     ingest) sketch several rows per grid step; small/single-query launches
-    keep the minimal-VMEM one-row tiling.  Results are bitwise identical
-    either way.
+    keep the minimal-VMEM one-row tiling; a tuned ``icws_sketch`` cache
+    entry (keyed by (m, N)) overrides both when present.  Results are
+    bitwise identical either way.  ``pack_vals=True`` appends the
+    bf16-halfword packed value plane ``[B, (m + m % 2) // 2]`` i32 as a
+    fifth output, packed in-kernel (see :func:`icws_sketch_pallas`).
     """
     if row_block == 0:
         row_block = 4 if w.shape[0] >= 8 else 1
-    return icws_sketch_pallas(w, keys, vals, m=m, seed=seed, br=row_block,
-                              interpret=_interpret())
+    blocks = _tuned("icws_sketch", {"m": m, "N": w.shape[1]},
+                    {"br": (w.shape[0], 1)})
+    br = blocks.pop("br", row_block)
+    return icws_sketch_pallas(w, keys, vals, m=m, seed=seed, br=br,
+                              pack_vals=pack_vals, interpret=_interpret(),
+                              **blocks)
 
 
 def countsketch(x, *, width: int, reps: int = 5, seed: int = 0, offset: int = 0):
@@ -89,8 +116,11 @@ def estimate_partials_many_vs_many(fq, vq, fpc, vc):
 
 def estimate_partials_fields(fq, vq, fpc, vc, *, qmap, cmap):
     """Fused multi-field partial sums: one launch for all field pairs."""
+    blocks = _tuned("estimate_fields", {"m": fpc.shape[2]},
+                    {"bq": (fq.shape[1], 8), "bp": (fpc.shape[1], 128)})
     return estimate_fields_pallas(fq, vq, fpc, vc, qmap=tuple(qmap),
-                                  cmap=tuple(cmap), interpret=_interpret())
+                                  cmap=tuple(cmap), interpret=_interpret(),
+                                  **blocks)
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -168,8 +198,10 @@ def linear_estimate_fields(tq, tc, *, qmap, cmap):
     JL and CS share this one wrapper).  Zero rows (empty sketches, spare
     store capacity, padding) estimate to zero with no sentinel machinery.
     """
+    blocks = _tuned("linear_estimate_fields", {"W": tq.shape[3]},
+                    {"bq": (tq.shape[1], 8), "bp": (tc.shape[1], 128)})
     dots = linear_estimate_fields_pallas(tq, tc, qmap=qmap, cmap=cmap,
-                                         interpret=_interpret())
+                                         interpret=_interpret(), **blocks)
     return jnp.median(dots, axis=1)
 
 
@@ -206,9 +238,89 @@ def sample_estimate_fields(kq, vq, tq, kc, vc, tc, *, qmap, cmap):
     """
     aq = sample_inclusion_probs(vq, tq)
     ac = sample_inclusion_probs(vc, tc)
+    blocks = _tuned("sample_estimate_fields", {"S": kq.shape[2]},
+                    {"bq": (kq.shape[1], 8), "bp": (kc.shape[1], 8)})
     return sample_estimate_fields_pallas(kq, vq, aq, kc, vc, ac,
                                          qmap=qmap, cmap=cmap,
-                                         interpret=_interpret())
+                                         interpret=_interpret(), **blocks)
+
+
+# ---------------------------------------------------------------------------
+# packed-corpus estimation: the store's bit-packed buffers, decoded in-kernel
+# ---------------------------------------------------------------------------
+# Each wrapper mirrors its unpacked twin exactly -- same epilogue, same true
+# sketch width in every formula -- with the corpus value plane arriving as
+# bf16-halfword words (see repro.kernels.packed).  Queries are sketched
+# fresh per request and stay unpacked; when the stored width gained an
+# inert pad slot (odd m rounded up to even at pack time), the query is
+# padded here with the standard sentinels, which the kernel guards already
+# treat as dead.  Block sizes resolve from the same autotune cache entries
+# as the unpacked path (widths even-normalized in the cache key), so packed
+# and unpacked launches always share a reduction order -- the packed
+# estimates are bitwise equal to the unpacked path run on
+# family.unpack_rows(family.pack_rows(rows)).
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
+def icws_estimate_fields_packed(fq, vq, nq, fpc, wc, nc, *, qmap, cmap):
+    """Packed-corpus :func:`icws_estimate_fields`: fpc ``[C, P, me]`` i32
+    fingerprints, wc ``[C, P, me // 2]`` i32 packed values (me = m rounded
+    up to even), nc ``[C, P]`` norms.  Returns [G, Q, P] f32."""
+    m = fq.shape[2]
+    me = fpc.shape[2]
+    if me != m:
+        fq = jnp.pad(fq, ((0, 0), (0, 0), (0, me - m)),
+                     constant_values=QUERY_PAD_FP)
+        vq = jnp.pad(vq, ((0, 0), (0, 0), (0, me - m)))
+    blocks = _tuned("estimate_fields", {"m": me},
+                    {"bq": (fq.shape[1], 8), "bp": (fpc.shape[1], 128)})
+    cnt, sw = estimate_fields_packed_pallas(fq, vq, fpc, wc,
+                                            qmap=tuple(qmap),
+                                            cmap=tuple(cmap),
+                                            interpret=_interpret(), **blocks)
+    # epilogue over the TRUE sample count m, not the even-padded width:
+    # the pad slot never collides, so cnt/sw match the unpacked launch
+    j_hat = cnt / m
+    m_tilde = 2.0 / (1.0 + j_hat)
+    nqg = jnp.stack([nq[qf] for qf in qmap])[:, :, None]    # [G, Q, 1]
+    ncg = jnp.stack([nc[cf] for cf in cmap])[:, None, :]    # [G, 1, P]
+    est = nqg * ncg * (m_tilde / m) * sw
+    return jnp.where((nqg == 0) | (ncg == 0), 0.0, est)
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
+def linear_estimate_fields_packed(tq, wc, *, qmap, cmap):
+    """Packed-corpus :func:`linear_estimate_fields`: wc ``[C, P, R,
+    We // 2]`` i32 packed tables (We = W rounded up to even).  The query
+    gains zero columns for the pad width -- inert under the dot."""
+    W = tq.shape[3]
+    We = 2 * wc.shape[3]
+    if We != W:
+        tq = jnp.pad(tq, ((0, 0), (0, 0), (0, 0), (0, We - W)))
+    blocks = _tuned("linear_estimate_fields", {"W": We},
+                    {"bq": (tq.shape[1], 8), "bp": (wc.shape[1], 128)})
+    dots = linear_estimate_fields_packed_pallas(tq, wc, qmap=qmap, cmap=cmap,
+                                                interpret=_interpret(),
+                                                **blocks)
+    return jnp.median(dots, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
+def sample_estimate_fields_packed(kq, vq, tq, kc, wc, tc, *, qmap, cmap):
+    """Packed-corpus :func:`sample_estimate_fields`: kc ``[C, P, Se]`` i32
+    keys, wc ``[C, P, Se // 2]`` i32 packed values (Se = slots rounded up
+    to even), tc ``[C, P]`` taus.  Corpus inclusion probabilities are
+    recomputed in-kernel from the decoded tile and tau, with the TRUE slot
+    count (the query's) in the formula -- the pad slot decodes to value 0
+    and lands on probability 0, exactly like zero-padded ``ac``."""
+    aq = sample_inclusion_probs(vq, tq)
+    s_total = kq.shape[2]
+    blocks = _tuned("sample_estimate_fields", {"S": s_total},
+                    {"bq": (kq.shape[1], 8), "bp": (kc.shape[1], 8)})
+    return sample_estimate_fields_packed_pallas(kq, vq, aq, kc, wc, tc,
+                                                s_total=s_total,
+                                                qmap=qmap, cmap=cmap,
+                                                interpret=_interpret(),
+                                                **blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -354,6 +466,91 @@ def sample_estimate_fields_sharded(kq, vq, tq, kc, vc, tc, *, qmap, cmap,
     tc = _pad_corpus_rows(tc, pad, 1)
     f = _sample_fields_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
     return f(kq, vq, tq, kc, vc, tc)[:, :, :cap]
+
+
+# Packed sharded twins: identical row-sharding scheme to the unpacked
+# wrappers above (queries replicated, corpus rows split and padded with
+# inert spare-row fills -- sentinel keys/fingerprints, zero words, zero
+# norms/taus).  Per-shard launches resolve the SAME autotune cache entry
+# as the single-device launch (the key holds only the sketch width), so
+# the reduction order matches and the concatenated results stay bitwise
+# identical to the unsharded packed launch.
+
+@functools.lru_cache(maxsize=None)
+def _fields_packed_sharded_fn(mesh, axis: str, qmap, cmap):
+    def body(fq, vq, nq, fpc, wc, nc):
+        return icws_estimate_fields_packed(fq, vq, nq, fpc, wc, nc,
+                                           qmap=qmap, cmap=cmap)
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(), PSpec(),
+                  PSpec(None, axis), PSpec(None, axis), PSpec(None, axis)),
+        out_specs=PSpec(None, None, axis))
+
+
+def icws_estimate_fields_packed_sharded(fq, vq, nq, fpc, wc, nc, *, qmap,
+                                        cmap, mesh, axis="data"):
+    """Sharded :func:`icws_estimate_fields_packed`; returns ``[G, Q, cap]``
+    f32, bitwise identical to the single-device packed launch."""
+    d = mesh.shape[axis]
+    cap = fpc.shape[1]
+    pad = (-cap) % d
+    fpc = _pad_corpus_rows(fpc, pad, 1, CORPUS_PAD_FP)
+    wc = _pad_corpus_rows(wc, pad, 1)
+    nc = _pad_corpus_rows(nc, pad, 1)
+    f = _fields_packed_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
+    return f(fq, vq, nq, fpc, wc, nc)[:, :, :cap]
+
+
+@functools.lru_cache(maxsize=None)
+def _linear_fields_packed_sharded_fn(mesh, axis: str, qmap, cmap):
+    def body(tq, wc):
+        return linear_estimate_fields_packed(tq, wc, qmap=qmap, cmap=cmap)
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(None, axis, None, None)),
+        out_specs=PSpec(None, None, axis))
+
+
+def linear_estimate_fields_packed_sharded(tq, wc, *, qmap, cmap, mesh,
+                                          axis="data"):
+    """Sharded :func:`linear_estimate_fields_packed`; zero words decode to
+    zero tables, so row padding stays inert exactly as unpacked."""
+    d = mesh.shape[axis]
+    cap = wc.shape[1]
+    pad = (-cap) % d
+    wc = _pad_corpus_rows(wc, pad, 1)
+    f = _linear_fields_packed_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
+    return f(tq, wc)[:, :, :cap]
+
+
+@functools.lru_cache(maxsize=None)
+def _sample_fields_packed_sharded_fn(mesh, axis: str, qmap, cmap):
+    def body(kq, vq, tq, kc, wc, tc):
+        return sample_estimate_fields_packed(kq, vq, tq, kc, wc, tc,
+                                             qmap=qmap, cmap=cmap)
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(), PSpec(),
+                  PSpec(None, axis), PSpec(None, axis), PSpec(None, axis)),
+        out_specs=PSpec(None, None, axis))
+
+
+def sample_estimate_fields_packed_sharded(kq, vq, tq, kc, wc, tc, *, qmap,
+                                          cmap, mesh, axis="data"):
+    """Sharded :func:`sample_estimate_fields_packed`; pad rows carry
+    sentinel keys / zero words / zero tau, inert under the kernel guards."""
+    d = mesh.shape[axis]
+    cap = kc.shape[1]
+    pad = (-cap) % d
+    kc = _pad_corpus_rows(kc, pad, 1, CORPUS_PAD_FP)
+    wc = _pad_corpus_rows(wc, pad, 1)
+    tc = _pad_corpus_rows(tc, pad, 1)
+    f = _sample_fields_packed_sharded_fn(mesh, axis, tuple(qmap), tuple(cmap))
+    return f(kq, vq, tq, kc, wc, tc)[:, :, :cap]
 
 
 def sharded_top_k(score, k: int, *, mesh, axis="data"):

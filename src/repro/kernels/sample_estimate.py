@@ -48,11 +48,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .estimate import CORPUS_PAD_FP, QUERY_PAD_FP
+from .packed import unpack_halfwords_f32
 
 # Sampling rows reuse the estimate kernels' pad convention: empty / padded
 # query slots hold -1, corpus padding and spare store rows hold -2.
 SAMPLE_QUERY_PAD_KEY = QUERY_PAD_FP
 SAMPLE_CORPUS_PAD_KEY = CORPUS_PAD_FP
+
+
+def _inclusion_probs(v: jnp.ndarray, t: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Elementwise inclusion-probability core shared by the host-side
+    prologue and the packed kernel's in-VMEM recompute -- a single
+    definition so the two paths are bitwise identical by construction.
+    ``v`` f32 values, ``t`` f32 taus broadcastable against ``v``, ``m`` the
+    static slot count of the sketch scheme (NOT a padded tile width).
+    """
+    num = jnp.float32(m) * v * v
+    p = jnp.where(t > 0, jnp.minimum(1.0, num / jnp.where(t > 0, t, 1.0)),
+                  1.0)
+    return jnp.where(v != 0, p, 0.0)
 
 
 def sample_inclusion_probs(vals: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
@@ -64,13 +78,9 @@ def sample_inclusion_probs(vals: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
     empty slots pinned to probability 0 (the kernel's live-slot guard).
     The f64 host twin is :func:`repro.core.sampling.sample_probs`.
     """
-    m = vals.shape[-1]
-    v = vals.astype(jnp.float32)
-    t = tau.astype(jnp.float32)[..., None]
-    num = jnp.float32(m) * v * v
-    p = jnp.where(t > 0, jnp.minimum(1.0, num / jnp.where(t > 0, t, 1.0)),
-                  1.0)
-    return jnp.where(v != 0, p, 0.0)
+    return _inclusion_probs(vals.astype(jnp.float32),
+                            tau.astype(jnp.float32)[..., None],
+                            vals.shape[-1])
 
 
 def _sample_fields_kernel(kq_ref, vq_ref, aq_ref, kc_ref, vc_ref, ac_ref,
@@ -188,4 +198,131 @@ def sample_estimate_fields_pallas(kq, vq, aq, kc, vc, ac, *, qmap, cmap,
         interpret=interpret,
     )(kq.astype(jnp.int32), vq.astype(jnp.float32), aq.astype(jnp.float32),
       kc.astype(jnp.int32), vc.astype(jnp.float32), ac.astype(jnp.float32))
+    return out[:, :Q, :P]
+
+
+def _sample_fields_packed_kernel(kq_ref, vq_ref, aq_ref, kc_ref, wc_ref,
+                                 tc_ref, out_ref, *, s_total):
+    t_idx = pl.program_id(3)
+    u_idx = pl.program_id(4)
+
+    kq = kq_ref[0][:, :, None, None]          # [bq, bt, 1, 1]
+    vq = vq_ref[0][:, :, None, None]
+    aq = aq_ref[0][:, :, None, None]
+    # decode the corpus value tile and recompute its inclusion probabilities
+    # in VMEM from the per-row tau block -- the f32 value and probability
+    # planes never exist in HBM.  _inclusion_probs with the static scheme
+    # slot count s_total is the same elementwise expression the unpacked
+    # path applies host-side, so the tiles match bitwise; pad slots (zero
+    # words -> value 0) land on probability 0 exactly as zero-padded ac.
+    vc2 = unpack_halfwords_f32(wc_ref[0])     # [bp, bu]
+    ac2 = _inclusion_probs(vc2, tc_ref[0][:, None], s_total)
+    kc = kc_ref[0][None, None, :, :]          # [1, 1, bp, bu]
+    vc = vc2[None, None, :, :]
+    ac = ac2[None, None, :, :]
+
+    p = jnp.minimum(aq, ac)
+    live = (kq == kc) & (kq >= 0) & (p > 0)
+    term = jnp.where(live, vq * vc / jnp.where(live, p, 1.0), 0.0)
+    tile = term.sum(axis=(1, 3))              # [bq, bp]
+
+    @pl.when((t_idx == 0) & (u_idx == 0))
+    def _init():
+        out_ref[0, :, :] = tile
+
+    @pl.when((t_idx != 0) | (u_idx != 0))
+    def _acc():
+        out_ref[0, :, :] = out_ref[0, :, :] + tile
+
+
+@functools.partial(jax.jit, static_argnames=("s_total", "qmap", "cmap", "bq",
+                                             "bp", "bt", "bu", "interpret"))
+def sample_estimate_fields_packed_pallas(kq, vq, aq, kc, wc, tc, *, s_total,
+                                         qmap, cmap, bq: int = 8,
+                                         bp: int = 8, bt: int = 64,
+                                         bu: int = 128,
+                                         interpret: bool = True):
+    """:func:`sample_estimate_fields_pallas` over a bit-packed corpus.
+
+    The corpus side arrives as stored: keys ``kc [C, P, S]`` i32, values
+    packed as bf16-halfword words ``wc [C, P, S // 2]`` i32 (see
+    :mod:`repro.kernels.packed`), and per-row taus ``tc [C, P]`` f32.
+    Corpus inclusion probabilities are recomputed inside the kernel from
+    the decoded tile and ``tc`` -- no ``ac`` plane is materialized.
+    ``s_total`` is the static slot count of the sketch scheme (the ``m``
+    of :func:`sample_inclusion_probs`), which may differ from the stored
+    slot dim ``S`` when an odd slot count gained one inert pad slot at
+    pack time; ``S`` and ``bu`` must be even.  Query slots are independent
+    of corpus slots, exactly as in the unpacked kernel.
+    """
+    qmap = tuple(int(i) for i in qmap)
+    cmap = tuple(int(i) for i in cmap)
+    if len(qmap) != len(cmap):
+        raise ValueError("qmap/cmap length mismatch")
+    if not qmap:
+        raise ValueError("qmap/cmap must name at least one field pair")
+    G = len(qmap)
+    F, Q, m = kq.shape
+    C, P, S = kc.shape
+    if S % 2 or bu % 2:
+        raise ValueError(f"packed sample estimate needs even corpus slots "
+                         f"and bu; got S={S}, bu={bu}")
+    if 2 * wc.shape[2] != S:
+        raise ValueError(f"packed words {wc.shape[2]} do not match corpus "
+                         f"slots {S}")
+    if min(qmap) < 0 or max(qmap) >= F or min(cmap) < 0 or max(cmap) >= C:
+        raise ValueError("field map index out of range")
+    q_pad = (-Q) % bq
+    p_pad = (-P) % bp
+    t_pad = (-m) % bt
+    u_pad = (-S) % bu           # even: S and bu are both even
+    if q_pad or t_pad:
+        kq = jnp.pad(kq, ((0, 0), (0, q_pad), (0, t_pad)),
+                     constant_values=SAMPLE_QUERY_PAD_KEY)
+        vq = jnp.pad(vq, ((0, 0), (0, q_pad), (0, t_pad)))
+        aq = jnp.pad(aq, ((0, 0), (0, q_pad), (0, t_pad)))
+    if p_pad or u_pad:
+        kc = jnp.pad(kc, ((0, 0), (0, p_pad), (0, u_pad)),
+                     constant_values=SAMPLE_CORPUS_PAD_KEY)
+        # zero words decode to value 0 -> probability 0: inert, like ac pad
+        wc = jnp.pad(wc, ((0, 0), (0, p_pad), (0, u_pad // 2)))
+        tc = jnp.pad(tc, ((0, 0), (0, p_pad)))
+    Qp, mt = kq.shape[1:]
+    Pp, mu = kc.shape[1:]
+
+    def _lut(table):
+        # static python-int lookup via select arithmetic, exactly as
+        # estimate_fields_pallas: index maps may not capture traced values
+        def sel(g):
+            idx = table[0]
+            for i, v in enumerate(table[1:], start=1):
+                idx = jnp.where(g == i, v, idx)
+            return idx
+        return sel
+
+    qsel, csel = _lut(qmap), _lut(cmap)
+    grid = (G, Qp // bq, Pp // bp, mt // bt, mu // bu)
+    out = pl.pallas_call(
+        functools.partial(_sample_fields_packed_kernel, s_total=int(s_total)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, bt),
+                         lambda g, q, p, t, u: (qsel(g), q, t)),
+            pl.BlockSpec((1, bq, bt),
+                         lambda g, q, p, t, u: (qsel(g), q, t)),
+            pl.BlockSpec((1, bq, bt),
+                         lambda g, q, p, t, u: (qsel(g), q, t)),
+            pl.BlockSpec((1, bp, bu),
+                         lambda g, q, p, t, u: (csel(g), p, u)),
+            pl.BlockSpec((1, bp, bu // 2),
+                         lambda g, q, p, t, u: (csel(g), p, u)),
+            pl.BlockSpec((1, bp),
+                         lambda g, q, p, t, u: (csel(g), p)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, bp),
+                               lambda g, q, p, t, u: (g, q, p)),
+        out_shape=jax.ShapeDtypeStruct((G, Qp, Pp), jnp.float32),
+        interpret=interpret,
+    )(kq.astype(jnp.int32), vq.astype(jnp.float32), aq.astype(jnp.float32),
+      kc.astype(jnp.int32), wc.astype(jnp.int32), tc.astype(jnp.float32))
     return out[:, :Q, :P]

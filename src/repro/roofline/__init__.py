@@ -1,6 +1,11 @@
-"""Roofline analysis from compiled dry-run artifacts (TPU v5e constants)."""
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e constants),
+plus the block-size autotuner that feeds the Pallas launch layer."""
+from .autotune import (VMEM_BLOCK_BUDGET, cache_path, load_cache,
+                       model_time_s, resolve, save_cache, tune)
 from .hlo import RooflineCounts, analyze_hlo
 from .terms import HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, model_flops_for
 
 __all__ = ["RooflineCounts", "analyze_hlo", "Roofline", "model_flops_for",
-           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW", "VMEM_BLOCK_BUDGET",
+           "cache_path", "load_cache", "model_time_s", "resolve",
+           "save_cache", "tune"]

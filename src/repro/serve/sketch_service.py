@@ -58,14 +58,17 @@ class SketchSearchService:
 
     def __init__(self, m: int = 256, seed: int = 0,
                  backend: str = "device", keep_host_oracle: bool = True,
-                 mesh=None, family: str = "icws"):
+                 mesh=None, family: str = "icws", packed: bool = False):
         # family picks the device serving sketch (icws | cs | jl), sized
         # storage-matched from m (see repro.data.families) -- the same
         # corpus can be served under any family for an apples-to-apples
-        # error/throughput comparison
+        # error/throughput comparison.  packed=True keeps the corpus in the
+        # family's bit-packed wire layout (roughly half the resident bytes
+        # per row) and serves through the unpack-in-kernel estimate twins.
         self.index = DatasetSearchIndex(m=m, seed=seed, backend=backend,
                                         keep_host_oracle=keep_host_oracle,
-                                        mesh=mesh, family=family)
+                                        mesh=mesh, family=family,
+                                        packed=packed)
         self.stats = ServiceStats()
 
     # -- ingestion ----------------------------------------------------------
@@ -210,6 +213,9 @@ class SketchSearchService:
         return {
             "family": self.index.family.name,
             "backend": self.index.backend,
+            "packed": bool(store.packed) if store is not None else False,
+            "bytes_per_row": float(store.bytes_per_row()
+                                   if store is not None else 0),
             "tables": float(len(self.index.tables)),
             "tenants": float(len(self.index.tenants())),
             "storage_doubles": self.index.storage_doubles(),

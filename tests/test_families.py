@@ -308,11 +308,12 @@ def test_icws_device_estimates_match_host_oracle():
 # ---------------------------------------------------------------------------
 # end-to-end: every family serves batched == sequential, bitwise
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("packed", [False, True])
 @pytest.mark.parametrize("family", FAMILY_NAMES)
-def test_service_batched_equals_sequential_per_family(family):
+def test_service_batched_equals_sequential_per_family(family, packed):
     rng = np.random.default_rng(17)
     svc = SketchSearchService(m=256, seed=2, family=family,
-                              keep_host_oracle=False)
+                              keep_host_oracle=False, packed=packed)
     keys = np.arange(400)
     signal = rng.normal(size=400)
     svc.ingest("a_corr", keys, signal + 0.1 * rng.normal(size=400))

@@ -1,4 +1,5 @@
-"""Roofline machinery tests: HLO parser exactness, terms, cell configs."""
+"""Roofline machinery tests: HLO parser exactness, terms, cell configs,
+and the block-size autotuner that feeds the Pallas launch layer."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +8,7 @@ import pytest
 from repro import configs
 from repro.configs.base import SHAPES, cell_applicable
 from repro.roofline import Roofline, analyze_hlo, model_flops_for
+from repro.roofline import autotune
 from repro.roofline.hlo import parse_instr_line, shape_bytes
 
 
@@ -103,6 +105,73 @@ def test_cell_applicability_matrix():
             assert runnable[(a, s)], (a, s)
     n_cells = sum(runnable.values())
     assert n_cells == 33  # 40 - 7 sanctioned skips
+
+
+def test_autotune_cache_key_even_normalizes():
+    """A kernel and its packed twin (width rounded up to even at pack time)
+    must resolve the SAME cache entry, so all bitwise-compared paths share
+    one set of reduction blocks."""
+    assert (autotune.cache_key("estimate_fields", "cpu", {"m": 63})
+            == autotune.cache_key("estimate_fields", "cpu", {"m": 64}))
+    assert (autotune.cache_key("sample_estimate_fields", "cpu", {"S": 99})
+            == autotune.cache_key("sample_estimate_fields", "cpu",
+                                  {"S": 100}))
+    with pytest.raises(KeyError):
+        autotune.cache_key("estimate_fields", "cpu", {})
+
+
+def test_autotune_entry_fits_budget_and_beats_defaults():
+    shape = {"G": 6, "Q": 16, "P": 4096, "m": 128}
+    entry = autotune.tune("estimate_fields", shape, "cpu")
+    assert entry["block_bytes"] <= autotune.VMEM_BLOCK_BUDGET
+    # the whole point: the modeled tuned launch is never slower than the
+    # modeled default launch (defaults are themselves a candidate)
+    assert entry["model"]["time_s"] <= entry["model"]["default_time_s"]
+    assert entry["model"]["grid_steps"] \
+        <= entry["model"]["default_grid_steps"]
+    # block_shapes must recompute to block_bytes (the budget-rule contract)
+    total = sum(4 * c * int(np.prod(dims))
+                for c, dims in entry["block_shapes"])
+    assert total == entry["block_bytes"]
+
+
+def test_autotune_resolve_roundtrip_clamp_and_disable(tmp_path, monkeypatch):
+    path = tmp_path / "cache.json"
+    entry = autotune.tune("estimate_fields",
+                          {"G": 6, "Q": 16, "P": 4096, "m": 64}, "cpu")
+    autotune.save_cache([entry], path)
+    blocks = autotune.resolve("estimate_fields", "cpu", {"m": 64}, path=path)
+    assert blocks == entry["blocks"]
+    # odd widths even-normalize onto the same entry (packed-twin contract)
+    assert autotune.resolve("estimate_fields", "cpu", {"m": 63},
+                            path=path) == blocks
+    # row-dim clamping: a corpus-scale bp never slows a tiny test launch
+    # (reduction dims come back exactly as tuned)
+    clamped = autotune.resolve("estimate_fields", "cpu", {"m": 64},
+                               clamp={"bp": (64, 128)}, path=path)
+    assert clamped["bp"] == min(blocks["bp"], 128)
+    assert clamped["bm"] == blocks["bm"]
+    # unknown key / backend -> {} (caller falls back to declared defaults)
+    assert autotune.resolve("estimate_fields", "cpu", {"m": 2048},
+                            path=path) == {}
+    assert autotune.resolve("estimate_fields", "tpu", {"m": 64},
+                            path=path) == {}
+    # the kill switch forces defaults everywhere
+    monkeypatch.setenv(autotune.DISABLE_ENV, "1")
+    assert autotune.resolve("estimate_fields", "cpu", {"m": 64},
+                            path=path) == {}
+
+
+def test_committed_block_cache_resolves_and_fits_budget():
+    """The committed cache must actually serve the launches ops resolves at
+    query time, and every entry must restate a within-budget block set."""
+    cache = autotune.load_cache()
+    assert cache, "src/repro/roofline/block_cache.json missing or empty"
+    for entry in cache.values():
+        assert entry["block_bytes"] <= autotune.VMEM_BLOCK_BUDGET
+        assert entry["model"]["time_s"] <= entry["model"]["default_time_s"]
+    blocks = autotune.resolve("estimate_fields", "cpu", {"m": 128})
+    assert blocks, "committed cache must cover estimate_fields cpu m=128"
 
 
 def test_dryrun_records_complete():

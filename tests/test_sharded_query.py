@@ -131,6 +131,23 @@ _SCRIPT = textwrap.dedent("""
                 == fb.query_batch(qs, top_k=4, min_join=20)), fam
         for tb in fb.store.buffers():
             assert len(tb.sharding.device_set) == 2, (fam, tb.sharding)
+
+    # -- packed stores (bit-packed wire layout, unpack-in-kernel): the
+    #    sharded packed launch == single-device packed launch, bitwise,
+    #    for every family, and the packed buffers spread over the mesh
+    for fam in FAMILY_NAMES:
+        def buildp(m=None):
+            idx = DatasetSearchIndex(m=128, seed=1, mesh=m,
+                                     keep_host_oracle=False, family=fam,
+                                     packed=True)
+            for nm, k, v in tables:
+                idx.add_table(nm, k, v)
+            return idx
+        pa, pb = buildp(), buildp(mesh)
+        assert (pa.query_batch(qs, top_k=4, min_join=20)
+                == pb.query_batch(qs, top_k=4, min_join=20)), fam
+        for tb in pb.store.buffers():
+            assert len(tb.sharding.device_set) == 2, (fam, tb.sharding)
     print("SHARDED_OK")
 """)
 
