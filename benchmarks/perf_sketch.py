@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import ICWS, SparseVec, inner_fast, make, stack_wmh
 from repro.core.icws import StackedICWS
-from repro.data import FAMILY_NAMES, make_family
+from repro.data import FAMILY_NAMES, make_family, wmh_storage
 from repro.data.corpus import SketchCorpus, pad_sparse_batch
 from repro.data.families import TSFamily
 from repro.data.merge import merge_stores, partition_by_key
@@ -37,7 +37,7 @@ def run(fast: bool = False):
     vecs = [v for p in pairs for v in p]
 
     # host sketch throughput per method
-    for method in ("wmh", "mh", "kmv", "jl", "cs", "icws"):
+    for method in ("wmh", "mh", "kmv", "jl", "cs", "icws", "dmh"):
         sk = make(method, 400, seed=0)
         _, us = timed(lambda: [sk.sketch(v) for v in vecs])
         emit(f"perf/sketch/{method}", us / len(vecs),
@@ -155,6 +155,43 @@ def run(fast: bool = False):
          f"1-row append into a {p_large}-row corpus, no growth; "
          f"O(b) on TPU (donation), buffer copy on CPU")
 
+    # per-family build throughput on a fat-row lake: every family's
+    # sketch_rows on the same ~4096-nonzero vectors, storage-matched to
+    # icws m=64.  This is the constant-time-ingest gate: the DMH kernel's
+    # O(nnz + m) binning pass must beat the ICWS O(nnz * m) broadcast by
+    # >= 5x on this geometry (both run the Pallas interpreter here, so the
+    # ratio measures kernel work, not TPU silicon).
+    bt_B, bt_nnz, bt_reps = (8, 512, 1) if fast else (48, 4096, 3)
+    bt_storage = wmh_storage(64)
+    bt_rng = np.random.default_rng(37)
+    bt_dom = 2 ** 31
+    bt_vecs = []
+    for _ in range(bt_B):
+        bi = np.unique(bt_rng.integers(0, bt_dom, size=bt_nnz))
+        bt_vecs.append(SparseVec.from_pairs(
+            bi, bt_rng.normal(size=bi.size), bt_dom))
+    build_rows = {}
+    for name in FAMILY_NAMES:
+        bfam = make_family(name, storage=bt_storage, seed=11)
+        jax.block_until_ready(bfam.sketch_rows(bt_vecs))   # warm jit/kernel
+        best = float("inf")
+        for _ in range(bt_reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(bfam.sketch_rows(bt_vecs))
+            best = min(best, time.perf_counter() - t0)
+        build_rows[name] = bt_B / best
+        emit(f"perf/ingest/build_rows_per_s/{name}", build_rows[name],
+             f"rows={bt_B} nnz~{bt_nnz} storage={bt_storage:.0f} "
+             f"(icws m=64) interpret=True")
+    build_speedup = build_rows["dmh"] / build_rows["icws"]
+    emit("perf/ingest/dmh_vs_icws_build_speedup", build_speedup,
+         f"x; dmh rows/s over icws rows/s at nnz~{bt_nnz}, "
+         + ("fast lane" if fast else "must be >= 5 (asserted)"))
+    if not fast:
+        assert build_speedup >= 5.0, (
+            f"dmh build must be >= 5x icws rows/s at nnz~{bt_nnz}, m=64; "
+            f"got {build_speedup:.2f}x")
+
     # single-vs-batched serving: the §1.3 endpoint end to end at corpus
     # scale.  Sequential serving pays one ICWS sketch launch + six
     # one-vs-many estimate launches per query; search_batch folds a whole
@@ -244,6 +281,16 @@ def run(fast: bool = False):
                     f"{samp} must beat {lin} at storage={storage}: "
                     f"{fam_err[(samp, storage)]:.5f} vs "
                     f"{fam_err[(lin, storage)]:.5f}")
+        # constant-time ingest must not buy speed with accuracy: the
+        # densified one-permutation sketch stays within 1.5x of the full
+        # ICWS error at every storage budget.  A 1.5x margin needs the
+        # full 32-pair lake -- the 8-pair fast lane still emits the rows
+        # but only the nightly full run asserts (same as the build gate).
+        if not fast:
+            assert fam_err[("dmh", storage)] <= 1.5 * icws_e, (
+                f"dmh error must stay within 1.5x of icws at "
+                f"storage={storage}: {fam_err[('dmh', storage)]:.5f} vs "
+                f"{icws_e:.5f}")
 
     # same corpus served under every family: end-to-end queries/sec (one
     # lake ingested per family, identical tables and queries)

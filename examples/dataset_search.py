@@ -16,13 +16,15 @@ it, and then re-serve the same query *sharded*: corpus rows split over a
 2-device ``data`` mesh axis (forced host devices below), per-shard top-k +
 global merge, rankings bitwise identical to the single-device path.
 
-``--family {icws,cs,jl,ts,ps,all}`` picks the serving sketch family: the
-same lake is sketched into a CountSketch / JL corpus (dense device tables,
-MXU estimate matmuls), or a Threshold / Priority Sampling corpus (fixed-
-slot coordinate samples, key-match estimate kernel), all storage-matched
+``--family`` picks the serving sketch family (any registered
+``repro.data.FAMILY_NAMES`` entry): the same lake is sketched into a
+CountSketch / JL corpus (dense device tables, MXU estimate matmuls), a
+Threshold / Priority Sampling corpus (fixed-slot coordinate samples,
+key-match estimate kernel), or a DMH corpus (constant-time densified
+weighted MinHash ingest, same wire layout as ICWS), all storage-matched
 to the ICWS budget; ``all`` serves the identical query under every family
-side by side -- the paper's comparison plus its strongest competitor
-(Daliri et al., arXiv:2309.16157), live on the serving path.
+side by side -- the paper's comparison plus its strongest competitors,
+live on the serving path.
 
 ``--shards N`` rebuilds the lake via the shard-and-merge parallel build
 path (``repro.data.merge``): every table is key-partitioned into N
@@ -48,7 +50,7 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 
 import numpy as np
 
-from repro.data import DatasetSearchIndex
+from repro.data import FAMILY_NAMES, DatasetSearchIndex
 from repro.launch.mesh import make_corpus_mesh
 
 
@@ -98,7 +100,7 @@ def family_comparison(tables, days, ridership, families):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--family", default="icws",
-                    choices=("icws", "cs", "jl", "ts", "ps", "all"),
+                    choices=(*FAMILY_NAMES, "all"),
                     help="serving sketch family; 'all' serves the same "
                          "corpus under every family side by side")
     ap.add_argument("--shards", type=int, default=0, metavar="N",
@@ -116,8 +118,9 @@ def main():
     if args.family != "icws":
         # the same corpus served under other sketch families (or all of
         # them): the paper's comparison live on the device serving path,
-        # now including the sampling sketches (ts/ps, arXiv:2309.16157)
-        families = (("icws", "cs", "jl", "ts", "ps") if args.family == "all"
+        # enumerated from the family registry so new families show up here
+        # without touching the demo
+        families = (FAMILY_NAMES if args.family == "all"
                     else (args.family,))
         family_comparison(tables, days, ridership, families)
         return

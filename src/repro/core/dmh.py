@@ -1,0 +1,273 @@
+"""DMH (densified one-permutation weighted MinHash) -- constant-time ingest.
+
+ICWS (:mod:`repro.core.icws`) does O(nnz * m) work per vector: every
+non-zero is scored against every one of the m samples.  DMH gets the same
+*coordinated* weighted-MinHash samples with O(nnz + m) work, the remedy
+PAPERS.md names for lake-scale ingest (Shrivastava, arXiv:1602.08393, with
+the optimal densification of arXiv:1703.04664):
+
+  0. **Replicate** (m > 64 only): each key is expanded into
+     ``c = clamp(m // 64, 1, 4)`` pseudo-keys ``key ^ r * REPLICA_SALT``
+     sharing its weight.  Binning restricts each comparison to the few
+     union keys that share a bin, and the restricted weighted-Jaccard
+     ratio ``E[sum min / sum max]`` carries an O(1/k) Jensen bias for
+     k union keys per bin; replication multiplies k by c, shrinking the
+     bias c-fold for O(c * nnz) extra work (see :func:`dmh_replication`).
+  1. **Bin**: each (key, weight) is assigned a single bin
+     ``t = h(key) mod m`` by one u32 hash draw (``DMH_BIN_STREAM``) -- the
+     one-permutation step.
+  2. **Rank**: the key is scored by the ICWS variates (r, c, beta) drawn at
+     sample index ``t = bin`` (streams ``DMH_R1..DMH_BETA``), so
+     *within a bin* the minimum follows the exact weighted-MinHash law of
+     Ioffe sampling -- conditioned on the binning, colliding bins collide
+     with the restricted weighted-Jaccard probability.
+  3. **Densify**: empty bins borrow from occupied ones through a reseeded
+     2-universal probe sequence ``src = h(t; j) mod m`` (stream
+     ``DMH_DENSIFY_STREAM``, j = 0, 1, ...) -- the *uniform* optimal
+     densification, not the biased rotation of the 2014 scheme.  The
+     probes are coordinated (they depend only on (seed, t, j) and the
+     occupancy pattern), which is what makes borrowed bins collide
+     correctly across sketches.
+
+The output is an :class:`repro.core.icws.ICWSSketch` -- same fingerprints /
+values / norm / argkeys wire layout -- so the ICWS estimator
+(``estimate_batch``), the fused device estimate kernels, packed storage,
+and top-k ranking all consume DMH rows unchanged.  This class is the host
+(numpy) oracle; the Pallas kernel in :mod:`repro.kernels.dmh_sketch` is
+its bit-twin on the shared u32 contract (:mod:`repro.core.u32` /
+:mod:`repro.kernels.common`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import u32
+from .icws import _BIG, ICWS, ICWSSketch
+from .types import SparseVec
+
+
+def densify_probes(m: int) -> int:
+    """Probe budget of the densification pass: enough reseeded attempts
+    that the uniform-borrowing fallback (first occupied bin, taken when
+    every probe misses) is vanishingly rare for any non-degenerate
+    occupancy, rounded to a lane multiple for the kernel.  Mirrored bit for
+    bit by ``repro.kernels.common.densify_probes`` -- host and device MUST
+    agree or borrowed fingerprints stop colliding."""
+    return min(1024, 128 * -(-4 * int(m) // 128))
+
+
+REPLICA_SALT = 0x85EBCA6B
+
+
+def dmh_replication(m: int) -> int:
+    """Pseudo-key replication factor ``c = clamp(m // 64, 1, 4)``.
+
+    Binning restricts each weighted-Jaccard comparison to the
+    ``k ~ |union| / m`` union keys that share a bin, and the per-bin
+    collision probability ``E[sum min / sum max]`` over that random
+    subset carries an O(1/k) ratio-of-sums (Jensen) bias relative to the
+    full J_w -- it is exact only for constant weights.  Replicating every
+    key into c pseudo-keys (:func:`replicate_keys`) multiplies k by c at
+    O(c * nnz) extra ingest work, and c grows with m precisely because
+    the bias does: a larger m spreads the same union over more bins.
+
+    c MUST be a function of m alone (never of the data or nnz) so
+    sketches of different vectors stay coordinated.  It is capped at 4
+    because pseudo-keys of *different* keys can alias
+    (``k1 ^ r1*SALT == k2 ^ r2*SALT``) and a spurious fingerprint match
+    carries unbounded ``va*vb / min(va^2, vb^2)`` estimator weight; the
+    alias probability per key pair grows ~c^2, and c >= 6 was measured to
+    produce exactly such blow-ups on realistic sparse lakes.
+    """
+    return max(1, min(4, int(m) // 64))
+
+
+def replica_salts(c: int) -> np.ndarray:
+    """u32 XOR salts of a key's c pseudo-keys (``r * REPLICA_SALT``,
+    wrapping in u32; r = 0 is the identity, so c = 1 is plain DMH)."""
+    return (np.arange(c, dtype=np.uint64)
+            * np.uint64(REPLICA_SALT)).astype(np.uint32)
+
+
+def replicate_keys(keys_u32: np.ndarray, c: int) -> np.ndarray:
+    """Expand ``[..., n]`` u32 keys into ``[..., c * n]`` pseudo-keys,
+    replica-major on the last axis.  Shared by the host oracle and the
+    device ingest pad (``data/ingest.dmh_sketch_batch``) -- the two
+    layers MUST expand through this one function or host and device
+    fingerprints stop colliding."""
+    salts = replica_salts(c)
+    out = keys_u32[..., None, :] ^ salts[:, None]
+    return out.reshape(*keys_u32.shape[:-1], c * keys_u32.shape[-1])
+
+
+class DMH(ICWS):
+    """Densified one-permutation weighted MinHash host sketcher.
+
+    Subclasses :class:`ICWS`: the estimator, stacking, and storage
+    accounting are inherited unchanged (same sketch layout, same collision
+    law); only how samples are *produced* differs -- one pass over the
+    non-zeros instead of an m-way broadcast.
+    """
+
+    name = "dmh"
+
+    # -- shared sub-steps (used by both sketch and merge) -----------------
+    def _bins(self, keys_u32: np.ndarray) -> np.ndarray:
+        """One u32 draw per key: its bin / sample index in [0, m)."""
+        salt = u32.salt_for(self.seed, u32.DMH_BIN_STREAM,
+                            np.zeros(1, np.uint32))
+        return u32.hash_u32(keys_u32, salt) % np.uint32(self.m)
+
+    def _rank(self, keys_u32: np.ndarray, w: np.ndarray,
+              bins: np.ndarray):
+        """ICWS hash value and level per key, variates drawn at t = bin."""
+        def u(stream: int) -> np.ndarray:
+            return u32.uniform01(keys_u32,
+                                 u32.salt_for(self.seed, stream, bins))
+
+        r = -np.log(u(u32.DMH_R1_STREAM) * u(u32.DMH_R2_STREAM))
+        c = -np.log(u(u32.DMH_C1_STREAM) * u(u32.DMH_C2_STREAM))
+        beta = u(u32.DMH_BETA_STREAM)
+        logw = np.log(np.maximum(w, np.float32(1e-37)))
+        lvl = np.floor(logw / r + beta)
+        y = np.exp(r * (lvl - beta))
+        a = c / (y * np.exp(r))
+        return np.where(w > 0, a, _BIG).astype(np.float32), lvl
+
+    def _fingerprint(self, keys_u32: np.ndarray, lvl: np.ndarray,
+                     t: np.ndarray) -> np.ndarray:
+        fpbits = u32.hash_u32(
+            keys_u32 ^ (lvl.astype(np.int32).astype(np.uint32)
+                        * np.uint32(0x9E3779B9)),
+            u32.salt_for(self.seed, u32.DMH_FP_STREAM, t))
+        return (fpbits & np.uint32(0x7FFFFFFF)).astype(np.int32)
+
+    def _densify_sources(self, occupied: np.ndarray):
+        """(empty bin indices, source bin per empty bin).
+
+        Reseeded 2-universal probing: empty bin t borrows from the first
+        probe ``h(t; j) mod m`` that lands on an occupied bin.  If every
+        probe misses (probability ``(1 - occupancy)^J``), fall back to the
+        first occupied bin -- exact when exactly one bin is occupied, and
+        coordinated either way (deterministic in (seed, occupancy)).
+        """
+        occ = np.asarray(occupied, bool)
+        t = np.arange(self.m, dtype=np.int64)
+        empty = t[~occ]
+        J = densify_probes(self.m)
+        salts = u32.salt_for(self.seed, u32.DMH_DENSIFY_STREAM,
+                             np.arange(J, dtype=np.int64))
+        src = (u32.hash_u32(empty[:, None].astype(np.uint32),
+                            salts[None, :])
+               % np.uint32(self.m)).astype(np.int64)        # [E, J]
+        hit = occ[src]
+        has = hit.any(axis=1)
+        first = np.argmax(hit, axis=1)
+        fallback = int(np.argmax(occ))
+        picked = np.where(has, src[np.arange(empty.size), first], fallback)
+        return empty, picked
+
+    # -- the sketch -------------------------------------------------------
+    def sketch(self, v: SparseVec) -> ICWSSketch:
+        norm = v.norm()
+        if v.nnz == 0 or norm == 0.0:
+            return ICWSSketch(fingerprints=np.full(self.m, -1, np.int32),
+                              values=np.zeros(self.m), norm=0.0,
+                              argkeys=np.zeros(self.m, np.int32))
+        keys_u32 = (v.indices.astype(np.int64)
+                    & np.int64(0xFFFFFFFF)).astype(np.uint32)
+        z = v.values / norm
+        c = dmh_replication(self.m)
+        if c > 1:
+            # debias the restricted-Jaccard collision law by comparing
+            # more union keys per bin (see dmh_replication)
+            keys_u32 = replicate_keys(keys_u32, c)
+            z = np.tile(z, c)
+        z32 = z.astype(np.float32)
+        w = z32 * z32
+        bins = self._bins(keys_u32)
+        a, lvl = self._rank(keys_u32, w, bins)
+        t = np.arange(self.m, dtype=np.int64)
+        # per-bin first-min argmin (np.argmin first-hit ties, matching the
+        # kernel's strict-< tile merge)
+        a_mat = np.where(bins[None, :] == t[:, None], a[None, :], _BIG)
+        arg = np.argmin(a_mat, axis=1)
+        amin = a_mat[t, arg].astype(np.float32)
+        key_sel = keys_u32[arg]
+        val_sel = z[arg]
+        fp = self._fingerprint(key_sel, lvl[arg], t)
+        occ = amin < _BIG
+        if not occ.any():
+            # every weight underflowed f32 squaring: empty sketch (norm
+            # kept -- the device path reports the true norm too; all-(-1)
+            # fingerprints estimate to zero regardless)
+            return ICWSSketch(fingerprints=np.full(self.m, -1, np.int32),
+                              values=np.zeros(self.m), norm=norm,
+                              argkeys=np.zeros(self.m, np.int32))
+        if not occ.all():
+            empty, src = self._densify_sources(occ)
+            fp[empty] = fp[src]
+            val_sel[empty] = val_sel[src]
+            key_sel[empty] = key_sel[src]
+        return ICWSSketch(fingerprints=fp, values=val_sel, norm=norm,
+                          argkeys=key_sel.view(np.int32))
+
+    # -- union-merge oracle ----------------------------------------------
+    def merge(self, sa: ICWSSketch, sb: ICWSSketch) -> ICWSSketch:
+        """Union-merge of two disjoint-support DMH sketches.
+
+        DMH stores no occupancy bitmap, but origins are recoverable from
+        the wire layout itself: bin t holds its *own* minimum (not a
+        densified copy) iff ``bin(argkey[t]) == t`` -- a borrowed bin
+        carries its source bin's winning key, whose bin hash points back
+        at the source.  Per origin bin the two shard winners are re-scored
+        under the merged norm (same redraw as :meth:`ICWS.merge`, DMH
+        streams at t = bin), strict-< picks the winner with ties toward
+        the smaller key (commutative), and bins with no origin on either
+        side are re-densified from the merged occupancy through the same
+        probe sequence.
+
+        Replication is invisible here: stored argkeys *are* pseudo-keys,
+        and the bin hash, re-scoring variates, and fingerprints are all
+        keyed on them directly -- no expansion or un-expansion needed.
+        """
+        if sa.norm == 0.0:
+            return dataclasses.replace(sb)
+        if sb.norm == 0.0:
+            return dataclasses.replace(sa)
+        if sa.argkeys is None or sb.argkeys is None:
+            raise ValueError("DMH merge needs argkeys sidecars "
+                             "(pre-argkeys sketches cannot be merged)")
+        norm_c = float(np.sqrt(sa.norm ** 2 + sb.norm ** 2))
+        t = np.arange(self.m, dtype=np.int64)
+
+        def rescore(s: ICWSSketch):
+            keys = np.asarray(s.argkeys).view(np.uint32)
+            origin = (np.asarray(s.fingerprints) >= 0) & (self._bins(keys)
+                                                          == t)
+            z = np.asarray(s.values, np.float64) * (s.norm / norm_c)
+            z32 = z.astype(np.float32)
+            a, lvl = self._rank(keys, z32 * z32, t)
+            a = np.where(origin, a, _BIG).astype(np.float32)
+            return keys, z, a, lvl
+
+        ka, za, aa, la = rescore(sa)
+        kb, zb, ab, lb = rescore(sb)
+        pick_b = (ab < aa) | ((ab == aa) & (kb < ka))
+        key_c = np.where(pick_b, kb, ka)
+        lvl_c = np.where(pick_b, lb, la)
+        val_c = np.where(pick_b, zb, za)
+        fp = self._fingerprint(key_c, lvl_c, t)
+        occ = np.minimum(aa, ab) < _BIG
+        fp = np.where(occ, fp, -1).astype(np.int32)
+        val_c = np.where(occ, val_c, 0.0)
+        key_c = np.where(occ, key_c, np.uint32(0))
+        if occ.any() and not occ.all():
+            empty, src = self._densify_sources(occ)
+            fp[empty] = fp[src]
+            val_c[empty] = val_c[src]
+            key_c[empty] = key_c[src]
+        return ICWSSketch(fingerprints=fp, values=val_c, norm=norm_c,
+                          argkeys=key_c.astype(np.uint32).view(np.int32))

@@ -11,12 +11,14 @@ Every method exposes: ``make(storage_doubles, seed) -> sketcher`` whose
   kmv   : 1.5 per sample                         -> k = storage / 1.5
   wmh   : 1.5 per sample + 1 (norm)              -> m = (storage - 1) / 1.5
   icws  : 1.5 per sample + 1 (norm)              -> m = (storage - 1) / 1.5
+  dmh   : 1.5 per sample + 1 (norm)              -> m = (storage - 1) / 1.5
   ts/ps : 1 per slot (i32 key + f32 val) + 1 (tau) -> slots = storage - 1
 """
 from __future__ import annotations
 
 from typing import Callable, Dict
 
+from .dmh import DMH
 from .icws import ICWS
 from .kmv import KMV
 from .linear import REPS, CountSketch, JL
@@ -49,6 +51,11 @@ def make_icws(storage: float, seed: int = 0):
     return ICWS(m=max(1, int((storage - 1) / 1.5)), seed=seed)
 
 
+def make_dmh(storage: float, seed: int = 0):
+    # identical wire layout and accounting to ICWS -- only ingest differs
+    return DMH(m=max(1, int((storage - 1) / 1.5)), seed=seed)
+
+
 def make_ts(storage: float, seed: int = 0):
     return ThresholdSamplingU32(slots=max(1, int(storage - 1)), seed=seed)
 
@@ -64,6 +71,7 @@ FACTORIES: Dict[str, Callable] = {
     "kmv": make_kmv,
     "wmh": make_wmh,
     "icws": make_icws,
+    "dmh": make_dmh,
     "ts": make_ts,
     "ps": make_ps,
 }

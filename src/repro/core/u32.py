@@ -34,6 +34,18 @@ ICWS_C1_STREAM = 3
 ICWS_C2_STREAM = 4
 ICWS_BETA_STREAM = 5
 ICWS_FP_STREAM = 9
+# Host twins of the DMH (densified one-permutation weighted MinHash) salt
+# streams: bin assignment, ICWS-style variates drawn at t = bin, the
+# per-bin fingerprint salt, and the reseeded densification probes
+# (``repro.core.dmh`` draws from these).
+DMH_BIN_STREAM = 51
+DMH_R1_STREAM = 52
+DMH_R2_STREAM = 53
+DMH_C1_STREAM = 54
+DMH_C2_STREAM = 55
+DMH_BETA_STREAM = 56
+DMH_FP_STREAM = 57
+DMH_DENSIFY_STREAM = 58
 
 
 def mix32(x: np.ndarray) -> np.ndarray:

@@ -49,21 +49,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import registry, u32
+from repro.core.dmh import DMH
 from repro.core.icws import ICWS
 from repro.core.linear import REPS, CountSketchU32, JLU32
 from repro.core.sampling import (SAMPLE_HASH_STREAM, PrioritySamplingU32,
                                  ThresholdSamplingU32)
 from repro.core.types import SparseVec
 from repro.kernels import ops
-from repro.kernels.common import (ICWS_BETA_STREAM, ICWS_C1_STREAM,
+from repro.kernels.common import (DMH_BETA_STREAM, DMH_BIN_STREAM,
+                                  DMH_C1_STREAM, DMH_C2_STREAM,
+                                  DMH_DENSIFY_STREAM, DMH_FP_STREAM,
+                                  DMH_R1_STREAM, DMH_R2_STREAM,
+                                  ICWS_BETA_STREAM, ICWS_C1_STREAM,
                                   ICWS_C2_STREAM, ICWS_FP_STREAM,
-                                  ICWS_R1_STREAM, ICWS_R2_STREAM, hash_u32,
-                                  salt_for, uniform01)
+                                  ICWS_R1_STREAM, ICWS_R2_STREAM,
+                                  densify_probes, hash_u32, salt_for,
+                                  uniform01)
 from repro.kernels.estimate import CORPUS_PAD_FP
 from repro.kernels.packed import pack_halfwords_f32, unpack_halfwords_f32
 from repro.kernels.ref import BIG
 
-from .ingest import pad_linear_batch, pad_sample_batch, sketch_batch
+from .ingest import (dmh_sketch_batch, pad_linear_batch, pad_sample_batch,
+                     sketch_batch)
 
 
 def _pad_last(x: jnp.ndarray, n: int, value=0) -> jnp.ndarray:
@@ -247,6 +254,117 @@ class ICWSFamily:
 
     def host_oracle(self) -> ICWS:
         return ICWS(m=self.m, seed=self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class DMHFamily(ICWSFamily):
+    """DMH (densified one-permutation weighted MinHash) serving family.
+
+    Same wire layout, storage accounting, packed format, and fused
+    estimate launches as :class:`ICWSFamily` -- rows are ``(fingerprints,
+    values, norm, argkeys)`` consumed by the same collision kernels -- but
+    the *build* is O(c * nnz + m) per vector instead of O(nnz * m),
+    with ``c = dmh_replication(m) <= 4``: one binning pass over the
+    non-zeros (pseudo-key-replicated for m > 64 to debias the restricted
+    collision law -- see :func:`repro.core.dmh.dmh_replication`) with an
+    in-kernel densification epilogue
+    (:mod:`repro.kernels.dmh_sketch`).  Only the three members
+    that touch sketch construction differ: the sketch launch, the
+    union-merge (which must recover bin origins and re-densify), and the
+    host oracle.
+    """
+
+    name: str = dataclasses.field(default="dmh", init=False)
+
+    def sketch_rows(self, vecs: Sequence[SparseVec], *, bucket: int = 256):
+        """One DMH kernel launch: B sparse vectors -> (fp, val, norm,
+        argkey) rows."""
+        return dmh_sketch_batch(vecs, m=self.m, seed=self.seed,
+                                bucket=bucket)
+
+    def merge_rows(self, a, b):
+        """Coordinated union-merge of row-aligned DMH components.
+
+        Device twin of :meth:`repro.core.dmh.DMH.merge`.  DMH rows store
+        no occupancy bitmap, but origins are recoverable from the layout:
+        bin t holds its own minimum (not a densified copy) iff
+        ``bin(argkey[t]) == t``.  Origin winners re-score under the merged
+        norm (DMH streams at t = bin), strict-< picks the winner with ties
+        toward the smaller key (commutative), and bins with no origin on
+        either side re-densify from the merged occupancy through the same
+        probe sequence the sketch kernel uses.
+        """
+        fpa, va, na, ka = (jnp.asarray(x) for x in a)
+        fpb, vb, nb, kb = (jnp.asarray(x) for x in b)
+        t = jnp.arange(self.m, dtype=jnp.int32)
+        norm_q = jnp.sqrt(na * na + nb * nb)
+        norm_c = jnp.where(na == 0, nb, jnp.where(nb == 0, na, norm_q))
+        safe_c = jnp.maximum(norm_c, jnp.float32(1e-37))[..., None]
+        bin_salt = salt_for(self.seed, DMH_BIN_STREAM, jnp.uint32(0))
+
+        def rescore(fp, val, norm, key):
+            kk = key.astype(jnp.uint32)
+            bins = (hash_u32(kk, bin_salt)
+                    % jnp.uint32(self.m)).astype(jnp.int32)
+            origin = (fp >= 0) & (bins == t)
+            z = val * (norm[..., None] / safe_c)
+            w = z * z
+
+            def u(stream):
+                return uniform01(kk, salt_for(self.seed, stream, t))
+
+            r = -jnp.log(u(DMH_R1_STREAM) * u(DMH_R2_STREAM))
+            c = -jnp.log(u(DMH_C1_STREAM) * u(DMH_C2_STREAM))
+            beta = u(DMH_BETA_STREAM)
+            logw = jnp.log(jnp.maximum(w, jnp.float32(1e-37)))
+            lvl = jnp.floor(logw / r + beta)
+            y = jnp.exp(r * (lvl - beta))
+            av = c / (y * jnp.exp(r))
+            av = jnp.where(origin & (w > 0), av, jnp.float32(BIG))
+            return z, av, lvl.astype(jnp.int32)
+
+        za, aa, la = rescore(fpa, va, na, ka)
+        zb, ab, lb = rescore(fpb, vb, nb, kb)
+        pick_b = (ab < aa) | ((ab == aa)
+                             & (kb.astype(jnp.uint32) < ka.astype(jnp.uint32)))
+        key_c = jnp.where(pick_b, kb, ka)
+        lvl_c = jnp.where(pick_b, lb, la)
+        val_c = jnp.where(pick_b, zb, za)
+        fpbits = hash_u32(
+            key_c.astype(jnp.uint32)
+            ^ (lvl_c.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)),
+            salt_for(self.seed, DMH_FP_STREAM, t))
+        fp_c = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+        occ = jnp.minimum(aa, ab) < BIG
+        fp_c = jnp.where(occ, fp_c, -1)
+        val_c = jnp.where(occ, val_c, 0.0).astype(jnp.float32)
+        key_c = jnp.where(occ, key_c, 0).astype(jnp.int32)
+        # re-densify: same reseeded probes as the sketch kernel, applied
+        # to the merged origin occupancy
+        J = densify_probes(self.m)
+        js = jnp.arange(J, dtype=jnp.int32)
+        psalt = salt_for(self.seed, DMH_DENSIFY_STREAM, js)
+        src = (hash_u32(t[:, None].astype(jnp.uint32), psalt[None, :])
+               % jnp.uint32(self.m)).astype(jnp.int32)      # [m, J]
+        occ_p = jnp.take(occ, src, axis=-1)                 # [..., m, J]
+        has = jnp.any(occ_p, axis=-1)
+        firstj = jnp.argmax(occ_p, axis=-1).astype(jnp.int32)
+        src_w = (hash_u32(t.astype(jnp.uint32),
+                          salt_for(self.seed, DMH_DENSIFY_STREAM, firstj))
+                 % jnp.uint32(self.m)).astype(jnp.int32)
+        fallback = jnp.argmax(occ, axis=-1).astype(jnp.int32)[..., None]
+        src_sel = jnp.where(has, src_w, fallback)
+        need = (~occ) & jnp.any(occ, axis=-1)[..., None]
+
+        def borrow(x):
+            return jnp.where(need,
+                             jnp.take_along_axis(x, src_sel, axis=-1), x)
+
+        return (borrow(fp_c), borrow(val_c), norm_c.astype(jnp.float32),
+                borrow(key_c))
+
+    def host_oracle(self) -> DMH:
+        return DMH(m=self.m, seed=self.seed)
 
 
 class _LinearFamily:
@@ -565,7 +683,7 @@ class PSFamily(_SamplingFamily):
         return PrioritySamplingU32(slots=self.slots, seed=self.seed)
 
 
-FAMILY_NAMES = ("icws", "cs", "jl", "ts", "ps")
+FAMILY_NAMES = ("icws", "cs", "jl", "ts", "ps", "dmh")
 
 
 def make_family(name: str, *, storage: float, seed: int = 0):
@@ -573,13 +691,15 @@ def make_family(name: str, *, storage: float, seed: int = 0):
 
     ``storage`` is the paper's x-axis -- total 64-bit-double equivalents
     per sketch -- and the per-method sizing is delegated to
-    :mod:`repro.core.registry` (icws: ``m = (storage - 1) / 1.5``; cs:
+    :mod:`repro.core.registry` (icws/dmh: ``m = (storage - 1) / 1.5``; cs:
     ``width = storage / reps``; jl: ``m = storage``; ts/ps:
     ``slots = storage - 1``), so families built from one budget are
     storage-matched and comparisons are fair.
     """
     if name == "icws":
         return ICWSFamily(m=registry.make_icws(storage).m, seed=seed)
+    if name == "dmh":
+        return DMHFamily(m=registry.make_dmh(storage).m, seed=seed)
     if name == "cs":
         host = registry.make_cs(storage)
         return CSFamily(width=host.width, reps=host.reps, seed=seed)

@@ -27,6 +27,7 @@ from typing import Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dmh import dmh_replication, replicate_keys
 from repro.core.sampling import priority_sample, threshold_sample
 from repro.core.types import SparseVec
 from repro.kernels import ops
@@ -163,4 +164,31 @@ def sketch_batch(vecs: Sequence[SparseVec], *, m: int, seed: int = 0,
     w, keys, vals, norms = pad_sparse_batch(vecs, bucket=bucket)
     fp, val, _, argkey = ops.icws_sketch(jnp.asarray(w), jnp.asarray(keys),
                                          jnp.asarray(vals), m=m, seed=seed)
+    return fp, val, jnp.asarray(norms, jnp.float32), argkey
+
+
+def dmh_sketch_batch(vecs: Sequence[SparseVec], *, m: int, seed: int = 0,
+                     bucket: int = 256):
+    """Device-sketch a batch of sparse vectors through the Pallas DMH kernel.
+
+    Same padded layout (:func:`pad_sparse_batch`) and the same four
+    components as :func:`sketch_batch` -- only the kernel differs (one
+    binning pass over the non-zeros instead of the m-way ICWS broadcast),
+    so lake ingest swaps families with no layout change.
+
+    For m > 64 each key is expanded into ``dmh_replication(m)``
+    pseudo-key replicas before the launch (the host oracle
+    :meth:`repro.core.dmh.DMH.sketch` expands identically through the
+    shared :func:`repro.core.dmh.replicate_keys`); the kernel itself is
+    replication-agnostic.  Pad lanes replicate inertly (w = 0 ranks to
+    the +inf sentinel regardless of the pseudo-key).
+    """
+    w, keys, vals, norms = pad_sparse_batch(vecs, bucket=bucket)
+    c = dmh_replication(m)
+    if c > 1:
+        keys = replicate_keys(keys.view(np.uint32), c).view(np.int32)
+        w = np.tile(w, (1, c))
+        vals = np.tile(vals, (1, c))
+    fp, val, _, argkey = ops.dmh_sketch(jnp.asarray(w), jnp.asarray(keys),
+                                        jnp.asarray(vals), m=m, seed=seed)
     return fp, val, jnp.asarray(norms, jnp.float32), argkey

@@ -46,6 +46,28 @@ JL_SIGN_STREAM = 31
 # coordinated sample hash h(key) of the TS/PS sampling sketches (one draw
 # per key, shared across vectors -- repro.core.sampling mirrors this)
 SAMPLE_HASH_STREAM = 41
+# DMH (densified one-permutation weighted MinHash, arXiv:1602.08393 /
+# 1703.04664): one bin draw per key, ICWS-style variates drawn at
+# sample-index t = bin (so within-bin ranks follow the exact weighted
+# MinHash law), a (key, level)-salted fingerprint per bin, and the
+# 2-universal reseeded probe stream of optimal densification (one draw per
+# (empty bin, attempt) pair -- repro.core.dmh mirrors all of these).
+DMH_BIN_STREAM = 51
+DMH_R1_STREAM = 52
+DMH_R2_STREAM = 53
+DMH_C1_STREAM = 54
+DMH_C2_STREAM = 55
+DMH_BETA_STREAM = 56
+DMH_FP_STREAM = 57
+DMH_DENSIFY_STREAM = 58
+
+
+def densify_probes(m: int) -> int:
+    """Probe budget of the DMH densification epilogue (lane-multiple).
+    Mirrored bit for bit by ``repro.core.dmh.densify_probes`` -- the host
+    oracle and the kernel must probe identically or borrowed fingerprints
+    stop colliding across the host/device boundary."""
+    return min(1024, 128 * -(-4 * int(m) // 128))
 
 
 def streams() -> dict:

@@ -1,0 +1,365 @@
+"""Pallas TPU kernel: densified one-permutation weighted MinHash ingest.
+
+The ICWS sketch kernel (:mod:`repro.kernels.icws_sketch`) does O(N * m)
+hash work per vector: 5 uniform draws per (non-zero x sample) lane.  DMH
+(arXiv:1602.08393 with the optimal densification of arXiv:1703.04664, see
+:mod:`repro.core.dmh`) needs O(N + m): each non-zero is binned into its
+sample index by ONE u32 hash, scored by ICWS variates drawn at that single
+t = bin, and each of the m bins keeps its minimum; empty bins then borrow
+from occupied ones through a reseeded 2-universal probe sequence (uniform
+borrowing, not the biased rotation).
+
+Grid: ``(B/BR, N/BN)`` -- deliberately NO m grid dimension.  The whole
+m-bin state ``[BR, BM]`` (BM = m rounded up to a lane multiple) stays
+resident in VMEM across the sequential non-zero steps; that residency is
+what converts the ICWS kernel's per-(lane x sample) hashing into per-lane
+hashing.  Each step draws the 5 uniforms on the ``[BR, BN]`` lane tile,
+masks one ``[BR, BM, BN]`` bin-equality cross for the per-bin argmin, and
+min-merges winners into the running blocks with strict ``<`` (earlier
+tiles win ties -- the oracle's first-index argmin order).  Winner payloads
+(key / level / value) are gathered from the lane tile, not one-hot
+reduced, so the cross tensor count stays ~3 against ICWS's ~6 at 1/m-th
+the draw work.
+
+At the last non-zero step a densification epilogue runs entirely in VMEM
+(probes chunked 128 wide to bound temporaries), and with ``pack_vals=True``
+the bf16 pack epilogue mirrors the ICWS one.  The output wire layout is
+identical to ICWS -- ``(fp, val, amin, argkey)`` -- so every estimate /
+packed / sharded launch consumes DMH rows unchanged.
+
+VMEM budget per step (f32): inputs ``3 * BR*BN`` + outputs ``4 * BR*BM`` +
+~3 ``[BR, BM, BN]`` cross temporaries; the epilogue adds ``[BR, BM, 128]``
+probe chunks.  Results are bitwise independent of BR and BN (global
+first-min per bin); BM only pads (inert bins, sliced off) and the probe
+budget is a pure function of m (:func:`repro.kernels.common.
+densify_probes`), never tuned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (DMH_BETA_STREAM, DMH_BIN_STREAM, DMH_C1_STREAM,
+                     DMH_C2_STREAM, DMH_DENSIFY_STREAM, DMH_FP_STREAM,
+                     DMH_R1_STREAM, DMH_R2_STREAM, densify_probes, hash_u32,
+                     salt_for, uniform01)
+from .packed import pack_halfwords_f32
+from .ref import BIG
+
+_PROBE_CHUNK = 128   # probe lanes materialized at once in the epilogue
+
+
+def _densify(fp_ref, out_val_ref, amin_ref, out_key_ref, *, seed: int,
+             m_live: int, bm: int, jprobe: int):
+    """Fill empty bins from occupied ones (optimal densification).
+
+    Probes ``src = h(t; j) mod m`` for j = 0..jprobe-1; the first probe
+    landing on an occupied bin is the borrow source.  If every probe
+    misses, fall back to the first occupied bin (exact when exactly one
+    bin is occupied; coordinated regardless).  Rows with no occupied bin
+    at all are left untouched (the wrapper's empty fixup emits -1).
+    """
+    occ = amin_ref[:, :] < BIG                             # [BR, BM]
+    t = jax.lax.iota(jnp.int32, bm)
+    tu = t.astype(jnp.uint32)
+    best_j = jnp.full(occ.shape, jprobe, jnp.int32)
+    for j0 in range(0, jprobe, _PROBE_CHUNK):
+        js = j0 + jax.lax.iota(jnp.int32, _PROBE_CHUNK)
+        psalt = salt_for(seed, DMH_DENSIFY_STREAM, js)     # [CHUNK]
+        src = (hash_u32(tu[:, None], psalt[None, :])
+               % jnp.uint32(m_live)).astype(jnp.int32)     # [BM, CHUNK]
+        hit = jnp.take(occ, src, axis=1)                   # [BR, BM, CHUNK]
+        found = jnp.any(hit, axis=2)
+        firstj = j0 + jnp.argmax(hit, axis=2).astype(jnp.int32)
+        best_j = jnp.where((best_j == jprobe) & found, firstj, best_j)
+    has = best_j < jprobe
+    salt_w = salt_for(seed, DMH_DENSIFY_STREAM, jnp.where(has, best_j, 0))
+    src_w = (hash_u32(tu[None, :], salt_w)
+             % jnp.uint32(m_live)).astype(jnp.int32)       # [BR, BM]
+    fallback = jnp.argmax(occ, axis=1).astype(jnp.int32)[:, None]
+    src_sel = jnp.where(has, src_w, fallback)
+    need = (~occ) & jnp.any(occ, axis=1)[:, None]
+
+    for ref_ in (fp_ref, out_val_ref, out_key_ref, amin_ref):
+        cur = ref_[:, :]
+        ref_[:, :] = jnp.where(
+            need, jnp.take_along_axis(cur, src_sel, axis=1), cur)
+
+
+def _dmh_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
+                out_key_ref, *, seed: int, m_live: int, bm: int, bn: int,
+                n_steps: int, jprobe: int):
+    n_idx = pl.program_id(1)
+
+    w = w_ref[:, :]                                        # [BR, BN]
+    keys = key_ref[:, :]                                   # [BR, BN] int32
+    vals = val_ref[:, :]                                   # [BR, BN]
+    kk = keys.astype(jnp.uint32)
+
+    bin_salt = salt_for(seed, DMH_BIN_STREAM, jnp.uint32(0))
+    bins = (hash_u32(kk, bin_salt)
+            % jnp.uint32(m_live)).astype(jnp.int32)        # [BR, BN]
+
+    def u(stream):
+        # variates at t = bin: one draw per LANE, not per (lane, sample)
+        return uniform01(kk, salt_for(seed, stream, bins))
+
+    r = -jnp.log(u(DMH_R1_STREAM) * u(DMH_R2_STREAM))
+    c = -jnp.log(u(DMH_C1_STREAM) * u(DMH_C2_STREAM))
+    beta = u(DMH_BETA_STREAM)
+    logw = jnp.log(jnp.maximum(w, 1e-37))
+    lvl = jnp.floor(logw / r + beta)
+    y = jnp.exp(r * (lvl - beta))
+    a = c / (y * jnp.exp(r))
+    a = jnp.where(w > 0, a, BIG)                           # mask padding
+
+    t = jax.lax.iota(jnp.int32, bm)
+    am = jnp.where(bins[:, None, :] == t[None, :, None],
+                   a[:, None, :], BIG)                     # [BR, BM, BN]
+    arg = jnp.argmin(am, axis=2)                           # [BR, BM]
+    amin = jnp.min(am, axis=2)
+    key_sel = jnp.take_along_axis(keys, arg, axis=1)       # [BR, BM]
+    lvl_sel = jnp.take_along_axis(lvl, arg, axis=1)
+    val_sel = jnp.take_along_axis(vals, arg, axis=1)
+
+    fpbits = hash_u32(
+        key_sel.astype(jnp.uint32)
+        ^ (lvl_sel.astype(jnp.int32).astype(jnp.uint32)
+           * jnp.uint32(0x9E3779B9)),
+        salt_for(seed, DMH_FP_STREAM, t)[None, :])
+    # 31-bit fingerprint: non-negative int32 (see ref.dmh_sketch_ref)
+    fp = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        amin_ref[:, :] = amin
+        fp_ref[:, :] = fp
+        out_val_ref[:, :] = val_sel
+        out_key_ref[:, :] = key_sel
+
+    @pl.when(n_idx != 0)
+    def _merge():
+        better = amin < amin_ref[:, :]
+        amin_ref[:, :] = jnp.where(better, amin, amin_ref[:, :])
+        fp_ref[:, :] = jnp.where(better, fp, fp_ref[:, :])
+        out_val_ref[:, :] = jnp.where(better, val_sel, out_val_ref[:, :])
+        out_key_ref[:, :] = jnp.where(better, key_sel, out_key_ref[:, :])
+
+    @pl.when(n_idx == n_steps - 1)
+    def _fill():
+        _densify(fp_ref, out_val_ref, amin_ref, out_key_ref, seed=seed,
+                 m_live=m_live, bm=bm, jprobe=jprobe)
+
+
+def _dmh_kernel_packed(w_ref, key_ref, val_ref, fp_ref, out_val_ref,
+                       amin_ref, out_key_ref, packed_ref, *, seed: int,
+                       m_live: int, bm: int, bn: int, n_steps: int,
+                       jprobe: int):
+    """The DMH kernel plus the bf16 pack-on-output epilogue (the ICWS
+    ``pack_vals`` epilogue, run after densification so borrowed bins pack
+    their borrowed values).  Bins beyond ``m_live`` and empty rows are
+    zeroed before packing, matching ``pack_rows``' zero pad bit for bit."""
+    _dmh_kernel(w_ref, key_ref, val_ref, fp_ref, out_val_ref, amin_ref,
+                out_key_ref, seed=seed, m_live=m_live, bm=bm, bn=bn,
+                n_steps=n_steps, jprobe=jprobe)
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == n_steps - 1)
+    def _pack():
+        t = jax.lax.iota(jnp.int32, bm)
+        v = out_val_ref[:, :]
+        v = jnp.where((t < m_live)[None, :], v, 0.0)
+        v = jnp.where(amin_ref[:, :] >= BIG, 0.0, v)
+        packed_ref[:, :] = pack_halfwords_f32(v)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "seed", "br", "bm", "bn",
+                                             "pack_vals", "interpret"))
+def dmh_sketch_pallas(w, keys, vals, *, m: int, seed: int, br: int = 1,
+                      bm: int = 128, bn: int = 256,
+                      pack_vals: bool = False, interpret: bool = True):
+    """Batched DMH sketch via Pallas.  See :func:`repro.kernels.ref.dmh_sketch_ref`.
+
+    Args: w/keys/vals [B, N] (padded here to ``br``/``bn`` multiples);
+    returns (fp [B, m] int32, val [B, m] f32, amin [B, m] f32, argkey
+    [B, m] int32) -- the ICWS wire layout; borrowed (densified) bins carry
+    their source bin's payload, and ``argkey`` doubles as the occupancy
+    witness the merge path recovers origins from.  ``bm`` must cover m in
+    one block (the bin state is VMEM-resident; there is no m grid axis);
+    results are bitwise identical for every (br, bm, bn) choice.
+
+    With ``pack_vals=True`` a fifth output is appended: ``[B, (m + m % 2)
+    // 2]`` i32 bf16-halfword packed values, bitwise equal to
+    ``pack_halfwords_f32`` of the zero-padded ``val`` output.
+    """
+    B, N = w.shape
+    if bm % 128 or bm < m:
+        raise ValueError(f"bm must be a lane multiple covering m; "
+                         f"got bm={bm}, m={m}")
+    n_pad = (-N) % bn
+    b_pad = (-B) % br
+    if n_pad or b_pad:
+        w = jnp.pad(w, ((0, b_pad), (0, n_pad)))
+        keys = jnp.pad(keys, ((0, b_pad), (0, n_pad)))
+        vals = jnp.pad(vals, ((0, b_pad), (0, n_pad)))
+    Bp, Np = w.shape
+
+    grid = (Bp // br, Np // bn)
+    jprobe = densify_probes(m)
+    kw = dict(seed=seed, m_live=m, bm=bm, bn=bn, n_steps=Np // bn,
+              jprobe=jprobe)
+    if pack_vals:
+        kernel = functools.partial(_dmh_kernel_packed, **kw)
+        fp, val, amin, key, packed = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((br, bn), lambda b, ni: (b, ni)),
+                pl.BlockSpec((br, bn), lambda b, ni: (b, ni)),
+                pl.BlockSpec((br, bn), lambda b, ni: (b, ni)),
+            ],
+            out_specs=[
+                pl.BlockSpec((br, bm), lambda b, ni: (b, 0)),
+                pl.BlockSpec((br, bm), lambda b, ni: (b, 0)),
+                pl.BlockSpec((br, bm), lambda b, ni: (b, 0)),
+                pl.BlockSpec((br, bm), lambda b, ni: (b, 0)),
+                pl.BlockSpec((br, bm // 2), lambda b, ni: (b, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((Bp, bm), jnp.int32),
+                jax.ShapeDtypeStruct((Bp, bm), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, bm), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, bm), jnp.int32),
+                jax.ShapeDtypeStruct((Bp, bm // 2), jnp.int32),
+            ],
+            interpret=interpret,
+        )(w.astype(jnp.float32), keys.astype(jnp.int32),
+          vals.astype(jnp.float32))
+    else:
+        kernel = functools.partial(_dmh_kernel, **kw)
+        fp, val, amin, key = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((br, bn), lambda b, ni: (b, ni)),
+                pl.BlockSpec((br, bn), lambda b, ni: (b, ni)),
+                pl.BlockSpec((br, bn), lambda b, ni: (b, ni)),
+            ],
+            out_specs=[
+                pl.BlockSpec((br, bm), lambda b, ni: (b, 0)),
+                pl.BlockSpec((br, bm), lambda b, ni: (b, 0)),
+                pl.BlockSpec((br, bm), lambda b, ni: (b, 0)),
+                pl.BlockSpec((br, bm), lambda b, ni: (b, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((Bp, bm), jnp.int32),
+                jax.ShapeDtypeStruct((Bp, bm), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, bm), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, bm), jnp.int32),
+            ],
+            interpret=interpret,
+        )(w.astype(jnp.float32), keys.astype(jnp.int32),
+          vals.astype(jnp.float32))
+        packed = None
+
+    fp, val, amin, key = fp[:B, :m], val[:B, :m], amin[:B, :m], key[:B, :m]
+    empty = amin >= BIG
+    outs = (jnp.where(empty, -1, fp), jnp.where(empty, 0.0, val), amin,
+            jnp.where(empty, 0, key))
+    if pack_vals:
+        me = m + (m % 2)
+        return outs + (packed[:B, :me // 2],)
+    return outs
+
+
+@functools.partial(jax.jit, static_argnames=("m", "seed", "pack_vals"))
+def dmh_sketch_scatter(w, keys, vals, *, m: int, seed: int,
+                       pack_vals: bool = False):
+    """Scatter-min lowering of the DMH sketch -- same contract, O(nnz + m).
+
+    The Pallas kernel realizes the per-bin argmin as a ``[BR, BM, BN]``
+    bin-equality cross because TPU Pallas has no scatter primitive; the
+    VPU evaluates that cross across its 8x128 lanes essentially for free,
+    but interpret mode (and any non-TPU backend) must materialize it --
+    re-introducing the O(nnz * m) work DMH exists to avoid.  This jnp
+    builder is the genuinely linear form of the SAME computation: one
+    XLA ``scatter-min`` per bin plane instead of the broadcast, winner =
+    minimum ``a`` per bin with ties to the lowest lane index, which is
+    exactly the kernel's strict-< tile order and the oracle's first-hit
+    argmin.  Outputs match :func:`dmh_sketch_pallas` plane for plane
+    (fingerprints / argkeys bitwise; ``val``/``amin`` to transcendental
+    rounding); :mod:`repro.kernels.ops` dispatches here exactly where it
+    would have forced ``interpret=True`` on the kernel.
+    """
+    B, N = w.shape
+    w = w.astype(jnp.float32)
+    vals = vals.astype(jnp.float32)
+    kk = keys.astype(jnp.uint32)
+    bins = (hash_u32(kk, salt_for(seed, DMH_BIN_STREAM, jnp.uint32(0)))
+            % jnp.uint32(m)).astype(jnp.int32)                # [B, N]
+
+    def u(stream):
+        return uniform01(kk, salt_for(seed, stream, bins))
+
+    r = -jnp.log(u(DMH_R1_STREAM) * u(DMH_R2_STREAM))
+    c = -jnp.log(u(DMH_C1_STREAM) * u(DMH_C2_STREAM))
+    beta = u(DMH_BETA_STREAM)
+    logw = jnp.log(jnp.maximum(w, 1e-37))
+    lvl = jnp.floor(logw / r + beta)
+    y = jnp.exp(r * (lvl - beta))
+    a = jnp.where(w > 0, c / (y * jnp.exp(r)), BIG).astype(jnp.float32)
+
+    # per-bin first-min via two scatter-mins: the min itself, then the
+    # lowest lane index attaining it (ties break like np.argmin)
+    seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * m + bins).reshape(-1)
+    amin = (jnp.full(B * m, BIG, jnp.float32).at[seg].min(a.reshape(-1))
+            .reshape(B, m))
+    hit = a == jnp.take(amin.reshape(-1), seg).reshape(B, N)
+    lane = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+    arg = (jnp.full(B * m, N, jnp.int32).at[seg]
+           .min(jnp.where(hit, lane, N).reshape(-1)).reshape(B, m))
+    arg = jnp.minimum(arg, N - 1)     # bins no lane mapped to: inert gather
+
+    key_sel = jnp.take_along_axis(keys.astype(jnp.int32), arg, axis=1)
+    lvl_sel = jnp.take_along_axis(lvl, arg, axis=1)
+    val_sel = jnp.take_along_axis(vals, arg, axis=1)
+    t = jnp.arange(m, dtype=jnp.int32)
+    fpbits = hash_u32(
+        key_sel.astype(jnp.uint32)
+        ^ (lvl_sel.astype(jnp.int32).astype(jnp.uint32)
+           * jnp.uint32(0x9E3779B9)),
+        salt_for(seed, DMH_FP_STREAM, t)[None, :])
+    fp = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+    # densification epilogue, jnp twin of the in-kernel one
+    occ = amin < BIG                                          # [B, m]
+    J = densify_probes(m)
+    psalt = salt_for(seed, DMH_DENSIFY_STREAM, jnp.arange(J, dtype=jnp.int32))
+    src = (hash_u32(t[:, None].astype(jnp.uint32), psalt[None, :])
+           % jnp.uint32(m)).astype(jnp.int32)                 # [m, J]
+    occ_p = jnp.take(occ, src, axis=1)                        # [B, m, J]
+    has = jnp.any(occ_p, axis=2)
+    firstj = jnp.argmax(occ_p, axis=2).astype(jnp.int32)
+    src_w = (hash_u32(t.astype(jnp.uint32),
+                      salt_for(seed, DMH_DENSIFY_STREAM, firstj))
+             % jnp.uint32(m)).astype(jnp.int32)
+    fallback = jnp.argmax(occ, axis=1).astype(jnp.int32)[:, None]
+    src_sel = jnp.where(has, src_w, fallback)
+    need = (~occ) & jnp.any(occ, axis=1)[:, None]
+
+    def borrow(x):
+        return jnp.where(need, jnp.take_along_axis(x, src_sel, axis=1), x)
+
+    fp, val_sel, key_sel, amin = (borrow(fp), borrow(val_sel),
+                                  borrow(key_sel), borrow(amin))
+    empty = amin >= BIG
+    outs = (jnp.where(empty, -1, fp), jnp.where(empty, 0.0, val_sel), amin,
+            jnp.where(empty, 0, key_sel))
+    if pack_vals:
+        me = m + (m % 2)
+        padded = jnp.pad(outs[1], ((0, 0), (0, me - m)))
+        return outs + (pack_halfwords_f32(padded),)
+    return outs

@@ -24,6 +24,7 @@ from .estimate import (CORPUS_PAD_FP, QUERY_PAD_FP, estimate_fields_pallas,
                        estimate_one_vs_many_pallas, estimate_partials_pallas,
                        linear_estimate_fields_packed_pallas,
                        linear_estimate_fields_pallas)
+from .dmh_sketch import dmh_sketch_pallas, dmh_sketch_scatter
 from .icws_sketch import icws_sketch_pallas
 from .jl_sketch import jl_sketch_pallas
 from .sample_estimate import (sample_estimate_fields_packed_pallas,
@@ -71,6 +72,41 @@ def icws_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0,
     return icws_sketch_pallas(w, keys, vals, m=m, seed=seed, br=br,
                               pack_vals=pack_vals, interpret=_interpret(),
                               **blocks)
+
+
+def dmh_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0,
+               pack_vals: bool = False):
+    """Device DMH sketch of a padded sparse batch -- same signature and
+    ``(fp, val, amin, argkey)`` wire layout as :func:`icws_sketch`, but
+    O(nnz + m) per row instead of O(nnz * m): each non-zero is binned once
+    and only the per-bin minima are kept (see
+    :mod:`repro.kernels.dmh_sketch`).
+
+    The VMEM bin-state width ``bm`` is fixed here to the lane-rounded
+    sketch width -- it is a capacity, not a tuning knob, so the autotune
+    cache only carries (br, bn).  Results are bitwise identical across all
+    block choices.
+
+    Without a compiled Pallas backend the kernel's ``[br, bm, bn]``
+    bin-equality cross (free across TPU VPU lanes) would be materialized
+    by interpret mode, silently re-inflating DMH to the O(nnz * m) cost it
+    exists to avoid -- so the interpret branch dispatches to
+    :func:`repro.kernels.dmh_sketch.dmh_sketch_scatter`, the scatter-min
+    lowering of the same contract (same winners, same wire layout).
+    """
+    if _interpret():
+        return dmh_sketch_scatter(w, keys, vals, m=m, seed=seed,
+                                  pack_vals=pack_vals)
+    if row_block == 0:
+        row_block = 4 if w.shape[0] >= 8 else 1
+    blocks = _tuned("dmh_sketch", {"m": m, "N": w.shape[1]},
+                    {"br": (w.shape[0], 1)})
+    br = blocks.pop("br", row_block)
+    blocks.pop("bm", None)
+    bm = 128 * (-(-max(m, 1) // 128))
+    return dmh_sketch_pallas(w, keys, vals, m=m, seed=seed, br=br, bm=bm,
+                             pack_vals=pack_vals, interpret=_interpret(),
+                             **blocks)
 
 
 def countsketch(x, *, width: int, reps: int = 5, seed: int = 0, offset: int = 0):

@@ -10,9 +10,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import (CS_BUCKET_STREAM, CS_SIGN_STREAM, ICWS_BETA_STREAM,
-                     ICWS_C1_STREAM, ICWS_C2_STREAM, ICWS_FP_STREAM,
-                     ICWS_R1_STREAM, ICWS_R2_STREAM, JL_SIGN_STREAM,
+from .common import (CS_BUCKET_STREAM, CS_SIGN_STREAM, DMH_BETA_STREAM,
+                     DMH_BIN_STREAM, DMH_C1_STREAM, DMH_C2_STREAM,
+                     DMH_DENSIFY_STREAM, DMH_FP_STREAM, DMH_R1_STREAM,
+                     DMH_R2_STREAM, ICWS_BETA_STREAM, ICWS_C1_STREAM,
+                     ICWS_C2_STREAM, ICWS_FP_STREAM, ICWS_R1_STREAM,
+                     ICWS_R2_STREAM, JL_SIGN_STREAM, densify_probes,
                      hash_u32, salt_for, uniform01)
 
 BIG = 3.0e38  # python float: safe to close over in kernel bodies
@@ -73,6 +76,79 @@ def icws_sketch_ref(w, keys, vals, m: int, seed: int):
     val_sel = jnp.where(nonempty, val_sel, 0.0)
     key_sel = jnp.where(nonempty, key_sel, 0)
     return fp, val_sel, jnp.where(nonempty, amin, BIG), key_sel
+
+
+# ---------------------------------------------------------------------------
+# DMH sketch  (densified one-permutation weighted MinHash; repro.core.dmh)
+# ---------------------------------------------------------------------------
+def dmh_sketch_ref(w, keys, vals, m: int, seed: int):
+    """Reference DMH sketch of a batch of padded sparse vectors.
+
+    Args / returns exactly as :func:`icws_sketch_ref` (same wire layout),
+    but each non-zero is binned into one sample ``t = h(key) mod m`` and
+    scored by ICWS variates drawn at that single t; empty bins borrow from
+    occupied ones through the reseeded densification probes.  ``amin`` of
+    a borrowed bin is its source bin's minimum (< BIG marks it live).
+    """
+    B, N = w.shape
+    kk = keys.astype(jnp.uint32)
+    bin_salt = salt_for(seed, DMH_BIN_STREAM, jnp.uint32(0))
+    bins = (hash_u32(kk, bin_salt) % jnp.uint32(m)).astype(jnp.int32)
+
+    def u(stream):
+        return uniform01(kk, salt_for(seed, stream, bins))    # [B, N]
+
+    r = -jnp.log(u(DMH_R1_STREAM) * u(DMH_R2_STREAM))
+    c = -jnp.log(u(DMH_C1_STREAM) * u(DMH_C2_STREAM))
+    beta = u(DMH_BETA_STREAM)
+    logw = jnp.log(jnp.maximum(w, 1e-37))
+    lvl = jnp.floor(logw / r + beta)
+    y = jnp.exp(r * (lvl - beta))
+    a = c / (y * jnp.exp(r))
+    a = jnp.where(w > 0, a, BIG)
+
+    t = jnp.arange(m, dtype=jnp.int32)
+    am = jnp.where(bins[:, None, :] == t[None, :, None],
+                   a[:, None, :], BIG)                        # [B, m, N]
+    arg = jnp.argmin(am, axis=2)                              # [B, m]
+    amin = jnp.min(am, axis=2)
+    key_sel = jnp.take_along_axis(keys, arg, axis=1)
+    lvl_sel = jnp.take_along_axis(lvl, arg, axis=1)
+    val_sel = jnp.take_along_axis(vals, arg, axis=1)
+
+    fpbits = hash_u32(
+        key_sel.astype(jnp.uint32)
+        ^ (lvl_sel.astype(jnp.int32).astype(jnp.uint32)
+           * jnp.uint32(0x9E3779B9)),
+        salt_for(seed, DMH_FP_STREAM, t)[None, :])
+    fp = (fpbits & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+    # densification: first probe h(t; j) mod m landing on an occupied bin;
+    # all-miss falls back to the first occupied bin (repro.core.dmh)
+    occ = amin < BIG                                          # [B, m]
+    J = densify_probes(m)
+    js = jnp.arange(J, dtype=jnp.int32)
+    psalt = salt_for(seed, DMH_DENSIFY_STREAM, js)
+    src = (hash_u32(t[:, None].astype(jnp.uint32), psalt[None, :])
+           % jnp.uint32(m)).astype(jnp.int32)                 # [m, J]
+    occ_p = jnp.take(occ, src, axis=1)                        # [B, m, J]
+    has = jnp.any(occ_p, axis=2)
+    firstj = jnp.argmax(occ_p, axis=2).astype(jnp.int32)
+    src_w = (hash_u32(t.astype(jnp.uint32),
+                      salt_for(seed, DMH_DENSIFY_STREAM, firstj))
+             % jnp.uint32(m)).astype(jnp.int32)               # [B, m]
+    fallback = jnp.argmax(occ, axis=1).astype(jnp.int32)[:, None]
+    src_sel = jnp.where(has, src_w, fallback)
+    need = (~occ) & jnp.any(occ, axis=1)[:, None]
+
+    def borrow(x):
+        return jnp.where(need, jnp.take_along_axis(x, src_sel, axis=1), x)
+
+    fp, val_sel, key_sel, amin = (borrow(fp), borrow(val_sel),
+                                  borrow(key_sel), borrow(amin))
+    alive = amin < BIG
+    return (jnp.where(alive, fp, -1), jnp.where(alive, val_sel, 0.0),
+            amin, jnp.where(alive, key_sel, 0))
 
 
 # ---------------------------------------------------------------------------

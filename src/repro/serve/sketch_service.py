@@ -59,7 +59,8 @@ class SketchSearchService:
     def __init__(self, m: int = 256, seed: int = 0,
                  backend: str = "device", keep_host_oracle: bool = True,
                  mesh=None, family: str = "icws", packed: bool = False):
-        # family picks the device serving sketch (icws | cs | jl), sized
+        # family picks the device serving sketch (any repro.data
+        # .FAMILY_NAMES entry -- icws/dmh/cs/jl/ts/ps today), sized
         # storage-matched from m (see repro.data.families) -- the same
         # corpus can be served under any family for an apples-to-apples
         # error/throughput comparison.  packed=True keeps the corpus in the

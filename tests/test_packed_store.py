@@ -93,10 +93,12 @@ def test_pack_unpack_roundtrip_per_family(name):
     assert len(rt) == len(rows)
     # integer planes (fingerprints / sample keys) survive exactly; value
     # planes come back bf16-truncated; re-packing the roundtrip is the
-    # identity (the wire format is a fixed point)
+    # identity (the wire format is a fixed point).  The icws-layout
+    # argkeys sidecar (icws and its dmh sibling) is dropped by the packed
+    # format -- packed rows are frozen -- and comes back zeroed.
     for a, b in zip(rows, rt):
         a, b = np.asarray(a), np.asarray(b)
-        if a.dtype == np.int32 and not (name == "icws"
+        if a.dtype == np.int32 and not (name in ("icws", "dmh")
                                         and b.shape == a.shape
                                         and np.all(b == 0)):
             assert np.array_equal(a, b) or np.array_equal(_bf16_trunc(a), b)
