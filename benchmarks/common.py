@@ -8,6 +8,7 @@ import numpy as np
 
 from repro.core import (PAPER_METHODS, SparseVec, inner_fast, make,
                         stack_icws, stack_mh, stack_wmh)
+from repro.obs.metrics import Histogram
 
 RECORDS: List[Dict] = []
 
@@ -25,6 +26,24 @@ def timed(fn: Callable, *args, repeat: int = 1):
         out = fn(*args)
     dt = (time.perf_counter() - t0) / repeat
     return out, dt * 1e6  # microseconds
+
+
+def timed_median(fn: Callable, *args, repeat: int = 5):
+    """(last result, latency Histogram) over ``repeat`` timed calls.
+
+    The percentile-aware twin of :func:`timed` for the gated perf
+    comparisons: container CPU contention makes single-shot and min-of-N
+    wall clocks flaky, so gates compare ``hist.quantile(0.5)`` -- exact
+    while ``repeat`` fits the histogram's raw-sample window (128).
+    Seconds, not microseconds: callers scale for display.
+    """
+    h = Histogram("bench")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        h.record(time.perf_counter() - t0)
+    return out, h
 
 
 def normalized_error(est: float, true: float, na: float, nb: float) -> float:

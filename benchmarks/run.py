@@ -62,6 +62,15 @@ def main() -> None:
         durations[name] = time.time() - t
         print(f"# {name} done in {durations[name]:.1f}s", flush=True)
     print(f"# total {time.time()-t0:.1f}s")
+    # with REPRO_OBS=1 the run doubles as a telemetry capture: export the
+    # metrics snapshot + Chrome trace next to the JSON artifact (dir from
+    # REPRO_OBS_DIR, default obs_snapshot/).  Written even when suites
+    # failed -- the trace of a failed run is the one worth reading.
+    from repro import obs
+    if obs.enabled():
+        paths = obs.export_snapshot()
+        for kind, path in sorted(paths.items()):
+            print(f"# obs {kind}: {path}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"fast": bool(args.fast), "suites": only,

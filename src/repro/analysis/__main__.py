@@ -12,7 +12,7 @@ import sys
 import time
 
 from .config import BaselineError, Config
-from .engine import STREAMS_MD, run
+from .engine import METRICS_MD, STREAMS_MD, run
 from .findings import RULES
 
 
@@ -46,6 +46,9 @@ def main(argv=None) -> int:
                          "(default 2 MiB)")
     ap.add_argument("--write-streams", action="store_true",
                     help="(re)write STREAMS.md at the root and exit")
+    ap.add_argument("--write-metrics", action="store_true",
+                    help="(re)write METRICS.md (the obs metric registry) "
+                         "at the root")
     ap.add_argument("--budget-report", type=pathlib.Path, default=None,
                     help="write the per-kernel VMEM budget report (JSON)")
     ap.add_argument("--json", dest="json_out", type=pathlib.Path,
@@ -84,6 +87,15 @@ def main(argv=None) -> int:
         print(f"wrote {root / STREAMS_MD}")
         # fall through: still report findings (a fresh STREAMS.md clears
         # SR006 on the next run, not this one)
+
+    if args.write_metrics:
+        if not result.metrics_md:
+            print("error: no obs metric registry found "
+                  "(src/repro/obs/registry.py)", file=sys.stderr)
+            return 2
+        (root / METRICS_MD).write_text(result.metrics_md)
+        print(f"wrote {root / METRICS_MD}")
+        # fall through, same contract as --write-streams
 
     if args.budget_report is not None:
         args.budget_report.parent.mkdir(parents=True, exist_ok=True)

@@ -14,6 +14,7 @@ from . import budget as budget_mod
 from . import compat as compat_mod
 from . import config as cfg_mod
 from . import families as families_mod
+from . import obs as obs_mod
 from . import streams as streams_mod
 from .astutil import Repo
 from .config import BaselineEntry, Config, load_baseline
@@ -25,6 +26,7 @@ from .findings import Finding
 SCAN_DIRS = ("src", "tests", "benchmarks")
 
 STREAMS_MD = "STREAMS.md"
+METRICS_MD = "METRICS.md"
 
 
 @dataclasses.dataclass
@@ -33,6 +35,7 @@ class AnalysisResult:
     baselined: List[Tuple[Finding, BaselineEntry]]
     streams_md: str                      # rendered registry table
     budget_report: List[Dict]            # per-pallas_call VMEM accounting
+    metrics_md: str = ""                 # rendered metric registry table
 
     @property
     def ok(self) -> bool:
@@ -92,6 +95,23 @@ def run(cfg: Config) -> AnalysisResult:
     findings.extend(pb_findings)
     findings.extend(families_mod.check(repo))
 
+    ob_findings, metrics_md = obs_mod.check(repo)
+    findings.extend(ob_findings)
+
+    # OB002: like SR006, the committed metric registry table must match the
+    # regenerated one.  Trees without obs/registry.py (fixture checkouts)
+    # render no table and skip the pin.
+    if metrics_md:
+        committed_metrics = cfg.root / METRICS_MD
+        if not committed_metrics.exists():
+            findings.append(Finding(
+                "OB002", METRICS_MD, 1,
+                "METRICS.md missing; generate with --write-metrics"))
+        elif committed_metrics.read_text() != metrics_md:
+            findings.append(Finding(
+                "OB002", METRICS_MD, 1,
+                "METRICS.md is stale; regenerate with --write-metrics"))
+
     findings = [f for f in findings if cfg.wants(f.rule)]
     entries = load_baseline(cfg.baseline_file())
     actionable, baselined = _apply_baseline(findings, entries,
@@ -100,7 +120,8 @@ def run(cfg: Config) -> AnalysisResult:
     baselined.sort(key=lambda pair: pair[0].sort_key())
     return AnalysisResult(findings=actionable, baselined=baselined,
                           streams_md=streams_md,
-                          budget_report=budget_report)
+                          budget_report=budget_report,
+                          metrics_md=metrics_md)
 
 
 def default_config(root) -> Config:
@@ -109,4 +130,4 @@ def default_config(root) -> Config:
 
 # Re-exported for convenience of `from repro.analysis.engine import ...`.
 __all__ = ["AnalysisResult", "Config", "run", "default_config",
-           "SCAN_DIRS", "STREAMS_MD"]
+           "SCAN_DIRS", "STREAMS_MD", "METRICS_MD"]

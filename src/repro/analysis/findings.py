@@ -40,6 +40,11 @@ RULES = {
     "FC002": "family in FAMILY_NAMES is not constructible via make_family",
     "FC003": "family in FAMILY_NAMES is missing from a parameterized "
              "test/bench sweep",
+    # observability coverage (repro.analysis.obs)
+    "OB001": "public kernels/ops.py launch wrapper is missing the "
+             "@instrumented decorator (or declares a mismatched op name)",
+    "OB002": "METRICS.md is stale against the obs/registry.py SPECS table: "
+             "regenerate with `python -m repro.analysis --write-metrics`",
     # baseline hygiene (repro.analysis.engine)
     "BL001": "baseline.toml entry matches no current finding; delete it",
 }

@@ -55,6 +55,7 @@ import numpy as np
 from repro.core import KMV, SparseVec, WeightedMinHash, stack_wmh
 from repro.core.kmv import KMVSketch
 from repro.core.wmh import StackedWMH, WMHSketch
+from repro import obs as _obs
 from repro.kernels import ops
 
 from .families import FAMILY_NAMES, make_family, wmh_storage
@@ -211,8 +212,9 @@ class DatasetSearchIndex:
         if self.store is not None:
             # device path: one [3, N] kernel launch sketches all three
             # fields; the rows append in place into the canonical store
-            comps = self.family.sketch_rows([ind, val, sq])
-            self.store.append(*(c[:, None] for c in comps), tenant=tenant)
+            with _obs.family_context(self.family.name):
+                comps = self.family.sketch_rows([ind, val, sq])
+                self.store.append(*(c[:, None] for c in comps), tenant=tenant)
         self._register_table(name, keys, ind, val, sq, tenant=tenant)
 
     def add_tables_sharded(self, tables: Sequence[Tuple[str, np.ndarray,
@@ -245,8 +247,9 @@ class DatasetSearchIndex:
             ind, val, sq = self.vectorize(keys, values)
             rows.append((ind, val, sq))
             metas.append((name, keys, ind, val, sq))
-        merged = build_sharded(rows, family=self.family, shards=shards)
-        self.store.append(*merged.field_arrays(), tenant=tenant)
+        with _obs.family_context(self.family.name):
+            merged = build_sharded(rows, family=self.family, shards=shards)
+            self.store.append(*merged.field_arrays(), tenant=tenant)
         for name, keys, ind, val, sq in metas:
             self._register_table(name, keys, ind, val, sq, tenant=tenant)
 
@@ -303,9 +306,10 @@ class DatasetSearchIndex:
                                     tenant=tenant)
         # the fused batch engine with Q=1: same kernels, same numerics --
         # single and batched queries are one code path by construction
-        return self._query_batch_device(
-            [(np.asarray(keys), np.asarray(values))], top_k, min_join,
-            tenant=tenant)[0]
+        with _obs.family_context(self.family.name):
+            return self._query_batch_device(
+                [(np.asarray(keys), np.asarray(values))], top_k, min_join,
+                tenant=tenant)[0]
 
     def _assemble_results(self, scores, idx, join_h, sum_b_h, q_sample,
                           n_q: int, tables: Optional[List[TableSketch]] = None
@@ -355,8 +359,9 @@ class DatasetSearchIndex:
             return [self._query_host(np.asarray(k), np.asarray(v),
                                      top_k, min_join, tenant=tenant)
                     for k, v in queries]
-        return self._query_batch_device(queries, top_k, min_join,
-                                        tenant=tenant)
+        with _obs.family_context(self.family.name):
+            return self._query_batch_device(queries, top_k, min_join,
+                                            tenant=tenant)
 
     def _estimate(self, qcomps, cbufs):
         """The fused single-device fields launch, routed to the packed

@@ -40,6 +40,7 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import u32
 from repro.core.sampling import SAMPLE_KEY_MASK
 from repro.core.types import SparseVec
@@ -130,9 +131,13 @@ def merge_stores(a: CorpusStore, b: CorpusStore) -> CorpusStore:
             "tenant row-range tables differ; merge inputs must assign "
             f"identical rows to identical tenants ({tenants_a} vs "
             f"{tenants_b})")
-    merged = a.family.merge_rows(a.field_arrays(), b.field_arrays())
-    out = CorpusStore(family=a.family, fields=a.fields, mesh=a.mesh)
-    out.append(*merged)
+    with _obs.span("merge.merge_stores", family=a.family.name,
+                   rows=len(a), fields=a.fields):
+        merged = a.family.merge_rows(a.field_arrays(), b.field_arrays())
+        out = CorpusStore(family=a.family, fields=a.fields, mesh=a.mesh)
+        out.append(*merged)
+    if _obs.enabled():
+        _obs.counter("merge.merges_total", family=a.family.name).inc()
     for t, ranges in tenants_a.items():
         out._tenant_ranges[t] = [tuple(r) for r in ranges]
     return out
@@ -174,23 +179,26 @@ def build_sharded(rows: Sequence, *, family, shards: int, mesh=None,
     n_comp = len(family.components)
     # one partition pass over the data (each key folded + hashed once),
     # then per-shard sketching -- the distributable part
-    parted = [tuple(partition_by_key(v, shards) for v in fr)
-              for fr in field_rows]
-    stores = []
-    for s in range(shards):
-        per_field = [family.sketch_rows([pr[f][s] for pr in parted],
-                                        bucket=bucket)
-                     for f in range(F)]
-        stacked = tuple(
-            jnp.stack([per_field[f][i] for f in range(F)], axis=0)
-            for i in range(n_comp))
-        store = CorpusStore(family=family, fields=F, mesh=mesh)
-        store.append(*stacked)
-        stores.append(store)
-    while len(stores) > 1:
-        merged = [merge_stores(stores[i], stores[i + 1])
-                  for i in range(0, len(stores) - 1, 2)]
-        if len(stores) % 2:
-            merged.append(stores[-1])
-        stores = merged
-    return stores[0]
+    with _obs.span("merge.build_sharded", family=family.name, shards=shards,
+                   rows=len(field_rows)):
+        parted = [tuple(partition_by_key(v, shards) for v in fr)
+                  for fr in field_rows]
+        stores = []
+        for s in range(shards):
+            with _obs.span("merge.sketch_shard", family=family.name, shard=s):
+                per_field = [family.sketch_rows([pr[f][s] for pr in parted],
+                                                bucket=bucket)
+                             for f in range(F)]
+                stacked = tuple(
+                    jnp.stack([per_field[f][i] for f in range(F)], axis=0)
+                    for i in range(n_comp))
+                store = CorpusStore(family=family, fields=F, mesh=mesh)
+                store.append(*stacked)
+            stores.append(store)
+        while len(stores) > 1:
+            merged = [merge_stores(stores[i], stores[i + 1])
+                      for i in range(0, len(stores) - 1, 2)]
+            if len(stores) % 2:
+                merged.append(stores[-1])
+            stores = merged
+        return stores[0]

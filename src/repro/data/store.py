@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro import obs as _obs
 from repro.distributed.sharding import corpus_axis
 from repro.kernels.estimate import CORPUS_PAD_FP
 
@@ -234,14 +235,16 @@ class CorpusStore:
                     f"{(self.fields, b) + s.trailing}")
         if b == 0:
             return
-        if self.packed:
-            rows = [jnp.asarray(r, s.dtype) for r, s in
-                    zip(self.family.pack_rows(tuple(rows)), self._specs)]
-        self._reserve(self._size + b)
-        with _quiet_cpu_donation():
-            self._bufs = _write_rows(self._bufs, tuple(rows),
-                                     jnp.int32(self._size))
-        self._place()
+        with _obs.span("store.append", family=self.family.name, rows=b,
+                       tenant=tenant):
+            if self.packed:
+                rows = [jnp.asarray(r, s.dtype) for r, s in
+                        zip(self.family.pack_rows(tuple(rows)), self._specs)]
+            self._reserve(self._size + b)
+            with _quiet_cpu_donation():
+                self._bufs = _write_rows(self._bufs, tuple(rows),
+                                         jnp.int32(self._size))
+            self._place()
         if tenant is not None:
             ranges = self._tenant_ranges.setdefault(str(tenant), [])
             if ranges and ranges[-1][1] == self._size:
@@ -249,6 +252,12 @@ class CorpusStore:
             else:
                 ranges.append((self._size, self._size + b))
         self._size += b
+        if _obs.enabled():
+            fam = self.family.name
+            _obs.counter("store.appends_total", family=fam).inc()
+            _obs.gauge("store.rows", family=fam).set(self._size)
+            _obs.gauge("store.resident_bytes", family=fam).set(
+                self._cap * self.fields * self.bytes_per_row())
 
     # -- tenancy -------------------------------------------------------------
     def tenants(self) -> Tuple[str, ...]:
@@ -300,9 +309,14 @@ class CorpusStore:
                 jnp.full((F, cap) + s.trailing, s.fill, s.dtype)
                 for s in self._specs)
         else:
-            with _quiet_cpu_donation():
-                self._bufs = _grow_buffers(self._bufs, cap=cap,
-                                           fills=self._fills)
+            with _obs.span("store.grow", family=self.family.name,
+                           capacity=cap):
+                with _quiet_cpu_donation():
+                    self._bufs = _grow_buffers(self._bufs, cap=cap,
+                                               fills=self._fills)
+            if _obs.enabled():
+                _obs.counter("store.grows_total",
+                             family=self.family.name).inc()
         self._cap = cap
         self._place()
 

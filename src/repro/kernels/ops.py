@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PSpec
 
 from repro import compat
+from repro import obs as _obs
 from repro.roofline import autotune
 
 from . import ref
@@ -33,7 +34,10 @@ from .sample_estimate import (sample_estimate_fields_packed_pallas,
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    interp = jax.default_backend() != "tpu"
+    if _obs.enabled():
+        _obs.gauge("ops.interpret_mode").set(float(interp))
+    return interp
 
 
 def _tuned(kernel: str, key, clamp):
@@ -48,9 +52,14 @@ def _tuned(kernel: str, key, clamp):
     (batched/sequential, sharded/single-device, tenant, packed/unpacked)
     intact under tuning.
     """
-    return autotune.resolve(kernel, jax.default_backend(), key, clamp=clamp)
+    blocks = autotune.resolve(kernel, jax.default_backend(), key, clamp=clamp)
+    if _obs.enabled():
+        _obs.counter("ops.autotune_resolved_total", kernel=kernel,
+                     source="tuned" if blocks else "default").inc()
+    return blocks
 
 
+@_obs.instrumented("icws_sketch")
 def icws_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0,
                 pack_vals: bool = False):
     """Device ICWS sketch of padded sparse batch.
@@ -74,6 +83,7 @@ def icws_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0,
                               **blocks)
 
 
+@_obs.instrumented("dmh_sketch")
 def dmh_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0,
                pack_vals: bool = False):
     """Device DMH sketch of a padded sparse batch -- same signature and
@@ -109,17 +119,20 @@ def dmh_sketch(w, keys, vals, *, m: int, seed: int = 0, row_block: int = 0,
                              **blocks)
 
 
+@_obs.instrumented("countsketch")
 def countsketch(x, *, width: int, reps: int = 5, seed: int = 0, offset: int = 0):
     """CountSketch table [reps, width] of a dense vector."""
     return countsketch_pallas(x, width=width, reps=reps, seed=seed,
                               offset=offset, interpret=_interpret())
 
 
+@_obs.instrumented("countsketch_decode")
 def countsketch_decode(table, indices, *, seed: int = 0):
     """Unbiased median-of-reps point query (pure jnp: gather-bound, no kernel)."""
     return ref.countsketch_decode_ref(table, indices, seed)
 
 
+@_obs.instrumented("countsketch_sparse")
 def countsketch_sparse(keys, vals, *, width: int, reps: int = 5,
                        seed: int = 0):
     """Device CountSketch of a padded sparse batch.  [B, N] -> [B, reps, width]."""
@@ -127,29 +140,34 @@ def countsketch_sparse(keys, vals, *, width: int, reps: int = 5,
                                      seed=seed, interpret=_interpret())
 
 
+@_obs.instrumented("jl_sketch")
 def jl_sketch(keys, vals, *, m: int, seed: int = 0):
     """Device JL projection of a padded sparse batch.  [B, N] -> [B, m]."""
     return jl_sketch_pallas(keys, vals, m=m, seed=seed,
                             interpret=_interpret())
 
 
+@_obs.instrumented("estimate_partials")
 def estimate_partials(fpa, va, fpb, vb):
     """Fused Algorithm-5 partial sums for P sketch pairs."""
     return estimate_partials_pallas(fpa, va, fpb, vb, interpret=_interpret())
 
 
+@_obs.instrumented("estimate_partials_one_vs_many")
 def estimate_partials_one_vs_many(fq, vq, fpc, vc):
     """Fused Algorithm-5 partial sums: one query sketch vs a [P, m] corpus."""
     return estimate_one_vs_many_pallas(fq, vq, fpc, vc,
                                        interpret=_interpret())
 
 
+@_obs.instrumented("estimate_partials_many_vs_many")
 def estimate_partials_many_vs_many(fq, vq, fpc, vc):
     """Fused Algorithm-5 partial sums: [Q, m] queries vs a [P, m] corpus."""
     return estimate_many_vs_many_pallas(fq, vq, fpc, vc,
                                         interpret=_interpret())
 
 
+@_obs.instrumented("estimate_partials_fields")
 def estimate_partials_fields(fq, vq, fpc, vc, *, qmap, cmap):
     """Fused multi-field partial sums: one launch for all field pairs."""
     blocks = _tuned("estimate_fields", {"m": fpc.shape[2]},
@@ -159,6 +177,7 @@ def estimate_partials_fields(fq, vq, fpc, vc, *, qmap, cmap):
                                   **blocks)
 
 
+@_obs.instrumented("icws_estimate")
 @functools.partial(jax.jit, static_argnames=())
 def icws_estimate(fpa, va, na, fpb, vb, nb):
     """Full ICWS inner-product estimate for P pairs (epilogue in jnp).
@@ -173,6 +192,7 @@ def icws_estimate(fpa, va, na, fpb, vb, nb):
     return jnp.where((na == 0) | (nb == 0), 0.0, est)
 
 
+@_obs.instrumented("icws_estimate_corpus")
 @functools.partial(jax.jit, static_argnames=())
 def icws_estimate_corpus(fq, vq, nq, fpc, vc, nc):
     """ICWS inner-product estimates of one query against a whole corpus.
@@ -189,6 +209,7 @@ def icws_estimate_corpus(fq, vq, nq, fpc, vc, nc):
     return jnp.where((nq == 0) | (nc == 0), 0.0, est)
 
 
+@_obs.instrumented("icws_estimate_many")
 @functools.partial(jax.jit, static_argnames=())
 def icws_estimate_many(fq, vq, nq, fpc, vc, nc):
     """ICWS inner-product estimates of Q queries against a whole corpus.
@@ -204,6 +225,7 @@ def icws_estimate_many(fq, vq, nq, fpc, vc, nc):
     return jnp.where((nq[:, None] == 0) | (nc[None, :] == 0), 0.0, est)
 
 
+@_obs.instrumented("icws_estimate_corpus_stacked")
 @jax.jit
 def icws_estimate_corpus_stacked(fq, vq, nq, fpb, vb, nb):
     """One query vs field 0 of stacked ``[1, cap, m]`` store buffers.
@@ -216,12 +238,14 @@ def icws_estimate_corpus_stacked(fq, vq, nq, fpb, vb, nb):
     return icws_estimate_corpus(fq, vq, nq, fpb[0], vb[0], nb[0])
 
 
+@_obs.instrumented("icws_estimate_many_stacked")
 @jax.jit
 def icws_estimate_many_stacked(fq, vq, nq, fpb, vb, nb):
     """Q queries vs field 0 of stacked ``[1, cap, m]`` store buffers."""
     return icws_estimate_many(fq, vq, nq, fpb[0], vb[0], nb[0])
 
 
+@_obs.instrumented("linear_estimate_fields")
 @functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
 def linear_estimate_fields(tq, tc, *, qmap, cmap):
     """Fused multi-field linear-sketch estimates: all field pairs, ONE launch.
@@ -241,6 +265,7 @@ def linear_estimate_fields(tq, tc, *, qmap, cmap):
     return jnp.median(dots, axis=1)
 
 
+@_obs.instrumented("icws_estimate_fields")
 @functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
 def icws_estimate_fields(fq, vq, nq, fpc, vc, nc, *, qmap, cmap):
     """Fused multi-field ICWS estimates: all field pairs in ONE launch.
@@ -261,6 +286,7 @@ def icws_estimate_fields(fq, vq, nq, fpc, vc, nc, *, qmap, cmap):
     return jnp.where((nqg == 0) | (ncg == 0), 0.0, est)
 
 
+@_obs.instrumented("sample_estimate_fields")
 @functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
 def sample_estimate_fields(kq, vq, tq, kc, vc, tc, *, qmap, cmap):
     """Fused multi-field sampling-sketch (TS/PS) estimates, ONE launch.
@@ -296,6 +322,7 @@ def sample_estimate_fields(kq, vq, tq, kc, vc, tc, *, qmap, cmap):
 # estimates are bitwise equal to the unpacked path run on
 # family.unpack_rows(family.pack_rows(rows)).
 
+@_obs.instrumented("icws_estimate_fields_packed")
 @functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
 def icws_estimate_fields_packed(fq, vq, nq, fpc, wc, nc, *, qmap, cmap):
     """Packed-corpus :func:`icws_estimate_fields`: fpc ``[C, P, me]`` i32
@@ -323,6 +350,7 @@ def icws_estimate_fields_packed(fq, vq, nq, fpc, wc, nc, *, qmap, cmap):
     return jnp.where((nqg == 0) | (ncg == 0), 0.0, est)
 
 
+@_obs.instrumented("linear_estimate_fields_packed")
 @functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
 def linear_estimate_fields_packed(tq, wc, *, qmap, cmap):
     """Packed-corpus :func:`linear_estimate_fields`: wc ``[C, P, R,
@@ -340,6 +368,7 @@ def linear_estimate_fields_packed(tq, wc, *, qmap, cmap):
     return jnp.median(dots, axis=1)
 
 
+@_obs.instrumented("sample_estimate_fields_packed")
 @functools.partial(jax.jit, static_argnames=("qmap", "cmap"))
 def sample_estimate_fields_packed(kq, vq, tq, kc, wc, tc, *, qmap, cmap):
     """Packed-corpus :func:`sample_estimate_fields`: kc ``[C, P, Se]`` i32
@@ -393,6 +422,7 @@ def _many_sharded_fn(mesh, axis: str):
         out_specs=PSpec(None, axis))
 
 
+@_obs.instrumented("icws_estimate_many_sharded")
 def icws_estimate_many_sharded(fq, vq, nq, fpb, vb, nb, *, mesh, axis="data"):
     """Sharded :func:`icws_estimate_many_stacked`: Q queries vs an F=1 store
     whose corpus rows are split over mesh axis ``axis``.
@@ -424,6 +454,7 @@ def _fields_sharded_fn(mesh, axis: str, qmap, cmap):
         out_specs=PSpec(None, None, axis))
 
 
+@_obs.instrumented("icws_estimate_fields_sharded")
 def icws_estimate_fields_sharded(fq, vq, nq, fpc, vc, nc, *, qmap, cmap,
                                  mesh, axis="data"):
     """Sharded :func:`icws_estimate_fields`: the fused multi-field launch
@@ -454,6 +485,7 @@ def _linear_fields_sharded_fn(mesh, axis: str, qmap, cmap):
         out_specs=PSpec(None, None, axis))
 
 
+@_obs.instrumented("linear_estimate_fields_sharded")
 def linear_estimate_fields_sharded(tq, tc, *, qmap, cmap, mesh, axis="data"):
     """Sharded :func:`linear_estimate_fields`: per-shard launches over
     corpus rows split along mesh axis ``axis``, queries replicated.
@@ -484,6 +516,7 @@ def _sample_fields_sharded_fn(mesh, axis: str, qmap, cmap):
         out_specs=PSpec(None, None, axis))
 
 
+@_obs.instrumented("sample_estimate_fields_sharded")
 def sample_estimate_fields_sharded(kq, vq, tq, kc, vc, tc, *, qmap, cmap,
                                    mesh, axis="data"):
     """Sharded :func:`sample_estimate_fields`: the fused key-match launch
@@ -525,6 +558,7 @@ def _fields_packed_sharded_fn(mesh, axis: str, qmap, cmap):
         out_specs=PSpec(None, None, axis))
 
 
+@_obs.instrumented("icws_estimate_fields_packed_sharded")
 def icws_estimate_fields_packed_sharded(fq, vq, nq, fpc, wc, nc, *, qmap,
                                         cmap, mesh, axis="data"):
     """Sharded :func:`icws_estimate_fields_packed`; returns ``[G, Q, cap]``
@@ -550,6 +584,7 @@ def _linear_fields_packed_sharded_fn(mesh, axis: str, qmap, cmap):
         out_specs=PSpec(None, None, axis))
 
 
+@_obs.instrumented("linear_estimate_fields_packed_sharded")
 def linear_estimate_fields_packed_sharded(tq, wc, *, qmap, cmap, mesh,
                                           axis="data"):
     """Sharded :func:`linear_estimate_fields_packed`; zero words decode to
@@ -575,6 +610,7 @@ def _sample_fields_packed_sharded_fn(mesh, axis: str, qmap, cmap):
         out_specs=PSpec(None, None, axis))
 
 
+@_obs.instrumented("sample_estimate_fields_packed_sharded")
 def sample_estimate_fields_packed_sharded(kq, vq, tq, kc, wc, tc, *, qmap,
                                           cmap, mesh, axis="data"):
     """Sharded :func:`sample_estimate_fields_packed`; pad rows carry
@@ -589,6 +625,7 @@ def sample_estimate_fields_packed_sharded(kq, vq, tq, kc, wc, tc, *, qmap,
     return f(kq, vq, tq, kc, wc, tc)[:, :, :cap]
 
 
+@_obs.instrumented("sharded_top_k")
 def sharded_top_k(score, k: int, *, mesh, axis="data"):
     """Per-shard top-k over the last dim of ``score``, merged globally.
 

@@ -16,27 +16,64 @@ ingested.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.data import DatasetSearchIndex, SearchResult
+from repro.obs.metrics import Histogram
 
 
-@dataclasses.dataclass
 class ServiceStats:
-    tables_ingested: int = 0
-    rows_ingested: int = 0
-    queries_served: int = 0
-    total_query_ms: float = 0.0
-    last_query_ms: float = 0.0
-    # batched endpoint accounting (micro-batches, not individual queries)
-    batches_served: int = 0
-    batch_queries_served: int = 0
-    total_batch_ms: float = 0.0
-    last_batch_ms: float = 0.0
+    """Request accounting: a thin compatibility view over latency histograms.
+
+    Historically this was a dataclass of running sums; the fields the old
+    mean-only API exposed (``queries_served``, ``total_query_ms``,
+    ``last_query_ms``, ...) are now properties derived from three private
+    :class:`repro.obs.metrics.Histogram` instances, which additionally give
+    the service exact-window p50/p95/p99 for :meth:`SketchSearchService.
+    describe`.  The histograms are owned by this object (not the global
+    obs registry), so they always record -- two services in one process
+    never share latency state -- and they work with observability disabled.
+    """
+
+    def __init__(self) -> None:
+        self.tables_ingested = 0
+        self.rows_ingested = 0
+        # batched-endpoint query count (micro-batches land in batch_hist)
+        self.batch_queries_served = 0
+        self.query_hist = Histogram("serve.query_seconds")
+        self.batch_hist = Histogram("serve.batch_seconds")
+        # per-query latency through the batched endpoint: one observation
+        # per micro-batch (batch wall time / batch size)
+        self.batched_query_hist = Histogram("serve.batched_query_seconds")
+
+    # -- compatibility view (the pre-histogram field set) -------------------
+    @property
+    def queries_served(self) -> int:
+        return self.query_hist.count
+
+    @property
+    def total_query_ms(self) -> float:
+        return self.query_hist.sum * 1e3
+
+    @property
+    def last_query_ms(self) -> float:
+        return self.query_hist.last * 1e3
+
+    @property
+    def batches_served(self) -> int:
+        return self.batch_hist.count
+
+    @property
+    def total_batch_ms(self) -> float:
+        return self.batch_hist.sum * 1e3
+
+    @property
+    def last_batch_ms(self) -> float:
+        return self.batch_hist.last * 1e3
 
     @property
     def mean_query_ms(self) -> float:
@@ -58,7 +95,8 @@ class SketchSearchService:
 
     def __init__(self, m: int = 256, seed: int = 0,
                  backend: str = "device", keep_host_oracle: bool = True,
-                 mesh=None, family: str = "icws", packed: bool = False):
+                 mesh=None, family: str = "icws", packed: bool = False,
+                 audit_every: int = 0):
         # family picks the device serving sketch (any repro.data
         # .FAMILY_NAMES entry -- icws/dmh/cs/jl/ts/ps today), sized
         # storage-matched from m (see repro.data.families) -- the same
@@ -71,6 +109,13 @@ class SketchSearchService:
                                         mesh=mesh, family=family,
                                         packed=packed)
         self.stats = ServiceStats()
+        # per-tenant latency histograms (private, always recording)
+        self._tenant_hists: Dict[str, Histogram] = {}
+        # estimator-quality audit: with observability enabled and
+        # audit_every=N > 0, every Nth single search re-scores its top hit
+        # against the host oracle and feeds quality.ppm_error (ICWS device
+        # indexes that kept the oracle only; a no-op otherwise)
+        self.audit_every = int(audit_every)
 
     # -- ingestion ----------------------------------------------------------
     def ingest(self, name: str, keys: np.ndarray, values: np.ndarray, *,
@@ -84,9 +129,13 @@ class SketchSearchService:
             raise ValueError(f"table {name!r} already ingested"
                              + (f" for tenant {tenant!r}"
                                 if tenant is not None else ""))
-        self.index.add_table(name, keys, values, tenant=tenant)
+        with _obs.span("serve.ingest", table=name, tenant=tenant):
+            self.index.add_table(name, keys, values, tenant=tenant)
         self.stats.tables_ingested += 1
         self.stats.rows_ingested += len(keys)
+        if _obs.enabled():
+            _obs.counter("serve.tables_ingested_total").inc()
+            _obs.counter("serve.rows_ingested_total").inc(len(keys))
 
     def _tenant_tables_or_empty(self, tenant: Optional[str]):
         """The tenant's tables for the duplicate-name check -- empty for a
@@ -116,9 +165,16 @@ class SketchSearchService:
                                  + (f" for tenant {tenant!r}"
                                     if tenant is not None else ""))
             seen.add(name)
-        self.index.add_tables_sharded(tables, shards=shards, tenant=tenant)
+        with _obs.span("serve.ingest_sharded", shards=shards, tenant=tenant,
+                       tables=len(tables)):
+            self.index.add_tables_sharded(tables, shards=shards,
+                                          tenant=tenant)
         self.stats.tables_ingested += len(tables)
-        self.stats.rows_ingested += sum(len(k) for _, k, _ in tables)
+        rows = sum(len(k) for _, k, _ in tables)
+        self.stats.rows_ingested += rows
+        if _obs.enabled():
+            _obs.counter("serve.tables_ingested_total").inc(len(tables))
+            _obs.counter("serve.rows_ingested_total").inc(rows)
 
     # -- queries ------------------------------------------------------------
     def search(self, keys: np.ndarray, values: np.ndarray, *,
@@ -129,14 +185,66 @@ class SketchSearchService:
         the shared arena, bitwise equal to a dedicated single-tenant index
         over the same tables."""
         t0 = time.perf_counter()
-        results = self.index.query(keys, values, top_k=top_k,
-                                   min_join=min_join, backend=backend,
-                                   tenant=tenant)
-        ms = (time.perf_counter() - t0) * 1e3
-        self.stats.queries_served += 1
-        self.stats.last_query_ms = ms
-        self.stats.total_query_ms += ms
+        with _obs.span("serve.search", tenant=tenant,
+                       family=self.index.family.name,
+                       backend=backend or self.index.backend):
+            results = self.index.query(keys, values, top_k=top_k,
+                                       min_join=min_join, backend=backend,
+                                       tenant=tenant)
+        dt = time.perf_counter() - t0
+        self.stats.query_hist.record(dt)
+        self._record_request("search", dt, tenant)
+        if self.audit_every:
+            self._maybe_audit(keys, values, results, top_k, min_join,
+                              backend, tenant)
         return results
+
+    # -- telemetry helpers --------------------------------------------------
+    def _record_request(self, endpoint: str, dt: float,
+                        tenant: Optional[str]) -> None:
+        if tenant is not None:
+            hist = self._tenant_hists.get(str(tenant))
+            if hist is None:
+                hist = Histogram("serve.tenant_seconds",
+                                 {"tenant": str(tenant)})
+                self._tenant_hists[str(tenant)] = hist
+            hist.record(dt)
+        if not _obs.enabled():
+            return
+        _obs.histogram("serve.request_seconds", endpoint=endpoint).record(dt)
+        if endpoint == "search":
+            _obs.counter("serve.queries_total").inc()
+        if tenant is not None:
+            _obs.histogram("serve.tenant_request_seconds",
+                           tenant=str(tenant)).record(dt)
+
+    def _maybe_audit(self, keys, values, results, top_k, min_join,
+                     backend, tenant) -> None:
+        """Every ``audit_every``-th search, re-score against the host oracle
+        and feed the rolling quality.ppm_error gauge (see repro.obs.quality).
+
+        Only meaningful for ICWS device indexes that kept the oracle at
+        ingest; anything else (other families, host backend, empty results)
+        silently skips -- auditability is a property of the index, and the
+        quality channel must never change what the endpoint returns.
+        """
+        if not _obs.enabled() or not results:
+            return
+        if (backend or self.index.backend) != "device":
+            return
+        if self.index.family.name != "icws" or not self.index.keep_host_oracle:
+            return
+        if self.stats.queries_served % self.audit_every != 0:
+            return
+        ref = self.index.query(keys, values, top_k=top_k, min_join=min_join,
+                               backend="host", tenant=tenant)
+        ref_by_name = {r.name: r for r in ref}
+        for r in results:
+            mate = ref_by_name.get(r.name)
+            if mate is None or mate.join_size == 0:
+                continue
+            _obs.record_sample(self.index.family.name, r.join_size,
+                               mate.join_size)
 
     _EMPTY_QUERY = (np.zeros(0, np.int64), np.zeros(0, np.float64))
 
@@ -168,15 +276,23 @@ class SketchSearchService:
                 padded = chunk + [self._EMPTY_QUERY] * (micro_batch - len(chunk))
             else:
                 padded = chunk
-            out = self.index.query_batch(padded, top_k=top_k,
-                                         min_join=min_join, backend=backend,
-                                         tenant=tenant)
+            with _obs.span("serve.search_batch", tenant=tenant,
+                           family=self.index.family.name,
+                           batch=len(chunk)):
+                out = self.index.query_batch(padded, top_k=top_k,
+                                             min_join=min_join,
+                                             backend=backend, tenant=tenant)
             results.extend(out[:len(chunk)])
-            ms = (time.perf_counter() - t0) * 1e3
-            self.stats.batches_served += 1
+            dt = time.perf_counter() - t0
+            self.stats.batch_hist.record(dt)
+            self.stats.batched_query_hist.record(dt / len(chunk))
             self.stats.batch_queries_served += len(chunk)
-            self.stats.last_batch_ms = ms
-            self.stats.total_batch_ms += ms
+            self._record_request("search_batch", dt, tenant)
+            if _obs.enabled():
+                _obs.counter("serve.batches_total").inc()
+                _obs.counter("serve.batch_queries_total").inc(len(chunk))
+                _obs.histogram("serve.batched_query_seconds").record(
+                    dt / len(chunk))
         return results
 
     def describe(self, tenant: Optional[str] = None) -> Dict[str, object]:
@@ -194,38 +310,56 @@ class SketchSearchService:
                 rows, ranges = float(len(tables)), 1.0
                 storage = float(len(tables) * 3
                                 * self.index.family.storage_doubles_per_row())
-            return {
+            report = {
                 "tenant": tenant,
                 "family": self.index.family.name,
                 "backend": self.index.backend,
-                "tables": float(len(tables)),
+                "tables": len(tables),
                 "corpus_rows": rows,
                 "row_ranges": ranges,
                 "storage_doubles": storage,
             }
+            hist = self._tenant_hists.get(str(tenant))
+            if hist is not None and hist.count:
+                report.update(_latency_fields("request_ms", hist))
+            return report
         # a host-only index (backend="host") has no device store, but its
         # corpus is just as real -- one row per ingested table per field.
         # Report the table-derived row count rather than a misleading 0;
         # host corpora are exact-size, so capacity == rows there.
-        rows = float(store.size if store is not None
-                     else len(self.index.tables))
-        cap = float(store.capacity if store is not None
-                    else len(self.index.tables))
-        return {
+        rows = int(store.size if store is not None
+                   else len(self.index.tables))
+        cap = int(store.capacity if store is not None
+                  else len(self.index.tables))
+        report = {
             "family": self.index.family.name,
             "backend": self.index.backend,
             "packed": bool(store.packed) if store is not None else False,
             "bytes_per_row": float(store.bytes_per_row()
                                    if store is not None else 0),
-            "tables": float(len(self.index.tables)),
-            "tenants": float(len(self.index.tenants())),
+            "tables": len(self.index.tables),
+            "tenants": len(self.index.tenants()),
             "storage_doubles": self.index.storage_doubles(),
             "corpus_rows": rows,
             "corpus_capacity": cap,
-            "queries_served": float(self.stats.queries_served),
+            "queries_served": self.stats.queries_served,
             "mean_query_ms": self.stats.mean_query_ms,
-            "batches_served": float(self.stats.batches_served),
-            "batch_queries_served": float(self.stats.batch_queries_served),
+            "batches_served": self.stats.batches_served,
+            "batch_queries_served": self.stats.batch_queries_served,
             "mean_batch_ms": self.stats.mean_batch_ms,
             "mean_batched_query_ms": self.stats.mean_batched_query_ms,
         }
+        report.update(_latency_fields("query_ms", self.stats.query_hist))
+        report.update(_latency_fields("batch_ms", self.stats.batch_hist))
+        report.update(_latency_fields("batched_query_ms",
+                                      self.stats.batched_query_hist))
+        return report
+
+
+def _latency_fields(prefix: str, hist: Histogram) -> Dict[str, float]:
+    """p50/p95/p99 (ms) of one latency histogram, keyed ``<prefix>_p50``..."""
+    return {
+        prefix + "_p50": hist.quantile(0.50) * 1e3,
+        prefix + "_p95": hist.quantile(0.95) * 1e3,
+        prefix + "_p99": hist.quantile(0.99) * 1e3,
+    }

@@ -22,7 +22,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(__file__)),
 
 from repro.analysis import Config, load_baseline, run  # noqa: E402
 from repro.analysis.config import BaselineError, parse_baseline  # noqa: E402
-from repro.analysis.engine import STREAMS_MD  # noqa: E402
+from repro.analysis.engine import METRICS_MD, STREAMS_MD  # noqa: E402
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -423,6 +423,103 @@ def make_family(name, *, storage, seed=0):
     assert run_rules(root, ["FC"]).ok
 
 
+def test_ob001_unwrapped_and_mislabeled_launches(tmp_path):
+    root = build_repo(tmp_path, {
+        "src/repro/kernels/ops.py": """
+            from repro import obs as _obs
+
+
+            @_obs.instrumented("icws_sketch")
+            def icws_sketch(x):
+                return x
+
+
+            def icws_estimate(x):
+                return x
+
+
+            @_obs.instrumented("jl_sketch")
+            def cs_sketch(x):
+                return x
+
+
+            def _interpret():                  # private helpers: out of scope
+                return True
+        """,
+    })
+    result = run_rules(root, ["OB001"])
+    assert [f.rule for f in result.findings] == ["OB001", "OB001"]
+    by_msg = sorted(f.message for f in result.findings)
+    assert "'icws_estimate'" in by_msg[1] and "not wrapped" in by_msg[1]
+    assert "'jl_sketch'" in by_msg[0] and "'cs_sketch'" in by_msg[0]
+    # alternate decorator spellings all count as coverage
+    root2 = build_repo(tmp_path / "ok", {
+        "src/repro/kernels/ops.py": """
+            from repro.obs import instrumented
+            from repro import obs
+
+
+            @instrumented("icws_sketch")
+            def icws_sketch(x):
+                return x
+
+
+            @obs.instrumented("jl_sketch")
+            def jl_sketch(x):
+                return x
+        """,
+    })
+    assert run_rules(root2, ["OB001"]).ok
+
+
+def test_ob_rules_noop_on_fixture_trees(tmp_path):
+    root = build_repo(tmp_path, {
+        "src/repro/kernels/common.py": DEVICE_COMMON,
+        "src/repro/core/u32.py": HOST_U32,
+    })
+    assert run_rules(root, ["OB"]).ok
+
+
+def test_ob002_metrics_md_missing_stale_and_regenerated(tmp_path):
+    root = build_repo(tmp_path, {
+        "src/repro/obs/registry.py": """
+            SPECS = (
+                {"name": "ops.launches_total", "type": "counter",
+                 "labels": ("op", "family"), "unit": "calls",
+                 "help": "kernel launches"},
+                {"name": "store.rows", "type": "gauge", "labels": ("family",),
+                 "unit": "rows", "help": "resident rows"},
+            )
+        """,
+    })
+    f = one_finding(run_rules(root, ["OB002"]), "OB002")
+    assert f.path == METRICS_MD and "missing" in f.message
+
+    result = run_rules(root, ["OB"])
+    assert "`ops.launches_total`" in result.metrics_md
+    assert "op, family" in result.metrics_md
+    (root / METRICS_MD).write_text(result.metrics_md)
+    assert run_rules(root, ["OB"]).ok          # regenerated => clean sweep
+    (root / METRICS_MD).write_text("# stale\n")
+    f = one_finding(run_rules(root, ["OB002"]), "OB002")
+    assert "stale" in f.message
+
+
+def test_ob002_rejects_non_literal_specs(tmp_path):
+    root = build_repo(tmp_path, {
+        "src/repro/obs/registry.py": """
+            def _spec(n):
+                return {"name": n}
+
+
+            SPECS = tuple(_spec(n) for n in ("a.b",))
+        """,
+    })
+    f = one_finding(run_rules(root, ["OB002"]), "OB002")
+    assert f.path == "src/repro/obs/registry.py"
+    assert "pure-literal" in f.message
+
+
 def test_baseline_covers_and_bl001_stale(tmp_path):
     root = build_repo(tmp_path, {
         "src/repro/kernels/common.py": DEVICE_COMMON + "LONELY_STREAM = 8\n",
@@ -495,6 +592,10 @@ def test_repo_self_check_is_clean_and_fast():
     # the stream registry proved non-trivial: all five families present
     assert "ICWS_R1_STREAM" in result.streams_md
     assert "SAMPLE_HASH_STREAM" in result.streams_md
+    # the metric registry renders and covers the core namespaces
+    for needle in ("ops.launches_total", "serve.request_seconds",
+                   "quality.ppm_error"):
+        assert needle in result.metrics_md, needle
     # budget report covers every kernel family's pallas_call sites
     kernels = {e["kernel"] for e in result.budget_report}
     assert {"icws_sketch_pallas", "estimate_fields_pallas",
